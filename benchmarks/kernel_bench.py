@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: fused nitro_matmul / integer_sgd vs the unfused
+reference pipeline.
+
+Wall-clock here is the CPU oracle path (Pallas interpret mode is a Python
+interpreter, not a perf signal); the TPU-relevant derived metric is the
+HBM-traffic ratio of fused vs unfused, which is architectural:
+
+    unfused: write z(int32) + read z + write z* + read z* + write act
+    fused  : write act only                     (plus the same A/W reads)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.activations import nitro_relu
+from repro.core.numerics import int_matmul
+from repro.core.scaling import linear_scale_factor, scale_forward
+from repro.kernels.integer_sgd.ref import integer_sgd_ref
+from repro.kernels.nitro_matmul.ref import nitro_matmul_ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for m, k, n in ((256, 512, 256), (512, 1024, 512)):
+        x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int32)
+        sf = linear_scale_factor(k)
+
+        @jax.jit
+        def unfused(x, w):
+            z = int_matmul(x, w)
+            z_star = scale_forward(z, sf)
+            return nitro_relu(z_star)
+
+        @jax.jit
+        def fused(x, w):
+            return nitro_matmul_ref(x, w, sf=sf)
+
+        us_unfused = time_fn(unfused, x, w)
+        us_fused = time_fn(fused, x, w)
+        # HBM bytes for the z-tensor round-trips (int32) vs fused epilogue
+        unfused_z_bytes = m * n * 4 * 4 + m * n * 4  # z w/r, z* w/r, act w
+        fused_z_bytes = m * n * 4
+        emit(f"kernel/nitro_matmul/{m}x{k}x{n}/unfused", us_unfused,
+             f"z_hbm_bytes={unfused_z_bytes}")
+        emit(f"kernel/nitro_matmul/{m}x{k}x{n}/fused", us_fused,
+             f"z_hbm_bytes={fused_z_bytes};traffic_ratio="
+             f"{unfused_z_bytes / fused_z_bytes:.1f}x")
+
+    # IntegerSGD fused update
+    w_t = jnp.asarray(rng.integers(-30000, 30000, (1 << 20,)), jnp.int32)
+    g_t = jnp.asarray(rng.integers(-(1 << 22), 1 << 22, (1 << 20,)), jnp.int32)
+    upd = jax.jit(lambda w, g: integer_sgd_ref(w, g, 512, 3000))
+    us = time_fn(upd, w_t, g_t)
+    emit("kernel/integer_sgd/1M-params", us,
+         "fused_streams=3;unfused_streams=5;traffic_ratio=1.67x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Roofline table collector: reads the dry-run JSONs and prints the
+per-cell three-term roofline summary (EXPERIMENTS.md §Roofline source)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def run():
+    files = sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, "no dry-run results found (run dryrun --sweep)")
+        return
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        tag = f"roofline/{r['arch']}/{r['shape']}" + ("/pod2" if r.get("multi_pod") else "")
+        if r.get("skipped"):
+            emit(tag, 0.0, f"SKIP:{r['reason'][:60]}")
+            continue
+        t = r["roofline"]
+        emit(
+            tag,
+            t["roofline_bound_s"] * 1e6,
+            f"dominant={t['dominant']};compute_s={t['compute_s']:.3f};"
+            f"memory_s={t['memory_s']:.3f};collective_s={t['collective_s']:.3f};"
+            f"model/hlo={t['model_over_hlo_flops']:.3f};"
+            f"roofline_frac={t['roofline_fraction']:.4f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Table 8 (Appendix E.1): learning-rate γ_inv sweep.
+
+Validates the paper's stability window: γ_inv too small → divergence
+(unstable), γ_inv = 512 optimal, γ_inv too large → updates truncate to
+zero (no learning)."""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.configs import get_paper_config
+from repro.core import les
+from repro.data import synthetic
+
+
+def run(steps: int = 150, batch: int = 64):
+    ds = synthetic.make_image_dataset("tiles32", n_train=1024, n_test=256)
+    base = get_paper_config("vgg8b", scale=0.125)
+    for gamma in (128, 512, 2048, 16384):
+        cfg = replace(base, gamma_inv=gamma, eta_fw=0, eta_lr=0)
+        state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(functools.partial(les.train_step, cfg=cfg))
+        correct = total = 0
+        diverged = False
+        k = 0
+        while k < steps:
+            for x, y in synthetic.batches(ds.x_train, ds.y_train, batch, seed=k):
+                if k >= steps:
+                    break
+                state, m = step(state, x=jnp.asarray(x), labels=jnp.asarray(y),
+                                key=jax.random.PRNGKey(k))
+                if k >= steps - 16:  # accuracy over the last epoch's steps
+                    correct += int(m.correct)
+                    total += batch
+                k += 1
+            mx = max(int(jnp.abs(p).max())
+                     for p in jax.tree_util.tree_leaves(state.params))
+            if mx > 2**20:
+                diverged = True
+                break
+        status = "unstable" if diverged else f"train_acc={correct/max(total,1):.4f}"
+        emit(f"table8/gamma_inv={gamma}", 0.0, status)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Beyond-paper: the NITRO-D learning algorithm (LES local-loss groups)
+applied to a transformer LM, next to standard BP — the technique hook the
+framework exposes for every assigned architecture (``les_groups``).
+
+Gradients are confined per layer-group (stop_gradient boundaries), exactly
+like the paper's integer local-loss blocks: no cross-group backward
+dependency → group backwards overlap downstream forwards at scale.
+
+    PYTHONPATH=src python examples/les_transformer.py [--steps 60]
+"""
+
+import argparse
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data.loader import synthetic_lm_generator
+from repro.launch.mesh import make_test_mesh
+from repro.parallel.sharding import train_rules
+from repro.train import trainer
+
+
+def run(cfg, label, steps, batch, seq):
+    mesh = make_test_mesh(1, 1)
+    rules = trainer.resolved_rules(cfg, train_rules(False))
+    gen = synthetic_lm_generator(cfg.vocab_size, seq, batch)
+    step_fn = trainer.build_train_step(
+        cfg, mesh, rules, shapes={"tokens": (batch, seq), "labels": (batch, seq)},
+        donate=False,
+    )
+    state = trainer.init_state(jax.random.PRNGKey(0), cfg)
+    first = last = None
+    for it in range(steps):
+        b = gen(it)
+        state, m = step_fn(state, {k: jnp.asarray(v) for k, v in b.items()})
+        if first is None:
+            first = float(m["ce"])
+        last = float(m["ce"])
+        if it % 20 == 0:
+            print(f"  [{label}] step {it:3d} ce={last:.4f}")
+    print(f"  [{label}] ce {first:.4f} → {last:.4f}")
+    return first, last
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    base = replace(get_smoke_config("llama3.2-1b"), num_layers=4)
+
+    print("BP baseline (end-to-end backprop):")
+    run(base, "bp", args.steps, args.batch, args.seq)
+
+    print("LES mode (2 local-loss groups, gradients confined per group):")
+    les_cfg = replace(base, les_groups=2)
+    _, les_last = run(les_cfg, "les", args.steps, args.batch, args.seq)
+
+    print("Both modes train; LES removes the cross-group backward chain "
+          "(see EXPERIMENTS.md §Perf for the overlap effect at scale).")
+
+
+if __name__ == "__main__":
+    main()

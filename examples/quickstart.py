@@ -1,0 +1,76 @@
+"""Quickstart: native integer-only training of a small CNN (NITRO-D).
+
+Runs in ~1 minute on CPU.  Demonstrates the paper's core claims live:
+  1. the entire train step is integer-only (asserted from the jaxpr);
+  2. accuracy climbs well above chance with no float anywhere;
+  3. trained weights stay within int16 (paper §E.3).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import les, model
+from repro.core.blocks import BlockSpec
+from repro.core.model import NitroConfig
+from repro.data import synthetic
+
+
+def main():
+    ds = synthetic.make_image_dataset("tiles32", n_train=2048, n_test=512)
+    cfg = NitroConfig(
+        blocks=(
+            BlockSpec("conv", 32, pool=True, d_lr=512),
+            BlockSpec("conv", 64, pool=True, d_lr=512),
+            BlockSpec("linear", 128),
+        ),
+        input_shape=ds.input_shape,
+        num_classes=ds.num_classes,
+        gamma_inv=512, eta_fw=25000, eta_lr=5000,
+        name="quickstart-cnn",
+    )
+    state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+    print(f"model: {model.count_params(state.params):,} integer parameters")
+
+    step = jax.jit(functools.partial(les.train_step, cfg=cfg))
+
+    # 1. prove the step is integer-only
+    jaxpr = jax.make_jaxpr(functools.partial(les.train_step, cfg=cfg))(
+        state, x=jnp.asarray(ds.x_train[:8]), labels=jnp.asarray(ds.y_train[:8]),
+        key=jax.random.PRNGKey(0),
+    )
+    n_float = sum(
+        1 for eqn in jaxpr.jaxpr.eqns
+        for v in list(eqn.invars) + list(eqn.outvars)
+        if hasattr(getattr(v, "aval", None), "dtype")
+        and "float" in str(v.aval.dtype)
+    )
+    print(f"float values in the compiled train step: {n_float} (expected 0)")
+    assert n_float == 0
+
+    # 2. train
+    k = 0
+    for epoch in range(6):
+        correct = total = 0
+        for x, y in synthetic.batches(ds.x_train, ds.y_train, 64, seed=epoch):
+            state, m = step(state, x=jnp.asarray(x), labels=jnp.asarray(y),
+                            key=jax.random.PRNGKey(k)); k += 1
+            correct += int(m.correct); total += 64
+        test_c = 0
+        for i in range(0, 512, 64):
+            test_c += int(les.eval_step(
+                state, cfg, jnp.asarray(ds.x_test[i:i+64]),
+                jnp.asarray(ds.y_test[i:i+64])))
+        print(f"epoch {epoch}: train {correct/total:.3f}  test {test_c/512:.3f}")
+
+    # 3. weight range (paper §E.3: int16 suffices)
+    mx = max(int(jnp.abs(p).max()) for p in jax.tree_util.tree_leaves(state.params))
+    print(f"max |weight| after training: {mx}  (int16 bound: 32767)")
+    assert mx < 2**15
+
+
+if __name__ == "__main__":
+    main()

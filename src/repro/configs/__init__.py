@@ -1,0 +1,48 @@
+"""Architecture registry: ``get_config(name)`` / ``get_smoke_config(name)``.
+
+Every assigned architecture is a selectable config (``--arch <id>``); each
+module exposes ``full_config()`` (the exact published numbers) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCHS = {
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "h2o-danube-1.8b": "repro.configs.h2o_danube_1_8b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+}
+
+# paper's own architectures (integer-only NITRO-D models)
+PAPER_ARCHS = ("mlp1", "mlp2", "mlp3", "mlp4", "vgg8b", "vgg11b")
+
+
+def get_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name]).full_config()
+
+
+def get_smoke_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return importlib.import_module(ARCHS[name]).smoke_config()
+
+
+def get_paper_config(name: str, **kw):
+    from repro.configs import paper
+
+    return paper.get(name, **kw)
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

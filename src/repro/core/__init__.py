@@ -1,0 +1,48 @@
+"""NITRO-D core: native integer-only training of deep CNNs/MLPs.
+
+The paper's primary contribution, implemented as composable JAX modules:
+
+  numerics       integer arithmetic primitives (floor-div, int matmul, isqrt)
+  scaling        NITRO Scaling Layer (SF = 2⁸·M / 2⁸·K²·C, STE backward)
+  activations    NITRO-ReLU (4-segment integer LeakyReLU, mean-centred)
+  layers         IntegerLinear / IntegerConv2D (+pool/dropout) with
+                 hand-derived integer backward passes
+  init           integer Kaiming initialisation
+  preprocessing  MAD-based integer input normalisation, one-hot(32) targets
+  losses         integer RSS loss
+  optimizer      IntegerSGD + NITRO Amplification Factor
+  blocks         integer local-loss blocks (forward + learning layers)
+  model          NitroConfig / parameter containers
+  les            the NITRO-D learning algorithm (train/eval steps)
+  fp_baselines   FP LES and FP BP reference implementations
+"""
+
+from repro.core.activations import nitro_relu, nitro_relu_backward, mu_int8
+from repro.core.blocks import BlockSpec
+from repro.core.les import (
+    TrainState,
+    create_train_state,
+    eval_step,
+    reduce_lr_on_plateau,
+    train_step,
+)
+from repro.core.model import NitroConfig, count_params, init_params, predict
+from repro.core.optimizer import IntegerSGDState, amplification_factor
+
+__all__ = [
+    "BlockSpec",
+    "IntegerSGDState",
+    "NitroConfig",
+    "TrainState",
+    "amplification_factor",
+    "count_params",
+    "create_train_state",
+    "eval_step",
+    "init_params",
+    "mu_int8",
+    "nitro_relu",
+    "nitro_relu_backward",
+    "predict",
+    "reduce_lr_on_plateau",
+    "train_step",
+]

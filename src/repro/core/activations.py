@@ -1,0 +1,68 @@
+"""NITRO-ReLU activation (paper §3.2).
+
+An integer LeakyReLU over four segments::
+
+    x < -127      : ⌊-127/α_inv⌋            - μ_int8     (saturated negative)
+    -127 ≤ x < 0  : ⌊x/α_inv⌋               - μ_int8     (leaky slope 1/α_inv)
+    0 ≤ x ≤ 127   : x                       - μ_int8     (identity)
+    x > 127       : 127                     - μ_int8     (saturated positive)
+
+with ``α_inv = ⌊1/α⌋ ∈ ℕ`` and ``μ_int8`` the (integer) mean of the four
+segment means — subtracting it keeps the activations zero-centred, the
+paper's integer-only stand-in for BatchNorm.
+
+Backward: piecewise-linear derivative, kept integer — the incoming gradient
+is floor-divided by ``α_inv`` on the leaky segment, passed through on the
+identity segment, and zeroed on both saturated segments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+from repro.core.numerics import ACT_MAX, ACT_MIN
+
+DEFAULT_ALPHA_INV = 10  # α = 0.1 → α_inv = ⌊1/α⌋ = 10
+
+
+def segment_means(alpha_inv: int) -> tuple[int, int, int, int]:
+    """μ^i_int8 for segments i = 0..3 (paper §3.2), pure Python ints."""
+    m0 = -127 // alpha_inv          # x < -127
+    m1 = -127 // (2 * alpha_inv)    # -127 ≤ x ≤ 0
+    m2 = 63                         # 0 < x ≤ 127
+    m3 = 127                        # x > 127
+    return m0, m1, m2, m3
+
+
+def mu_int8(alpha_inv: int = DEFAULT_ALPHA_INV) -> int:
+    """μ_int8 = integer mean of the four segment means."""
+    m = segment_means(alpha_inv)
+    return sum(m) // 4
+
+
+def nitro_relu(z_star: jax.Array, alpha_inv: int = DEFAULT_ALPHA_INV) -> jax.Array:
+    """Forward NITRO-ReLU: integer in, integer out in [-127-μ, 127-μ]."""
+    numerics.assert_int(z_star, "nitro_relu input")
+    mu = mu_int8(alpha_inv)
+    neg = numerics.floor_div(jnp.maximum(z_star, ACT_MIN), alpha_inv)
+    pos = jnp.minimum(z_star, ACT_MAX)
+    return jnp.where(z_star < 0, neg, pos) - mu
+
+
+def nitro_relu_backward(
+    z_star: jax.Array, grad_out: jax.Array, alpha_inv: int = DEFAULT_ALPHA_INV
+) -> jax.Array:
+    """Integer derivative of NITRO-ReLU w.r.t. its input.
+
+    Segment derivatives: 0 (saturated) / 1/α_inv (leaky) / 1 (identity) /
+    0 (saturated).  The 1/α_inv multiply is floor division, matching how the
+    forward realises the slope.
+    """
+    numerics.assert_int(z_star, "nitro_relu_backward z")
+    numerics.assert_int(grad_out, "nitro_relu_backward grad")
+    leaky = numerics.floor_div(grad_out, alpha_inv)
+    grad_in = jnp.where(z_star < 0, leaky, grad_out)
+    saturated = (z_star < ACT_MIN) | (z_star > ACT_MAX)
+    return jnp.where(saturated, jnp.zeros_like(grad_in), grad_in)

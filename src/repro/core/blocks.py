@@ -1,0 +1,197 @@
+"""Integer local-loss blocks — the core NITRO-D architectural unit (§3.2).
+
+Each block owns
+
+  *forward layers*  : IntegerConv2D/IntegerLinear → NITRO Scaling →
+                      NITRO-ReLU → [MaxPool2D] → [IntegerDropout]
+  *learning layers* : [adaptive int avg-pool to d_lr] → flatten →
+                      IntegerLinear(→ G) → NITRO Scaling   (produces ŷ_l)
+
+During the backward pass gradients are *confined to the block*: the local
+RSS gradient ∇L_l flows through the learning layers (updating them with
+γ_inv^lr) and emerges as δ_l^fw = ∇L_l·W^{il,T} at the block output, then
+flows through the forward layers (updating them with γ_inv^fw =
+γ_inv^lr·AF).  Nothing crosses block boundaries — this is what bounds
+integer bit-growth and makes blocks independently (= in parallel) trainable.
+
+Every NITRO Scaling Layer is paired with its producing linear/conv layer:
+the learning-layer and output-layer linears are scaled too (without a
+ReLU), which is what keeps ŷ within the one-hot range and makes the
+paper's b_∇L = 6 bit-width bound hold.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import activations, layers, scaling
+from repro.core.losses import rss_grad
+from repro.core.numerics import INT_DTYPE
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    """Static description of one integer local-loss block."""
+
+    kind: str                 # 'conv' | 'linear'
+    out_features: int         # conv filters or linear width
+    pool: bool = False        # MaxPool2D(2,2) after the activation
+    dropout: float = 0.0      # p_c / p_l
+    d_lr: int = 4096          # learning-layer input feature budget (conv)
+    alpha_inv: int = activations.DEFAULT_ALPHA_INV
+    kernel_size: int = 3
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_block(
+    key: jax.Array,
+    spec: BlockSpec,
+    in_shape: tuple[int, ...],
+    num_classes: int,
+) -> tuple[dict, tuple[int, ...]]:
+    """Init one block's params; returns (params, output shape w/o batch)."""
+    k_fw, k_lr = jax.random.split(key)
+    if spec.kind == "conv":
+        h, w, c = in_shape
+        fw = layers.conv_init(k_fw, c, spec.out_features, spec.kernel_size)
+        oh, ow = (h // 2, w // 2) if spec.pool else (h, w)
+        out_shape = (oh, ow, spec.out_features)
+        # learning layers see the adaptive pool of the block output
+        dummy = jnp.zeros((1, oh, ow, spec.out_features), INT_DTYPE)
+        pooled, _ = layers.avgpool_to(dummy, spec.d_lr)
+        lr_in = pooled.shape[1] * pooled.shape[2] * pooled.shape[3]
+    elif spec.kind == "linear":
+        m = 1
+        for d in in_shape:  # linear blocks flatten whatever precedes them
+            m *= d
+        fw = layers.linear_init(k_fw, m, spec.out_features)
+        out_shape = (spec.out_features,)
+        lr_in = spec.out_features
+    else:
+        raise ValueError(f"unknown block kind {spec.kind!r}")
+    lr = layers.linear_init(k_lr, lr_in, num_classes)
+    return {"fw": fw, "lr": lr}, out_shape
+
+
+# ---------------------------------------------------------------------------
+# Forward layers
+# ---------------------------------------------------------------------------
+
+
+def forward_layers(
+    params: dict,
+    spec: BlockSpec,
+    x: jax.Array,
+    *,
+    dropout_key: jax.Array | None = None,
+    train: bool = True,
+) -> tuple[jax.Array, dict]:
+    """Run a block's forward layers; cache everything backward needs."""
+    cache: dict[str, Any] = {}
+    if spec.kind == "conv":
+        z, cache["conv"] = layers.conv_forward(params["fw"], x)
+        c_in = x.shape[-1]
+        sf = scaling.conv_scale_factor(spec.kernel_size, c_in)
+    else:
+        if x.ndim > 2:  # flatten conv activations entering a linear block
+            x, _ = layers.flatten_forward(x)
+        z, cache["linear"] = layers.linear_forward(params["fw"], x)
+        sf = scaling.linear_scale_factor(x.shape[-1])
+    z_star = scaling.scale_forward(z, sf)
+    cache["z_star"] = z_star
+    a = activations.nitro_relu(z_star, spec.alpha_inv)
+    if spec.pool:
+        a, cache["pool"] = layers.maxpool_forward(a)
+    if train and spec.dropout > 0.0:
+        a, cache["dropout"] = layers.dropout_forward(dropout_key, a, spec.dropout)
+    return a, cache
+
+
+def forward_layers_backward(
+    params: dict, spec: BlockSpec, cache: dict, delta_fw: jax.Array
+) -> dict:
+    """Backward through the forward layers from δ_l^fw; returns weight grads.
+
+    The input-gradient of the first layer is *not* propagated further —
+    LES confines gradients to the block.
+    """
+    g = delta_fw
+    if "dropout" in cache:
+        g = layers.dropout_backward(cache["dropout"], g)
+    if "pool" in cache:
+        g = layers.maxpool_backward(cache["pool"], g)
+    g = activations.nitro_relu_backward(cache["z_star"], g, spec.alpha_inv)
+    g = scaling.scale_backward(g)  # STE
+    if spec.kind == "conv":
+        _, grads = layers.conv_backward(params["fw"], cache["conv"], g)
+    else:
+        _, grads = layers.linear_backward(params["fw"], cache["linear"], g)
+    return grads
+
+
+# ---------------------------------------------------------------------------
+# Learning layers
+# ---------------------------------------------------------------------------
+
+
+def learning_layers(
+    params: dict, spec: BlockSpec, a: jax.Array
+) -> tuple[jax.Array, dict]:
+    """ŷ_l = scale(pool·flatten(a_l) @ W^il); returns local prediction."""
+    cache: dict[str, Any] = {}
+    if spec.kind == "conv":
+        a, cache["avgpool"] = layers.avgpool_to(a, spec.d_lr)
+        a, cache["flat_shape"] = layers.flatten_forward(a)
+    z, cache["linear"] = layers.linear_forward(params["lr"], a)
+    sf = scaling.linear_scale_factor(a.shape[-1])
+    y_hat = scaling.scale_forward(z, sf)
+    return y_hat, cache
+
+
+def learning_layers_backward(
+    params: dict, spec: BlockSpec, cache: dict, grad_loss: jax.Array
+) -> tuple[jax.Array, dict]:
+    """Backward from ∇L_l; returns (δ_l^fw at the block output, lr grads)."""
+    g = scaling.scale_backward(grad_loss)  # STE through the output scaling
+    g, grads = layers.linear_backward(params["lr"], cache["linear"], g)
+    if spec.kind == "conv":
+        g = layers.flatten_backward(cache["flat_shape"], g)
+        g = layers.avgpool_to_backward(cache["avgpool"], g)
+    return g, grads
+
+
+# ---------------------------------------------------------------------------
+# Output layers (final classifier — trained with the global RSS gradient)
+# ---------------------------------------------------------------------------
+
+
+def init_output(key: jax.Array, in_features: int, num_classes: int) -> dict:
+    return layers.linear_init(key, in_features, num_classes)
+
+
+def output_forward(params: dict, a: jax.Array) -> tuple[jax.Array, dict]:
+    cache: dict[str, Any] = {}
+    if a.ndim > 2:
+        a, cache["flat_shape"] = layers.flatten_forward(a)
+    z, cache["linear"] = layers.linear_forward(params, a)
+    sf = scaling.linear_scale_factor(a.shape[-1])
+    return scaling.scale_forward(z, sf), cache
+
+
+def output_backward(params: dict, cache: dict, grad_loss: jax.Array) -> dict:
+    g = scaling.scale_backward(grad_loss)
+    _, grads = layers.linear_backward(params, cache["linear"], g)
+    return grads
+
+
+def local_gradient(y_hat: jax.Array, y_onehot: jax.Array) -> jax.Array:
+    """∇L_l = ŷ_l − y (RSS)."""
+    return rss_grad(y_hat, y_onehot)

@@ -1,0 +1,203 @@
+"""Floating-point baselines the paper compares against (Tables 1–2):
+
+  * **FP LES**  — the same local-loss block structure in float32, local MSE
+    losses, SGD (Nøkland & Eidnes' algorithm restricted to the prediction
+    loss, as NITRO-D uses it);
+  * **FP BP**   — classic end-to-end backprop, cross-entropy + Adam.
+
+Both reuse the `NitroConfig` topology so NITRO-D vs FP comparisons are
+architecture-identical.  These are differentiable, so plain `jax.grad`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import model as M
+from repro.core.blocks import BlockSpec
+
+# ---------------------------------------------------------------------------
+# Float forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _avgpool_to(x, target):
+    n, h, w, c = x.shape
+    s = max(math.isqrt(max(target // c, 1)), 1)
+    s = min(s, h, w)
+    win = h // s
+    xs = x[:, : s * win, : s * win, :].reshape(n, s, win, s, win, c)
+    return xs.mean(axis=(2, 4)).reshape(n, -1)
+
+
+def _leaky(x, alpha=0.1):
+    return jnp.where(x >= 0, x, alpha * x)
+
+
+def init_fp_params(key: jax.Array, cfg: M.NitroConfig) -> dict:
+    """He-uniform float init mirroring the integer topology."""
+    keys = jax.random.split(key, cfg.num_blocks + 1)
+    params: dict = {"blocks": [], "output": None}
+    shape = cfg.input_shape
+
+    def he(k, shp, fan_in):
+        b = math.sqrt(3.0) / math.sqrt(fan_in)
+        return jax.random.uniform(k, shp, jnp.float32, -b, b)
+
+    for spec, k in zip(cfg.blocks, keys[:-1]):
+        kf, kl = jax.random.split(k)
+        if spec.kind == "conv":
+            h, w, c = shape
+            fan = spec.kernel_size ** 2 * c
+            fw = he(kf, (spec.kernel_size, spec.kernel_size, c, spec.out_features), fan)
+            oh, ow = (h // 2, w // 2) if spec.pool else (h, w)
+            shape = (oh, ow, spec.out_features)
+            dummy = jnp.zeros((1, oh, ow, spec.out_features), jnp.float32)
+            lr_in = _avgpool_to(dummy, spec.d_lr).shape[-1]
+        else:
+            m = 1
+            for d in shape:  # linear blocks flatten whatever precedes them
+                m *= d
+            fw = he(kf, (m, spec.out_features), m)
+            shape = (spec.out_features,)
+            lr_in = spec.out_features
+        lr = he(kl, (lr_in, cfg.num_classes), lr_in)
+        params["blocks"].append({"fw": fw, "lr": lr})
+    feat = 1
+    for d in shape:
+        feat *= d
+    params["output"] = he(keys[-1], (feat, cfg.num_classes), feat)
+    return params
+
+
+def _block_forward(spec: BlockSpec, p: dict, a, *, key, train):
+    if spec.kind == "conv":
+        z = _conv(a, p["fw"])
+    else:
+        if a.ndim > 2:
+            a = a.reshape(a.shape[0], -1)
+        z = a @ p["fw"]
+    a = _leaky(z)
+    if spec.pool:
+        a = _maxpool(a)
+    if train and spec.dropout > 0.0 and key is not None:
+        keep = 1.0 - spec.dropout
+        a = a * jax.random.bernoulli(key, keep, a.shape) / keep
+    return a
+
+
+def _local_head(spec: BlockSpec, p: dict, a):
+    feats = _avgpool_to(a, spec.d_lr) if spec.kind == "conv" else a
+    return feats @ p["lr"]
+
+
+def forward_fp(params, cfg: M.NitroConfig, x, *, train=False, key=None):
+    """Float forward; returns (logits, per-block local logits)."""
+    a = jnp.asarray(x, jnp.float32)
+    keys = (
+        list(jax.random.split(key, cfg.num_blocks))
+        if (train and key is not None)
+        else [None] * cfg.num_blocks
+    )
+    locals_ = []
+    for spec, p, dk in zip(cfg.blocks, params["blocks"], keys):
+        a = _block_forward(spec, p, a, key=dk, train=train)
+        locals_.append((spec, p, a))
+    flat = a.reshape(a.shape[0], -1)
+    logits = flat @ params["output"]
+    return logits, locals_
+
+
+def _xent(logits, labels):
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logz, labels[:, None], axis=1))
+
+
+def _mse_local(yl, labels, num_classes):
+    y = jax.nn.one_hot(labels, num_classes)
+    return jnp.mean((yl - y) ** 2)
+
+
+def loss_bp(params, cfg, x, labels, key):
+    logits, _ = forward_fp(params, cfg, x, train=True, key=key)
+    return _xent(logits, labels)
+
+
+def loss_les(params, cfg, x, labels, key):
+    """LES: Σ local losses with stop-gradient between blocks + output loss."""
+    a = jnp.asarray(x, jnp.float32)
+    keys = list(jax.random.split(key, cfg.num_blocks))
+    total = 0.0
+    for spec, p, dk in zip(cfg.blocks, params["blocks"], keys):
+        a = _block_forward(spec, p, a, key=dk, train=True)
+        total = total + _mse_local(_local_head(spec, p, a), labels, cfg.num_classes)
+        a = jax.lax.stop_gradient(a)  # confine gradients to the block
+    flat = a.reshape(a.shape[0], -1)
+    total = total + _xent(flat @ params["output"], labels)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Adam (no optax in this container — 20-line implementation)
+# ---------------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jax.Array
+
+
+def adam_init(params) -> AdamState:
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(mu=z, nu=jax.tree_util.tree_map(jnp.zeros_like, params),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def adam_update(params, grads, state: AdamState, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    count = state.count + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    t = count.astype(jnp.float32)
+    def upd(p, m, v):
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return jax.tree_util.tree_map(upd, params, mu, nu), AdamState(mu, nu, count)
+
+
+def sgd_update(params, grads, lr=5e-4):
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def train_step_bp(params, opt_state, cfg, x, labels, key, lr=1e-3):
+    loss, grads = jax.value_and_grad(loss_bp)(params, cfg, x, labels, key)
+    params, opt_state = adam_update(params, grads, opt_state, lr=lr)
+    return params, opt_state, loss
+
+
+def train_step_les(params, cfg, x, labels, key, lr=5e-4):
+    loss, grads = jax.value_and_grad(loss_les)(params, cfg, x, labels, key)
+    return sgd_update(params, grads, lr=lr), loss
+
+
+def accuracy_fp(params, cfg, x, labels):
+    logits, _ = forward_fp(params, cfg, x, train=False)
+    return jnp.sum(jnp.argmax(logits, -1) == labels)

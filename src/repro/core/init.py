@@ -1,0 +1,35 @@
+"""Integer Kaiming initialisation (paper Appendix B.1).
+
+Weights are drawn from a discrete uniform U(-b, b) with
+
+    b = ⌊ 128 · 1732 / (√fan_in · 1000) ⌋
+
+where √fan_in is computed with integer-only arithmetic (Newton isqrt) and
+1732/1000 approximates √3.  Biases are disabled throughout NITRO-D: the
+NITRO Scaling Layer's floor division truncates their additive contribution
+to (near) zero, so they are omitted entirely.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+
+
+def kaiming_bound(fan_in: int) -> int:
+    """b = ⌊128·1732 / (isqrt(fan_in)·1000)⌋, pure integer."""
+    root = int(numerics.isqrt(jnp.asarray(fan_in)))
+    root = max(root, 1)
+    return max((128 * 1732) // (root * 1000), 1)
+
+
+def integer_kaiming_uniform(
+    key: jax.Array, shape: tuple[int, ...], fan_in: int
+) -> jax.Array:
+    """Discrete uniform U(-b, b) integer weights (inclusive bounds)."""
+    b = kaiming_bound(fan_in)
+    return jax.random.randint(
+        key, shape, minval=-b, maxval=b + 1, dtype=numerics.INT_DTYPE
+    )

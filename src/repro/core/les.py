@@ -1,0 +1,119 @@
+"""The NITRO-D learning algorithm (paper §3.3) — integer-only LES training.
+
+One training step:
+
+  1. forward through every block's *forward layers* and the *output layers*;
+  2. output layers: ∇L_o = ŷ − y → IntegerSGD update (γ_inv^lr, η_inv^lr);
+  3. per block (independently — XLA schedules these concurrently, the LES
+     block-parallelism the paper highlights):
+       a. learning layers on a_l → ŷ_l;
+       b. ∇L_l = ŷ_l − y → learning-layer update (γ_inv^lr, η_inv^lr);
+       c. δ_l^fw from the learning-layer backward → forward-layer update
+          (γ_inv^fw = γ_inv^lr·AF — NITRO Amplification Factor, η_inv^fw).
+
+No gradient crosses a block boundary.  Everything below is integer: the
+whole step jit-compiles to an integer-only XLA program (verifiable — the
+test-suite asserts no float dtype appears in the jaxpr).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks as B
+from repro.core import model as M
+from repro.core import optimizer as opt
+from repro.core.losses import one_hot_int, rss_grad, rss_loss
+from repro.core.numerics import INT_DTYPE
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt_lr: opt.IntegerSGDState   # learning + output layers
+    opt_fw: opt.IntegerSGDState   # forward layers (γ amplified by AF)
+    step: jax.Array
+
+
+def create_train_state(key: jax.Array, cfg: M.NitroConfig) -> TrainState:
+    params = M.init_params(key, cfg)
+    af = opt.amplification_factor(cfg.num_classes)
+    return TrainState(
+        params=params,
+        opt_lr=opt.init_state(cfg.gamma_inv, cfg.eta_lr),
+        opt_fw=opt.init_state(cfg.gamma_inv * af, cfg.eta_fw),
+        step=jnp.zeros((), INT_DTYPE),
+    )
+
+
+class StepMetrics(NamedTuple):
+    loss: jax.Array          # integer RSS of the output layers
+    correct: jax.Array       # # correct top-1 predictions in the batch
+    local_losses: jax.Array  # per-block integer RSS (L,)
+
+
+def train_step(
+    state: TrainState,
+    cfg: M.NitroConfig,
+    x: jax.Array,
+    labels: jax.Array,
+    key: jax.Array,
+) -> tuple[TrainState, StepMetrics]:
+    """One integer-only NITRO-D step over a batch. jit-able (cfg static)."""
+    params = state.params
+    y = one_hot_int(labels, cfg.num_classes)
+
+    # ---- forward ----------------------------------------------------------
+    y_hat, acts, fw_caches, out_cache = M.forward(
+        params, cfg, x, train=True, key=key
+    )
+
+    # ---- output layers ----------------------------------------------------
+    grad_o = rss_grad(y_hat, y)
+    out_grads = B.output_backward(params["output"], out_cache, grad_o)
+    new_output = opt.apply_tree(params["output"], out_grads, state.opt_lr)
+
+    # ---- per-block local training (independent → parallel) ----------------
+    new_blocks = []
+    local_losses = []
+    for spec, p, a_l, fw_cache in zip(
+        cfg.blocks, params["blocks"], acts, fw_caches
+    ):
+        y_hat_l, lr_cache = B.learning_layers(p, spec, a_l)
+        grad_l = B.local_gradient(y_hat_l, y)
+        local_losses.append(rss_loss(y_hat_l, y))
+        delta_fw, lr_grads = B.learning_layers_backward(p, spec, lr_cache, grad_l)
+        fw_grads = B.forward_layers_backward(p, spec, fw_cache, delta_fw)
+        new_blocks.append(
+            {
+                "fw": opt.apply_tree(p["fw"], fw_grads, state.opt_fw),
+                "lr": opt.apply_tree(p["lr"], lr_grads, state.opt_lr),
+            }
+        )
+
+    new_params = {"blocks": new_blocks, "output": new_output}
+    metrics = StepMetrics(
+        loss=rss_loss(y_hat, y),
+        correct=jnp.sum(jnp.argmax(y_hat, axis=-1) == labels),
+        local_losses=jnp.stack(local_losses),
+    )
+    return state._replace(params=new_params, step=state.step + 1), metrics
+
+
+def eval_step(
+    state: TrainState, cfg: M.NitroConfig, x: jax.Array, labels: jax.Array
+) -> jax.Array:
+    """# correct predictions (integer) over a batch."""
+    y_hat, _, _, _ = M.forward(state.params, cfg, x, train=False)
+    return jnp.sum(jnp.argmax(y_hat, axis=-1) == labels)
+
+
+def reduce_lr_on_plateau(state: TrainState, plateau) -> TrainState:
+    """Apply the ÷3 schedule to both optimiser groups (γ_inv ×3)."""
+    plateau = jnp.asarray(plateau)
+    return state._replace(
+        opt_lr=opt.step_lr_schedule(state.opt_lr, plateau),
+        opt_fw=opt.step_lr_schedule(state.opt_fw, plateau),
+    )

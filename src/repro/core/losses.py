@@ -1,0 +1,39 @@
+"""Integer RSS loss (paper §3.3, Eq. 1).
+
+    L_l  = ½ (ŷ_l − y)²          (reported, integer)
+    ∇L_l = ŷ_l − y               (used for training)
+
+``y`` is the paper's custom one-hot: zeros with the true-class entry set to
+32 (Appendix B.2) — integer head-room so the gradient is not constrained to
+{−1, 0, 1}.  The largest one-hot value (32) needs 6 bits, which is what the
+NITRO Amplification Factor's bit-width analysis assumes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+
+ONE_HOT_VALUE = 32  # Appendix B.2
+
+
+def one_hot_int(labels: jax.Array, num_classes: int) -> jax.Array:
+    """One-hot encode with value 32 at the true class, integer dtype."""
+    eye = (labels[..., None] == jnp.arange(num_classes)).astype(numerics.INT_DTYPE)
+    return eye * ONE_HOT_VALUE
+
+
+def rss_loss(y_hat: jax.Array, y: jax.Array) -> jax.Array:
+    """Integer loss value Σ ⌊(ŷ−y)²/2⌋ summed over the batch (reporting)."""
+    numerics.assert_int(y_hat, "rss y_hat")
+    diff = y_hat - y
+    return jnp.sum(numerics.floor_div(diff * diff, 2))
+
+
+def rss_grad(y_hat: jax.Array, y: jax.Array) -> jax.Array:
+    """∇L = ŷ − y, elementwise integer subtraction."""
+    numerics.assert_int(y_hat, "rss y_hat")
+    numerics.assert_int(y, "rss y")
+    return y_hat - y

@@ -1,0 +1,81 @@
+"""Integer-only arithmetic primitives for NITRO-D.
+
+Every operation in this module is closed over the integers: inputs and
+outputs are integer JAX arrays and no floating-point intermediate is ever
+materialised.  The paper's ``⌊·⌋`` is floor division (rounds toward −∞),
+which is exactly ``jnp.floor_divide`` / Python's ``//`` — NOT C truncation.
+
+The carrying dtype is int32 (XLA integer dot requires ≥32-bit accumulation);
+logical bit-width invariants (int8 activations, int16 weights) are asserted
+by the test-suite, not by the dtype system, mirroring the paper's §4.4
+discussion.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT_DTYPE = jnp.int32
+# Operational range of NITRO-ReLU / int8 activations (paper §3.2).
+ACT_MIN = -127
+ACT_MAX = 127
+
+
+def to_int(x) -> jax.Array:
+    """Cast to the carrying integer dtype (int32)."""
+    return jnp.asarray(x, dtype=INT_DTYPE)
+
+
+def floor_div(x: jax.Array, d) -> jax.Array:
+    """Integer floor division ⌊x/d⌋ — rounds toward −∞ like the paper."""
+    return jnp.floor_divide(x, d)
+
+
+def int_matmul(a: jax.Array, w: jax.Array) -> jax.Array:
+    """Integer matrix product with int32 accumulation.
+
+    ``preferred_element_type=int32`` is the XLA contract for int8-style
+    accumulate-in-int32 semantics; on TPU this hits the MXU integer mode.
+    """
+    return jax.lax.dot_general(
+        a, w,
+        dimension_numbers=(((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=INT_DTYPE,
+    )
+
+
+def clip_act(x: jax.Array) -> jax.Array:
+    """Clamp to the NITRO operational range [-127, 127]."""
+    return jnp.clip(x, ACT_MIN, ACT_MAX)
+
+
+def isqrt(n: jax.Array) -> jax.Array:
+    """Integer square root ⌊√n⌋ via Newton iteration, pure integer.
+
+    Used by the integer Kaiming initialiser (Appendix B.1).  Converges in
+    ≤ 16 iterations for int32 inputs; we run a fixed 20 to stay jit-stable.
+    """
+    n = to_int(n)
+
+    def body(_, x):
+        # Newton step: x <- (x + n // x) // 2, guarded against x == 0.
+        x_safe = jnp.maximum(x, 1)
+        nxt = floor_div(x_safe + floor_div(n, x_safe), 2)
+        return jnp.where(n > 0, jnp.minimum(x, nxt), 0)
+
+    # start from above √n but below the int32-overflow edge: isqrt of any
+    # int32 is ≤ 46340, so 46341 is a safe upper seed (x + n//x < 2³¹)
+    x0 = jnp.clip(n, 1, 46341)
+    out = jax.lax.fori_loop(0, 25, body, x0)
+    return jnp.where(n > 0, out, 0)
+
+
+def bitwidth_bound(x_bits: int, w_bits: int, fan_in: int) -> int:
+    """Paper §3.2 upper bound: b_z = x_bits + w_bits - 1 + ceil(log2(fan_in))."""
+    return x_bits + w_bits - 1 + max(int(fan_in - 1).bit_length(), 0)
+
+
+def assert_int(x: jax.Array, name: str = "tensor") -> None:
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise TypeError(f"{name} must be integer, got {x.dtype}")

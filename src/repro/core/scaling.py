@@ -1,0 +1,54 @@
+"""NITRO Scaling Layer (paper §3.2).
+
+Rescales integer pre-activations ``z_l`` into the NITRO-ReLU operational
+range by floor division with a statically-known scaling factor::
+
+    z*_l = ⌊ z_l / SF_l ⌋
+    SF_l = 2^8 · M_{l-1}          (linear layers)
+    SF_l = 2^8 · K²_{l-1} · C_{l-1}  (conv layers)
+
+Backward is the straight-through estimator: the gradient passes unchanged
+(uniform scaling does not alter the direction of the activation vector).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+
+
+def linear_scale_factor(fan_in: int) -> int:
+    """SF for an Integer Linear layer with ``fan_in`` input features."""
+    return (2 ** 8) * int(fan_in)
+
+
+def conv_scale_factor(kernel_size: int, in_channels: int) -> int:
+    """SF for an Integer Conv2D layer (K×K kernel, C input channels)."""
+    return (2 ** 8) * int(kernel_size) ** 2 * int(in_channels)
+
+
+def scale_forward(z: jax.Array, sf: int) -> jax.Array:
+    """z* = ⌊z / SF⌋ — pure integer floor division."""
+    numerics.assert_int(z, "pre-activations")
+    return numerics.floor_div(z, jnp.asarray(sf, dtype=z.dtype))
+
+
+def scale_backward(grad_out: jax.Array) -> jax.Array:
+    """Straight-through estimator: δ^{ic} = δ^{sl} (paper §3.2)."""
+    return grad_out
+
+
+def pow2_split(sf: int) -> tuple[int, int]:
+    """Split SF into (shift, residual) with SF = residual << shift.
+
+    TPU adaptation: floor-div by the power-of-two component is an arithmetic
+    right shift on the VPU; only the residual needs an integer divide.  Used
+    by the Pallas kernel; the reference path divides directly.
+    """
+    shift = 0
+    while sf % 2 == 0 and sf > 1:
+        sf //= 2
+        shift += 1
+    return shift, sf

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic integer datasets + sharded host loading."""

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+nitro_matmul/  fused int8 x int8 -> int32 matmul + NITRO scaling +
+               NITRO-ReLU (one MXU+VPU pass; 5x less HBM traffic on the
+               pre-activation tensor than the unfused reference)
+integer_sgd/   fused IntegerSGD update (Algorithm 1; 3 HBM streams vs 5)
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret mode on CPU), ref.py (pure-jnp oracle).  Attention is
+deliberately NOT a kernel: the roofline reads FLOPs from the compiled HLO
+and custom calls are opaque to the cost model (models/attention.py).
+"""

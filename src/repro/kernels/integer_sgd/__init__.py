@@ -1,0 +1,5 @@
+from repro.kernels.integer_sgd.integer_sgd import integer_sgd_update
+from repro.kernels.integer_sgd.ops import apply_tree_fused
+from repro.kernels.integer_sgd.ref import integer_sgd_ref
+
+__all__ = ["integer_sgd_update", "integer_sgd_ref", "apply_tree_fused"]

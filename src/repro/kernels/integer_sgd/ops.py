@@ -1,0 +1,34 @@
+"""Jit'd wrapper: apply the fused IntegerSGD kernel across parameter trees."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import optimizer as opt
+from repro.kernels.integer_sgd.integer_sgd import integer_sgd_update
+from repro.kernels.integer_sgd.ref import integer_sgd_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def apply_tree_fused(
+    params, grads, state: opt.IntegerSGDState, *, use_kernel: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Drop-in replacement for ``optimizer.apply_tree`` using the kernel."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return jax.tree_util.tree_map(
+            lambda w, g: integer_sgd_ref(w, g, state.gamma_inv, state.eta_inv),
+            params, grads,
+        )
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return jax.tree_util.tree_map(
+        lambda w, g: integer_sgd_update(
+            w, g, state.gamma_inv, state.eta_inv, interpret=interp
+        ),
+        params, grads,
+    )

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused IntegerSGD kernel — delegates to the
+canonical Algorithm-1 implementation in ``repro.core.optimizer``."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import optimizer as opt
+
+
+def integer_sgd_ref(
+    w: jax.Array, g: jax.Array, gamma_inv, eta_inv
+) -> jax.Array:
+    state = opt.IntegerSGDState(
+        gamma_inv=jax.numpy.asarray(gamma_inv, jax.numpy.int32),
+        eta_inv=jax.numpy.asarray(eta_inv, jax.numpy.int32),
+    )
+    return opt.apply_update(w, g, state)

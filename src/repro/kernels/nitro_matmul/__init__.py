@@ -1,0 +1,5 @@
+from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul
+from repro.kernels.nitro_matmul.ops import nitro_conv2d, nitro_linear
+from repro.kernels.nitro_matmul.ref import nitro_matmul_ref
+
+__all__ = ["nitro_matmul", "nitro_matmul_ref", "nitro_linear", "nitro_conv2d"]

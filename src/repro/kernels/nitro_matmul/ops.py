@@ -1,0 +1,97 @@
+"""Public jit'd wrappers around the fused NITRO matmul kernel.
+
+``nitro_linear`` / ``nitro_conv2d`` are drop-in fused replacements for the
+reference layer pipeline (IntegerLinear/IntegerConv2D → NITRO Scaling →
+NITRO-ReLU).  On CPU (this container) they run the kernel in interpret
+mode or fall back to the oracle; on TPU they emit the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import im2col
+from repro.core.scaling import conv_scale_factor, linear_scale_factor
+from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul
+from repro.kernels.nitro_matmul.ref import nitro_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def nitro_linear(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    alpha_inv: int = 10,
+    apply_relu: bool = True,
+    out_dtype=jnp.int32,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused integer linear layer: nitro_relu(⌊(x@w)/(2⁸·M)⌋).
+
+    Accepts any leading batch dims on ``x``; contracts the last one.
+    ``use_kernel=None`` auto-selects: Pallas on TPU, oracle on CPU (the
+    tests exercise the kernel explicitly with ``interpret=True``).
+    """
+    m = x.shape[-1]
+    sf = linear_scale_factor(m)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, m)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        out = nitro_matmul(
+            x2, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
+            out_dtype=out_dtype,
+            interpret=(not _on_tpu()) if interpret is None else interpret,
+        )
+    else:
+        out = nitro_matmul_ref(
+            x2, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
+            out_dtype=out_dtype,
+        )
+    return out.reshape(*lead, w.shape[-1])
+
+
+def nitro_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    alpha_inv: int = 10,
+    apply_relu: bool = True,
+    out_dtype=jnp.int32,
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused integer conv layer via im2col + the same fused matmul.
+
+    x: (N,H,W,C) int, w: (K,K,C,F) int → (N,H,W,F) activations.
+    im2col is pad+static-slices (layout work the TPU does in the XLA
+    prologue); all FLOPs go through the fused MXU kernel.
+    """
+    k = w.shape[0]
+    c_in = x.shape[-1]
+    sf = conv_scale_factor(k, c_in)
+    n, h, ww, _ = x.shape
+    patches = im2col(x, k, k // 2).reshape(n * h * ww, k * k * c_in)
+    w_flat = w.reshape(-1, w.shape[-1])
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        out = nitro_matmul(
+            patches, w_flat, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
+            out_dtype=out_dtype,
+            interpret=(not _on_tpu()) if interpret is None else interpret,
+        )
+    else:
+        out = nitro_matmul_ref(
+            patches, w_flat, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
+            out_dtype=out_dtype,
+        )
+    return out.reshape(n, h, ww, w.shape[-1])

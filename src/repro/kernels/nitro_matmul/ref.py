@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused NITRO matmul kernel.
+
+Composes the three reference ops the kernel fuses — integer matmul, NITRO
+Scaling Layer, NITRO-ReLU — exactly as `repro.core` defines them.  The
+kernel must match this bit-for-bit on every shape/dtype swept by the tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activations import nitro_relu
+from repro.core.numerics import int_matmul
+from repro.core.scaling import scale_forward
+
+
+def nitro_matmul_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    apply_relu: bool = True,
+    out_dtype=jnp.int32,
+) -> jax.Array:
+    z = int_matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    z_star = scale_forward(z, sf)
+    if apply_relu:
+        z_star = nitro_relu(z_star, alpha_inv)
+    return z_star.astype(out_dtype)

@@ -1,0 +1,379 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init).  Do not reorder.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input-shape × mesh) cell:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits per-chip HBM
+        print(compiled.cost_analysis())     # raw XLA cost model numbers
+
+plus the while-aware HLO analysis (hlo_analysis.py) that feeds the
+EXPERIMENTS.md §Roofline table.  Results are written as one JSON per cell.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k \
+        [--multi-pod] [--causal-mode triangle] [--out results/...json]
+    python -m repro.launch.dryrun --sweep [--multi-pod] --out-dir results/dryrun
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB
+
+
+def make_rules(cfg, *, mode: str, multi_pod: bool, batch: int) -> dict:
+    from repro.parallel.sharding import serve_rules, train_rules
+    from repro.train.trainer import resolved_rules
+
+    base = train_rules(multi_pod) if mode == "train" else serve_rules(multi_pod)
+    if cfg.dp_only and mode == "train":
+        base["batch"] = ("pod", "data") if multi_pod else ("data", "model")
+        base["p_fsdp"] = ("data", "model")
+        base["seq_sp"] = None      # model axis is consumed by the batch
+        base["expert_cap"] = None
+    rules = resolved_rules(cfg, base)
+    if batch == 1:
+        rules["batch"] = None  # long_500k: single request, nothing to shard
+    return rules
+
+
+def _serving_params_struct(cfg):
+    """Abstract params for serving cells: fp32 master weights are cast to
+    bf16 at serving load (production convention) — halves weight HBM."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer as T
+
+    p = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype
+        ),
+        p,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               causal_mode: str = "masked", return_rules: bool = False,
+               cfg_overrides: dict | None = None,
+               rule_patch: dict | None = None):
+    """Build + lower + compile one cell; returns (compiled, info dict).
+
+    ``cfg_overrides``: dataclass field replacements (hillclimb levers like
+    int8_matmul / les_groups / remat).  ``rule_patch``: logical-axis rule
+    replacements applied after the arch's own overrides.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch import shapes as S
+    from repro.launch.mesh import make_production_mesh, mesh_num_chips
+    from repro.models import transformer as T
+    from repro.train import trainer
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cell = S.cell(cfg, shape_name)
+    if not cell.applicable:
+        return None, {"arch": arch, "shape": shape_name,
+                      "skipped": True, "reason": cell.skip_reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mode=cell.kind if cell.kind == "train" else "serve",
+                       multi_pod=multi_pod, batch=cell.batch)
+    if rule_patch:
+        rules.update(rule_patch)
+
+    t0 = time.monotonic()
+    if cell.kind == "train":
+        specs = S.train_batch_specs(cfg, cell.batch, cell.seq)
+        shapes_arg = {k: v.shape for k, v in specs.items()}
+        with mesh:
+            fn = trainer.build_train_step(
+                cfg, mesh, rules, shapes=shapes_arg, causal_mode=causal_mode
+            )
+            state = trainer.abstract_state(jax.random.PRNGKey(0), cfg)
+            lowered = fn.lower(state, specs)
+    elif cell.kind == "prefill":
+        specs = S.prefill_batch_specs(cfg, cell.batch, cell.seq)
+        shapes_arg = {k: v.shape for k, v in specs.items()}
+        cache = S.abstract_cache(cfg, cell.batch, cell.seq)
+        with mesh:
+            fn = trainer.build_prefill(cfg, mesh, rules, shapes=shapes_arg)
+            params = _serving_params_struct(cfg)
+            lowered = fn.lower(params, specs, cache)
+    else:  # decode
+        cache = S.abstract_cache(cfg, cell.batch, cell.seq)
+        toks = S.decode_token_specs(cell.batch)
+        enc = S.enc_out_specs(cfg, cell.batch)
+        with mesh:
+            fn = trainer.build_decode_step(cfg, mesh, rules, has_enc=enc is not None)
+            params = _serving_params_struct(cfg)
+            args = (params, toks, cache) + ((enc,) if enc is not None else ())
+            lowered = fn.lower(*args)
+    lower_s = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    compile_s = time.monotonic() - t0
+
+    info = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "kind": cell.kind, "seq": cell.seq, "batch": cell.batch,
+        "chips": mesh_num_chips(mesh), "causal_mode": causal_mode,
+        "lower_s": round(lower_s, 1), "compile_s": round(compile_s, 1),
+        "skipped": False,
+        "_rules": rules,
+    }
+    return compiled, info
+
+
+def _analytic_temp_bytes(cfg, info: dict, rules: dict) -> float:
+    """First-principles per-chip workspace estimate for the TPU target.
+
+    The XLA CPU backend stages bf16 buffers through f32 and materialises
+    scatter index maps (neither exists on TPU), so its temp number is a
+    conservative upper bound.  This estimate covers the real live set:
+    per-layer carry saves (remat), gradient buffers, and a flat workspace.
+    """
+    shape = (2, 16, 16) if info["multi_pod"] else (16, 16)
+    names = ("pod", "data", "model") if info["multi_pod"] else ("data", "model")
+    size = dict(zip(names, shape))
+
+    def shards(rule_key):
+        axes = rules.get(rule_key)
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= size.get(a, 1)
+        return n
+
+    if info["kind"] == "train":
+        carry = (
+            cfg.num_layers * info["batch"] * info["seq"] * cfg.d_model * 2
+            / shards("batch") / shards("seq_sp")
+        )
+        n_chips = 1
+        for s in shape:
+            n_chips *= s
+        grads = 4.0 * cfg.param_count() / n_chips  # FSDP-sharded fp32 grads
+        workspace = 2.0 * 1024**3
+        return carry + grads + workspace
+    return 2.0 * 1024**3  # serve: block workspace only (cache is an arg)
+
+
+def analyze_cell(compiled, info: dict, rules: dict | None = None) -> dict:
+    """memory_analysis + cost_analysis + while-aware roofline terms."""
+    from repro.configs import get_config
+    from repro.launch.hlo_analysis import analyze, roofline_terms
+
+    ma = compiled.memory_analysis()
+    per_chip = {
+        "arguments_gib": ma.argument_size_in_bytes / 1024**3,
+        "outputs_gib": ma.output_size_in_bytes / 1024**3,
+        "temp_gib": ma.temp_size_in_bytes / 1024**3,
+        "alias_gib": ma.alias_size_in_bytes / 1024**3,
+    }
+    # donated (aliased) buffers don't double-count against HBM
+    live = (
+        ma.argument_size_in_bytes + ma.output_size_in_bytes
+        + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+    )
+    per_chip["live_gib"] = live / 1024**3
+    per_chip["fits_16gib_hbm"] = bool(live < HBM_PER_CHIP)
+    if rules is not None:
+        cfg_ = get_config(info["arch"])
+        analytic = (
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes
+            + _analytic_temp_bytes(cfg_, info, rules)
+        )
+        per_chip["analytic_live_gib"] = analytic / 1024**3
+        per_chip["analytic_fits_16gib"] = bool(analytic < HBM_PER_CHIP)
+        per_chip["note"] = (
+            "XLA temp is CPU-backend-conservative (bf16→f32 staging, "
+            "scatter index maps); analytic_live is the TPU-target estimate"
+        )
+
+    ca = compiled.cost_analysis() or {}
+    xla_cost = {
+        "flops_once": float(ca.get("flops", -1.0)),
+        "bytes_accessed_once": float(ca.get("bytes accessed", -1.0)),
+        "note": "XLA cost_analysis counts while bodies once; see hlo_analysis",
+    }
+
+    costs = analyze(compiled.as_text())
+    terms = roofline_terms(costs)
+
+    cfg = get_config(info["arch"])
+    n_active = cfg.active_param_count()
+    tokens = info["batch"] * (info["seq"] if info["kind"] != "decode" else 1)
+    fl_per_tok = 6 if info["kind"] == "train" else 2
+    model_flops = fl_per_tok * n_active * tokens
+    hlo_total = terms["flops_by_dtype"]
+    hlo_global = sum(hlo_total.values()) * info["chips"]
+    terms["model_flops"] = model_flops
+    terms["model_over_hlo_flops"] = (
+        model_flops / hlo_global if hlo_global else 0.0
+    )
+    terms["roofline_bound_s"] = max(
+        terms["compute_s"], terms["memory_s"], terms["collective_s"]
+    )
+    # roofline fraction: useful model FLOP-time over the per-chip bound
+    useful_s = (model_flops / info["chips"]) / 197e12
+    terms["roofline_fraction"] = (
+        useful_s / terms["roofline_bound_s"] if terms["roofline_bound_s"] else 0.0
+    )
+    return {**info, "memory": per_chip, "xla_cost": xla_cost, "roofline": terms}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             causal_mode: str = "masked", out: str | None = None,
+             cfg_overrides: dict | None = None,
+             rule_patch: dict | None = None) -> dict:
+    compiled, info = lower_cell(
+        arch, shape_name, multi_pod=multi_pod, causal_mode=causal_mode,
+        cfg_overrides=cfg_overrides, rule_patch=rule_patch,
+    )
+    if cfg_overrides:
+        info["cfg_overrides"] = {k: str(v) for k, v in cfg_overrides.items()}
+    if rule_patch:
+        info["rule_patch"] = {k: str(v) for k, v in rule_patch.items()}
+    if compiled is None:
+        result = info
+    else:
+        rules = info.pop("_rules", None)
+        result = analyze_cell(compiled, info, rules)
+        print(compiled.memory_analysis())
+        if out:  # cache the HLO so analyzer upgrades re-parse, not recompile
+            import gzip
+
+            os.makedirs(os.path.dirname(out), exist_ok=True)
+            with gzip.open(out.replace(".json", ".hlo.gz"), "wt") as f:
+                f.write(compiled.as_text())
+    if out:
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    print(json.dumps({k: v for k, v in result.items() if k != "xla_cost"},
+                     indent=1, default=str))
+    return result
+
+
+def sweep(out_dir: str, *, multi_pod: bool, archs=None, shapes=None,
+          causal_mode: str = "masked", timeout: int = 3600):
+    """Subprocess-per-cell sweep (isolation: one OOM/crash ≠ dead sweep)."""
+    from repro.configs import list_archs
+    from repro.launch.shapes import SHAPES
+
+    archs = archs or list_archs()
+    shapes = shapes or list(SHAPES)
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            tag = f"{arch}_{shape_name}_{'pod2' if multi_pod else 'pod1'}"
+            out = os.path.join(out_dir, tag + ".json")
+            if os.path.exists(out):
+                print(f"[skip] {tag} (exists)")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape_name, "--out", out,
+                "--causal-mode", causal_mode,
+            ]
+            if multi_pod:
+                cmd.append("--multi-pod")
+            print(f"[run ] {tag}")
+            try:
+                proc = subprocess.run(
+                    cmd, capture_output=True, text=True, timeout=timeout
+                )
+                if proc.returncode != 0:
+                    print(f"[FAIL] {tag}:\n{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+                    results.append({"cell": tag, "ok": False})
+                else:
+                    results.append({"cell": tag, "ok": True})
+            except subprocess.TimeoutExpired:
+                print(f"[TIME] {tag}")
+                results.append({"cell": tag, "ok": False, "timeout": True})
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--causal-mode", default="masked",
+                    choices=["masked", "triangle"])
+    ap.add_argument("--out")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--int8", action="store_true",
+                    help="NITRO int8 numerics on LM matmuls")
+    ap.add_argument("--les-groups", type=int, default=0)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--cast-once", action="store_true",
+                    help="cast fp32 params to bf16 once per step")
+    ap.add_argument("--moe-shard", action="store_true",
+                    help="pin MoE dispatch buffers to the expert sharding")
+    ap.add_argument("--rule", action="append", default=[],
+                    help="logical=mesh rule patch, e.g. --rule mlp=None")
+    args = ap.parse_args()
+
+    if args.sweep:
+        sweep(args.out_dir, multi_pod=args.multi_pod,
+              causal_mode=args.causal_mode)
+        return
+    overrides = {}
+    if args.int8:
+        overrides["int8_matmul"] = True
+    if args.les_groups:
+        overrides["les_groups"] = args.les_groups
+    if args.no_remat:
+        overrides["remat"] = False
+    if args.cast_once:
+        overrides["cast_params_once"] = True
+    if args.moe_shard:
+        overrides["moe_shard_buffers"] = True
+    patch = {}
+    for r in args.rule:
+        k, v = r.split("=", 1)
+        if v == "None":
+            patch[k] = None
+        elif "," in v:
+            patch[k] = tuple(v.split(","))
+        else:
+            patch[k] = v
+    try:
+        run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                 causal_mode=args.causal_mode, out=args.out,
+                 cfg_overrides=overrides or None, rule_patch=patch or None)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

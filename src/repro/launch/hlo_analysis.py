@@ -1,0 +1,433 @@
+"""While-aware HLO cost analyzer for the roofline methodology.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE (verified in
+this container: an 8-step scan of 128³ matmuls reports 1 matmul of FLOPs),
+and it reports nothing about collectives.  Since every model here scans
+over layers (and flash attention scans over blocks), we analyse the
+post-optimisation HLO text directly:
+
+  * computations are parsed into op lists (opcode, result shape, operand
+    shapes, attributes);
+  * while-loop trip counts are recovered from the loop condition's
+    comparison constant (scan lowers to ``compare(iv, constant(N)), LT``);
+  * traversal starts at ENTRY and multiplies every enclosing while body's
+    costs by its trip count (nested scans compose);
+  * FLOPs: exact for ``dot`` (2 · result_elems · contraction_size,
+    bucketed by operand dtype — int8 dots hit the MXU at 2× rate, fp32 at
+    ¼ rate) plus first-order elementwise counts; ``bytes``: Σ (operands +
+    result) of every top-level op — post-fusion, each op ≈ one kernel, so
+    this is the standard HBM-traffic roofline approximation; ``collective
+    bytes``: per collective kind, with all-reduce counted 2× (ring
+    reduce-scatter + all-gather wire cost).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\w+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"([\w\-]+)\((.*)$"
+)
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "select",
+    "exponential", "tanh", "rsqrt", "sqrt", "log", "negate", "abs", "power",
+    "compare", "and", "or", "floor", "ceil", "round-nearest-even", "clamp",
+}
+
+SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "custom-call", "reshape",
+    "bitcast-convert", "opt-barrier", "partition-id", "replica-id",
+}
+
+
+def _shape_info(type_str: str) -> list[tuple[str, int]]:
+    """'f32[8,128]{1,0}' or '(f32[2], s32[])' → [(dtype, elem_count), ...]."""
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        elems = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    elems *= int(d)
+        out.append((dtype, elems))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[d] * n for d, n in _shape_info(type_str))
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    rest: str  # operand list + attributes (raw text)
+
+    def _args_region(self) -> str:
+        depth = 0
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    return self.rest[:i]
+                depth -= 1
+        return self.rest
+
+    def operand_names(self) -> list[str]:
+        return re.findall(r"%([\w.\-]+)", self._args_region())
+
+    def operand_types(self, type_map: dict[str, str]) -> list[str]:
+        """Resolve operand types: inline annotations if present, else the
+        computation-local name → result-type map (post-opt HLO elides
+        operand types)."""
+        inline = re.findall(
+            r"(\w+\[[\d,]*\])(?:\{[^}]*\})?\s+%", self._args_region()
+        )
+        if inline:
+            return inline
+        return [
+            type_map[n] for n in self.operand_names() if n in type_map
+        ]
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+
+    def type_map(self) -> dict[str, str]:
+        return {op.name: op.result_type for op in self.ops}
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], str]:
+    """Parse module text → ({name: Computation}, entry_name)."""
+    comps: dict[str, Computation] = {}
+    current: Computation | None = None
+    entry = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{", stripped)
+        if header and not stripped.startswith("//") and "=" not in stripped.split("(")[0]:
+            current = Computation(name=header.group(2))
+            comps[current.name] = current
+            if header.group(1):
+                entry = current.name
+            continue
+        if stripped.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            current.ops.append(
+                Op(name=m.group(1), result_type=m.group(2),
+                   opcode=m.group(3), rest=m.group(4))
+            )
+    return comps, entry or next(iter(comps))
+
+
+def _attr(rest: str, key: str) -> str | None:
+    m = re.search(key + r"=([%\w.\-]+)", rest)
+    return m.group(1).lstrip("%") if m else None
+
+
+def _trip_count(comps: dict[str, Computation], cond_name: str) -> int:
+    """Recover scan trip count from the while condition's constant."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.match(r"\s*(\-?\d+)", op.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+_FLOAT_WIDTH = {"f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8}
+_MOVE_FUSION = re.compile(r"(convert|copy|bitcast|transpose|reshape)")
+# fusions composed ONLY of data-movement ops (convert_bitcast_fusion, ...)
+_PURE_MOVE_FUSION = re.compile(
+    r"^(convert|copy|bitcast|transpose|reshape)"
+    r"(_(convert|copy|bitcast|transpose|reshape))*(_fusion)?(\.\d+)?$"
+)
+
+
+def _semantic_dtype(
+    name: str, comp: "Computation", comps: dict[str, "Computation"] | None = None
+) -> str | None:
+    """Narrowest float dtype along the value's data-movement chain.
+
+    The XLA CPU backend has no native bf16 GEMM: a semantic bf16 matmul
+    input appears as convert(f32→bf16)→convert(bf16→f32) (often fused), so
+    the *narrowest* dtype the value passes through — including inside fused
+    convert chains — is what the TPU MXU would see.  True-f32 paths (e.g.
+    the RWKV gate math) never pass through bf16 and stay classified f32."""
+    op_by_name = getattr(comp, "_by_name", None)
+    if op_by_name is None:
+        op_by_name = {o.name: o for o in comp.ops}
+        comp._by_name = op_by_name
+
+    seen: list[str] = []
+
+    def record(type_str: str):
+        for d, _ in _shape_info(type_str):
+            if d in _FLOAT_WIDTH:
+                seen.append(d)
+
+    for _ in range(8):  # follow data-movement chains (incl. fused ones)
+        op = op_by_name.get(name)
+        if op is None:
+            break
+        record(op.result_type)
+        is_move = op.opcode in (
+            "convert", "copy", "bitcast", "reshape", "transpose",
+        ) or (op.opcode == "fusion" and _MOVE_FUSION.search(op.name.lower()))
+        if not is_move:
+            break
+        if op.opcode == "fusion" and comps is not None:
+            called = _attr(op.rest, "calls")
+            body = comps.get(called) if called else None
+            if body is not None:  # dtypes the fused chain passes through
+                for o in body.ops:
+                    record(o.result_type)
+        names = op.operand_names()
+        if not names:
+            break
+        name = names[0]
+    if not seen:
+        return None
+    return min(seen, key=lambda d: _FLOAT_WIDTH[d])
+
+
+def _dot_flops(
+    op: Op, type_map: dict[str, str], comp: "Computation",
+    comps: dict[str, "Computation"] | None = None,
+) -> tuple[float, str]:
+    """(flops, dtype bucket) for a dot op."""
+    res = _shape_info(op.result_type)
+    result_elems = sum(n for _, n in res)
+    operands = op.operand_types(type_map)
+    if not operands:
+        return 0.0, "f32"
+    lhs = operands[0]
+    lhs_info = _shape_info(lhs)
+    lhs_dtype, _ = lhs_info[0]
+    dims = _SHAPE_RE.search(lhs)
+    lhs_shape = [int(d) for d in dims.group(2).split(",") if d] if dims else []
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if m and lhs_shape:
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs_shape[int(idx)]
+    # classify by semantic (narrowest-along-chain) dtype of both operands
+    names = op.operand_names()
+    sem = [_semantic_dtype(n, comp, comps) for n in names[:2]]
+    sem = [s or lhs_dtype for s in sem]
+    if any(s in ("s8", "u8", "s4") for s in sem):
+        bucket = "int8"
+    elif any(s == "bf16" for s in sem):
+        bucket = "bf16"  # bf16-in / f32-accum = full MXU rate on TPU
+    elif lhs_dtype in ("f32", "f64"):
+        bucket = "f32"
+    else:
+        bucket = "bf16"
+    return 2.0 * result_elems * contract, bucket
+
+
+@dataclass
+class HloCosts:
+    flops: dict = field(default_factory=lambda: defaultdict(float))
+    hbm_bytes: float = 0.0
+    collective_bytes: dict = field(default_factory=lambda: defaultdict(float))
+    collective_counts: dict = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_flops(self) -> float:
+        return sum(self.flops.values())
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(text: str) -> HloCosts:
+    comps, entry = parse_hlo(text)
+    costs = HloCosts()
+    visited_guard: set[tuple[str, float]] = set()
+
+    def visit(comp_name: str, mult: float):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        type_map = comp.type_map()
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                cond = _attr(op.rest, "condition")
+                body = _attr(op.rest, "body")
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    visit(body, mult * max(trips, 1))
+                continue
+            if oc == "conditional":
+                for branch in re.findall(r"branch_computations=\{([^}]*)\}", op.rest):
+                    for b in branch.split(","):
+                        visit(b.strip().lstrip("%"), mult)
+                tb = _attr(op.rest, "true_computation")
+                fb = _attr(op.rest, "false_computation")
+                for b in (tb, fb):
+                    if b:
+                        visit(b, mult)
+                continue
+            if oc == "call":
+                to = _attr(op.rest, "to_apply")
+                if to:
+                    visit(to, mult)
+                continue
+
+            if oc in COLLECTIVES or any(oc.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if oc.startswith(c))
+                tensor_bytes = max(
+                    _bytes_of(op.result_type),
+                    sum(_bytes_of(t) for t in op.operand_types(type_map)) or 0,
+                )
+                # CPU backend upconverts bf16 payloads to f32 *before* the
+                # collective (no native bf16 compute) — on TPU the wire
+                # carries the semantic dtype.  Scale by the narrowest dtype
+                # the payload passes through.
+                names = op.operand_names()
+                res_info = _shape_info(op.result_type)
+                actual = res_info[0][0] if res_info else None
+                if names and actual in _FLOAT_WIDTH:
+                    sem = _semantic_dtype(names[0], comp, comps)
+                    if sem in _FLOAT_WIDTH and _FLOAT_WIDTH[sem] < _FLOAT_WIDTH[actual]:
+                        tensor_bytes *= _FLOAT_WIDTH[sem] / _FLOAT_WIDTH[actual]
+                wire = 2.0 * tensor_bytes if kind == "all-reduce" else float(tensor_bytes)
+                costs.collective_bytes[kind] += mult * wire
+                costs.collective_counts[kind] += mult
+                costs.hbm_bytes += mult * 2 * tensor_bytes
+                continue
+
+            if oc == "dot":
+                fl, bucket = _dot_flops(op, type_map, comp, comps)
+                costs.flops[bucket] += mult * fl
+            elif oc == "convolution":
+                # conservative: treat as dot over the result × window
+                res_elems = sum(n for _, n in _shape_info(op.result_type))
+                costs.flops["bf16"] += mult * 2.0 * res_elems
+            elif oc == "fusion" or oc in ELEMENTWISE or oc in (
+                "reduce", "scatter", "gather", "dynamic-slice",
+                "dynamic-update-slice", "broadcast", "transpose", "copy",
+                "concatenate", "pad", "slice", "sort", "iota", "convert",
+                "select-and-scatter", "reduce-window", "rng-bit-generator",
+                "exponential-minus-one", "log-plus-one", "cbrt",
+            ):
+                # first-order elementwise flops: one op per result element
+                res_elems = sum(n for _, n in _shape_info(op.result_type))
+                if oc == "fusion" or oc in ELEMENTWISE or oc == "reduce":
+                    costs.flops["elementwise"] += mult * res_elems
+
+            if oc not in SKIP_BYTES:
+                name_l = op.name.lower()
+                res_b = _bytes_of(op.result_type)
+                if oc in ("convert", "copy") or (
+                    oc == "fusion" and _PURE_MOVE_FUSION.match(name_l)
+                ):
+                    # backend dtype-staging / layout pipes: fused into their
+                    # consumers on TPU (no standalone HBM round-trip)
+                    continue
+                if oc in ("dynamic-slice", "gather", "slice") or (
+                    oc == "fusion"
+                    and ("dynamic-slice" in name_l or "gather" in name_l
+                         or "dynamic_slice" in name_l)
+                ):
+                    # reads only the sliced region (≈ result), writes result
+                    io_bytes = 2 * res_b
+                elif oc in ("dynamic-update-slice", "scatter") or (
+                    oc == "fusion"
+                    and ("dynamic-update-slice" in name_l
+                         or "dynamic_update_slice" in name_l
+                         or "scatter" in name_l)
+                ):
+                    # in-place on TPU: read + write of the update region,
+                    # which is the smallest non-trivial operand
+                    ops_b = [
+                        b for b in
+                        (_bytes_of(t) for t in op.operand_types(type_map))
+                        if b > 4
+                    ]
+                    io_bytes = 2 * (min(ops_b) if ops_b else res_b)
+                else:
+                    io_bytes = res_b + sum(
+                        _bytes_of(t) for t in op.operand_types(type_map)
+                    )
+                costs.hbm_bytes += mult * io_bytes
+
+        visited_guard.add((comp_name, mult))
+
+    visit(entry, 1.0)
+    return costs
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (hardware constants from the assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_BF16 = 197e12          # FLOP/s per chip
+PEAK_INT8 = 394e12          # MXU int8 double rate
+PEAK_F32 = PEAK_BF16 / 4.0  # fp32 on the MXU
+HBM_BW = 819e9              # B/s per chip
+ICI_BW = 50e9               # B/s per link (assignment: ~50 GB/s/link)
+
+
+def roofline_terms(costs: HloCosts) -> dict:
+    """Per-chip time lower bounds, in seconds (the HLO is the per-device
+    SPMD program, so no further division by chip count)."""
+    compute_s = (
+        costs.flops.get("bf16", 0.0) / PEAK_BF16
+        + costs.flops.get("int8", 0.0) / PEAK_INT8
+        + costs.flops.get("f32", 0.0) / PEAK_F32
+        + costs.flops.get("elementwise", 0.0) / PEAK_BF16
+    )
+    memory_s = costs.hbm_bytes / HBM_BW
+    collective_s = costs.total_collective_bytes / ICI_BW
+    dominant = max(
+        [("compute", compute_s), ("memory", memory_s), ("collective", collective_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "flops_by_dtype": dict(costs.flops),
+        "hbm_bytes": costs.hbm_bytes,
+        "collective_bytes": dict(costs.collective_bytes),
+        "collective_counts": dict(costs.collective_counts),
+    }

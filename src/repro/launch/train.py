@@ -1,0 +1,169 @@
+"""Training launcher.
+
+Two trainers behind one CLI:
+
+  * ``--arch <paper arch>``  (mlp1..4, vgg8b, vgg11b) — the NITRO-D
+    integer-only LES trainer (the paper's algorithm, core library);
+  * ``--arch <lm arch>``     (qwen3-32b, …) — the sharded LM trainer
+    (bf16/fp32 AdamW or LES-groups mode), sized by ``--scale`` for
+    CPU-budget runs.
+
+Production behaviours wired in: checkpoint/restart (async, manifest),
+preemption checkpointing, straggler logging, deterministic data pipeline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
+                dataset: str, scale: float, seed: int = 0) -> dict:
+    """Integer-only NITRO-D training (paper algorithm)."""
+    from repro.configs import get_paper_config
+    from repro.core import les
+    from repro.data import synthetic
+    from repro.train import checkpoint as ckpt
+    from repro.train.fault_tolerance import PreemptionGuard, StepTimer, StragglerDetector
+
+    ds = synthetic.make_image_dataset(dataset, n_train=4096, n_test=512, seed=seed)
+    cfg = get_paper_config(arch, scale=scale,
+                           input_shape=ds.input_shape if arch.startswith("vgg") else None)
+    if arch.startswith("mlp"):
+        ds = synthetic.flatten_for_mlp(ds)
+        d = ds.input_shape[0]
+        if cfg.input_shape != (d,):
+            from dataclasses import replace
+            cfg = replace(cfg, input_shape=(d,))
+
+    state = les.create_train_state(jax.random.PRNGKey(seed), cfg)
+    start_step = 0
+    checkpointer = ckpt.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+        state, start_step = ckpt.restore(ckpt_dir, state)
+        print(f"[restore] resumed from step {start_step}")
+
+    step_fn = jax.jit(functools.partial(les.train_step, cfg=cfg))
+    guard = PreemptionGuard(install=False)
+    straggler = StragglerDetector()
+    timer = StepTimer()
+
+    it = 0
+    metrics = None
+    while it < steps:
+        for x, y in synthetic.batches(ds.x_train, ds.y_train, batch, seed=it):
+            if it >= steps or guard.requested:
+                break
+            state, metrics = step_fn(
+                state, x=jnp.asarray(x), labels=jnp.asarray(y),
+                key=jax.random.PRNGKey(start_step + it),
+            )
+            dt = timer.lap()
+            if straggler.record(dt):
+                print(f"[straggler] step {it}: {dt:.3f}s vs ewma {straggler.ewma:.3f}s")
+            if it % 50 == 0:
+                print(f"step {it:5d}  loss={int(metrics.loss)}  "
+                      f"correct={int(metrics.correct)}/{batch}")
+            if checkpointer and it > 0 and it % 200 == 0:
+                checkpointer.save(start_step + it, state)
+            it += 1
+        if guard.requested:
+            break
+    if checkpointer:
+        checkpointer.save(start_step + it, state)
+        checkpointer.wait()
+
+    # test accuracy
+    correct = 0
+    for i in range(0, len(ds.x_test) - batch + 1, batch):
+        correct += int(les.eval_step(
+            state, cfg, jnp.asarray(ds.x_test[i:i + batch]),
+            jnp.asarray(ds.y_test[i:i + batch])))
+    n_eval = (len(ds.x_test) // batch) * batch
+    acc = correct / max(n_eval, 1)
+    print(f"[done] test accuracy {acc:.4f} over {n_eval} samples")
+    return {"test_accuracy": acc, "steps": it}
+
+
+def train_lm(arch: str, *, steps: int, batch: int, seq: int, scale: float,
+             ckpt_dir: str | None, les_groups: int = 0, seed: int = 0) -> dict:
+    """Reduced-scale LM training on CPU (same code path as the dry-run)."""
+    from dataclasses import replace
+
+    from repro.configs import get_smoke_config
+    from repro.data.loader import ShardedLoader, synthetic_lm_generator
+    from repro.launch.mesh import make_test_mesh
+    from repro.parallel.sharding import train_rules
+    from repro.train import checkpoint as ckpt
+    from repro.train import trainer
+
+    cfg = get_smoke_config(arch)
+    if les_groups:
+        cfg = replace(cfg, les_groups=les_groups, num_layers=max(cfg.num_layers, 4))
+    mesh = make_test_mesh(1, 1)
+    rules = trainer.resolved_rules(cfg, train_rules(False))
+
+    gen = synthetic_lm_generator(cfg.vocab_size, seq, batch, seed=seed)
+    loader = ShardedLoader(gen, global_batch=batch,
+                           process_index=0, process_count=1)
+    shapes = {"tokens": (batch, seq), "labels": (batch, seq)}
+    step_fn = trainer.build_train_step(cfg, mesh, rules, shapes=shapes,
+                                       donate=False)
+    state = trainer.init_state(jax.random.PRNGKey(seed), cfg)
+
+    start = 0
+    if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+        state, start = ckpt.restore(ckpt_dir, state)
+        print(f"[restore] resumed from step {start}")
+
+    losses = []
+    for it in range(steps):
+        b = next(loader)
+        state, metrics = step_fn(state, {k: jnp.asarray(v) for k, v in b.items()})
+        losses.append(float(metrics["loss"]))
+        if it % 20 == 0:
+            print(f"step {it:4d}  loss={losses[-1]:.4f}  "
+                  f"gnorm={float(metrics['grad_norm']):.3f}")
+    loader.close()
+    if ckpt_dir:
+        ckpt.save(ckpt_dir, start + steps, state)
+    print(f"[done] loss {losses[0]:.4f} → {losses[-1]:.4f}")
+    return {"first_loss": losses[0], "last_loss": losses[-1]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--dataset", default="tiles32")
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--les-groups", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import ARCHS, PAPER_ARCHS
+
+    if args.arch in PAPER_ARCHS:
+        train_nitro(args.arch, steps=args.steps, batch=args.batch,
+                    ckpt_dir=args.ckpt_dir, dataset=args.dataset,
+                    scale=args.scale, seed=args.seed)
+    elif args.arch in ARCHS:
+        train_lm(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
+                 scale=args.scale, ckpt_dir=args.ckpt_dir,
+                 les_groups=args.les_groups, seed=args.seed)
+    else:
+        raise SystemExit(f"unknown arch {args.arch}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""LM-family model zoo: dense/GQA/SWA transformers, RWKV6, RG-LRU hybrid,
+MoE, encoder-decoder, VLM backbone — with NITRO-D technique hooks
+(LES local-loss groups, NITRO int8 matmul numerics)."""
+
+from repro.models.config import ModelConfig, MoESpec
+
+__all__ = ["ModelConfig", "MoESpec"]

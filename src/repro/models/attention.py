@@ -1,0 +1,379 @@
+"""Attention: GQA flash (chunked, online-softmax, custom VJP), SWA, decode.
+
+Implemented in pure XLA ops (not a Pallas kernel) deliberately: the roofline
+methodology reads FLOPs/bytes from the compiled HLO, which treats custom
+calls as opaque — attention must stay visible to the cost model.
+
+Memory: the naive differentiation of a chunked-attention scan saves every
+online-softmax carry (O(S²) total — measured 140 GiB/chip on the llama
+train_4k cell), so ``flash_attention`` carries a **custom VJP** implementing
+the FlashAttention-2 backward: scores are *recomputed* blockwise from the
+saved (q, k, v, out, logsumexp) — O(S) residuals, O(block²) live.
+
+Matmul numerics: bf16 inputs with fp32 accumulation
+(``preferred_element_type``) — full MXU rate, fp32-stable softmax.
+
+Causal handling:
+  * ``masked``   — every (q-block, kv-block) pair computed and masked
+    (2× the causal-triangle FLOPs).  Baseline.
+  * ``triangle`` — scans only the lower-triangle block pairs (exact same
+    output, ~half the attention FLOPs).  §Perf hillclimb lever.
+  * sliding-window — static-length kv band dynamically sliced at the
+    diagonal → true O(S·W) FLOPs for SWA archs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class FlashCfg(NamedTuple):
+    causal: bool
+    window: int | None
+    q_block: int
+    kv_block: int
+    causal_mode: str
+    compute_dtype: str = "bf16"   # matmul-input dtype; accumulation is fp32
+
+
+def _cdt(cfg: FlashCfg):
+    return jnp.bfloat16 if cfg.compute_dtype == "bf16" else jnp.float32
+
+
+def _dot(a, b, dims, dtype):
+    return jax.lax.dot_general(
+        a.astype(dtype), b.astype(dtype), dimension_numbers=dims,
+        preferred_element_type=jnp.float32,
+    )
+
+
+def _scores(cfg, q_blk, k_blk):
+    """(B,G,P,bq,D) × (B,G,bk,D) → (B,G,P,bq,bk) fp32 accumulation."""
+    return _dot(
+        q_blk, k_blk, ((((4,), (3,)), ((0, 1), (0, 1)))), _cdt(cfg)
+    )
+
+
+def _pv(cfg, p_blk, v_blk):
+    """(B,G,P,bq,bk) × (B,G,bk,D) → (B,G,P,bq,D)."""
+    return _dot(
+        p_blk, v_blk, ((((4,), (2,)), ((0, 1), (0, 1)))), _cdt(cfg)
+    )
+
+
+def _mask_for(cfg: FlashCfg, qp, kp):
+    mask = jnp.ones((qp.shape[0], kp.shape[0]), bool)
+    if cfg.causal:
+        mask &= qp[:, None] >= kp[None, :]
+    if cfg.window is not None:
+        mask &= (qp[:, None] - kp[None, :]) < cfg.window
+    return mask
+
+
+def _band(cfg: FlashCfg, nk: int) -> int:
+    if cfg.window is None:
+        return nk
+    return min(nk, -(-(cfg.window - 1) // cfg.kv_block) + 1)
+
+
+def _band_start(cfg: FlashCfg, qi, nk: int, n_band: int):
+    if cfg.window is None:
+        return jnp.asarray(0)
+    # diagonal-aligned band (q and kv blocks may differ in size)
+    diag = (qi * cfg.q_block) // cfg.kv_block
+    return jnp.clip(diag - (n_band - 1), 0, nk - n_band)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _flash_forward(cfg: FlashCfg, q, k, v):
+    """Returns (out, lse) with lse = logsumexp of each score row."""
+    b, g, p, s, d = q.shape
+    s_kv = k.shape[2]
+    bq, bk = min(cfg.q_block, s), min(cfg.kv_block, s_kv)
+    nq, nk = s // bq, s_kv // bk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, g, p, nq, bq, d)
+    kf = k.reshape(b, g, nk, bk, d)
+    vf = v.reshape(b, g, nk, bk, d)
+    q_pos = jnp.arange(s).reshape(nq, bq)
+    k_pos = jnp.arange(s_kv).reshape(nk, bk)
+    n_band = _band(cfg, nk)
+
+    if cfg.causal and cfg.causal_mode == "triangle" and cfg.window is None:
+        return _triangle_forward(cfg, qf, kf, vf, q_pos, k_pos)
+
+    def q_step(_, qi):
+        q_blk = jax.lax.dynamic_index_in_dim(qf, qi, axis=3, keepdims=False)
+        qp = q_pos[qi]
+        j0 = _band_start(cfg, qi, nk, n_band)
+
+        def kv_step(carry, jj):
+            m, l, acc = carry
+            j = j0 + jj
+            k_blk = jax.lax.dynamic_index_in_dim(kf, j, axis=2, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vf, j, axis=2, keepdims=False)
+            s_ij = _scores(cfg, q_blk, k_blk)
+            kp = jax.lax.dynamic_index_in_dim(k_pos, j, axis=0, keepdims=False)
+            s_ij = jnp.where(_mask_for(cfg, qp, kp), s_ij, NEG_INF)
+            m_new = jnp.maximum(m, s_ij.max(axis=-1))
+            pexp = jnp.exp(s_ij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + pexp.sum(axis=-1)
+            acc_new = acc * corr[..., None] + _pv(cfg, pexp, v_blk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, g, p, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, p, bq), jnp.float32)
+        a0 = jnp.zeros((b, g, p, bq, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_band))
+        l_safe = jnp.maximum(l, 1e-30)
+        return None, (acc / l_safe[..., None], m + jnp.log(l_safe))
+
+    _, (blocks, lses) = jax.lax.scan(q_step, None, jnp.arange(nq))
+    out = jnp.moveaxis(blocks, 0, 3).reshape(b, g, p, s, d)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, g, p, s)
+    return out, lse
+
+
+def _triangle_forward(cfg, qf, kf, vf, q_pos, k_pos):
+    """Causal attention over only lower-triangle block pairs."""
+    b, g, p, nq, bq, d = qf.shape
+    nk = kf.shape[2]
+    assert nq == nk, "triangle mode requires equal q/kv block counts"
+    pairs = jnp.asarray(
+        [(i, j) for i in range(nq) for j in range(i + 1)], jnp.int32
+    )
+
+    def step(carry, pair):
+        m, l, acc = carry
+        i, j = pair[0], pair[1]
+        q_blk = jax.lax.dynamic_index_in_dim(qf, i, axis=3, keepdims=False)
+        k_blk = jax.lax.dynamic_index_in_dim(kf, j, axis=2, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vf, j, axis=2, keepdims=False)
+        s_ij = _scores(cfg, q_blk, k_blk)
+        qp = jax.lax.dynamic_index_in_dim(q_pos, i, axis=0, keepdims=False)
+        kp = jax.lax.dynamic_index_in_dim(k_pos, j, axis=0, keepdims=False)
+        s_ij = jnp.where(qp[:, None] >= kp[None, :], s_ij, NEG_INF)
+
+        mi = jax.lax.dynamic_index_in_dim(m, i, axis=0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, axis=0, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, axis=0, keepdims=False)
+        m_new = jnp.maximum(mi, s_ij.max(axis=-1))
+        pexp = jnp.exp(s_ij - m_new[..., None])
+        corr = jnp.exp(mi - m_new)
+        l_new = li * corr + pexp.sum(axis=-1)
+        a_new = ai * corr[..., None] + _pv(cfg, pexp, v_blk)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, axis=0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, axis=0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, axis=0)
+        return (m, l, acc), None
+
+    m0 = jnp.full((nq, b, g, p, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, g, p, bq), jnp.float32)
+    a0 = jnp.zeros((nq, b, g, p, bq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), pairs)
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    s = nq * bq
+    out = jnp.moveaxis(out, 0, 3).reshape(qf.shape[0], qf.shape[1], qf.shape[2], s, qf.shape[5])
+    lse = jnp.moveaxis(lse, 0, 3).reshape(qf.shape[0], qf.shape[1], qf.shape[2], s)
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward (FlashAttention-2): recompute scores blockwise from (q,k,v,lse)
+# ---------------------------------------------------------------------------
+
+
+def _flash_backward(cfg: FlashCfg, res, dout):
+    q, k, v, out, lse = res
+    b, g, p, s, d = q.shape
+    s_kv = k.shape[2]
+    bq, bk = min(cfg.q_block, s), min(cfg.kv_block, s_kv)
+    nq, nk = s // bq, s_kv // bk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, g, p, nq, bq, d)
+    kf = k.reshape(b, g, nk, bk, d)
+    vf = v.reshape(b, g, nk, bk, d)
+    dof = dout.astype(jnp.float32).reshape(b, g, p, nq, bq, d)
+    lsef = lse.reshape(b, g, p, nq, bq)
+    # D_i = rowsum(dO ⊙ O)
+    delta = jnp.sum(
+        dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1
+    ).reshape(b, g, p, nq, bq)
+
+    q_pos = jnp.arange(s).reshape(nq, bq)
+    k_pos = jnp.arange(s_kv).reshape(nk, bk)
+    n_band = _band(cfg, nk)
+
+    def q_step(carry, qi):
+        dk_acc, dv_acc = carry
+        q_blk = jax.lax.dynamic_index_in_dim(qf, qi, axis=3, keepdims=False)
+        do_blk = jax.lax.dynamic_index_in_dim(dof, qi, axis=3, keepdims=False)
+        lse_blk = jax.lax.dynamic_index_in_dim(lsef, qi, axis=3, keepdims=False)
+        dlt_blk = jax.lax.dynamic_index_in_dim(delta, qi, axis=3, keepdims=False)
+        qp = q_pos[qi]
+        j0 = _band_start(cfg, qi, nk, n_band)
+
+        def kv_step(inner, jj):
+            dq_blk, dk_a, dv_a = inner
+            j = j0 + jj
+            k_blk = jax.lax.dynamic_index_in_dim(kf, j, axis=2, keepdims=False)
+            v_blk = jax.lax.dynamic_index_in_dim(vf, j, axis=2, keepdims=False)
+            kp = jax.lax.dynamic_index_in_dim(k_pos, j, axis=0, keepdims=False)
+            s_ij = _scores(cfg, q_blk, k_blk)
+            s_ij = jnp.where(_mask_for(cfg, qp, kp), s_ij, NEG_INF)
+            p_ij = jnp.exp(s_ij - lse_blk[..., None])          # (B,G,P,bq,bk)
+            # dV_j += P^T dO     : contract bq
+            dv_j = _dot(
+                p_ij, do_blk,
+                ((((3,), (3,)), ((0, 1, 2), (0, 1, 2)))), _cdt(cfg),
+            ).sum(axis=2)                                      # sum P groups
+            # dP = dO V^T        : contract d
+            dp_ij = _dot(
+                do_blk, v_blk, ((((4,), (3,)), ((0, 1), (0, 1)))), _cdt(cfg)
+            )
+            ds_ij = p_ij * (dp_ij - dlt_blk[..., None])
+            # dQ_i += dS K_j     : contract bk
+            dq_blk = dq_blk + _dot(
+                ds_ij, k_blk, ((((4,), (2,)), ((0, 1), (0, 1)))), _cdt(cfg)
+            )
+            # dK_j += dS^T Q_i   : contract bq, sum over P
+            dk_j = _dot(
+                ds_ij, q_blk,
+                ((((3,), (3,)), ((0, 1, 2), (0, 1, 2)))), _cdt(cfg),
+            ).sum(axis=2)
+            prev_k = jax.lax.dynamic_index_in_dim(dk_a, j, axis=2, keepdims=False)
+            prev_v = jax.lax.dynamic_index_in_dim(dv_a, j, axis=2, keepdims=False)
+            dk_a = jax.lax.dynamic_update_index_in_dim(
+                dk_a, prev_k + dk_j, j, axis=2
+            )
+            dv_a = jax.lax.dynamic_update_index_in_dim(
+                dv_a, prev_v + dv_j, j, axis=2
+            )
+            return (dq_blk, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((b, g, p, bq, d), jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(n_band)
+        )
+        return (dk_acc, dv_acc), dq_blk * scale
+
+    dk0 = jnp.zeros((b, g, nk, bk, d), jnp.float32)
+    dv0 = jnp.zeros((b, g, nk, bk, d), jnp.float32)
+    (dk_acc, dv_acc), dq_blocks = jax.lax.scan(
+        q_step, (dk0, dv0), jnp.arange(nq)
+    )
+    dq = jnp.moveaxis(dq_blocks, 0, 3).reshape(b, g, p, s, d).astype(q.dtype)
+    dk = dk_acc.reshape(b, g, s_kv, d).astype(k.dtype)
+    dv = dv_acc.reshape(b, g, s_kv, d).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(cfg: FlashCfg, q, k, v):
+    out, _ = _flash_forward(cfg, q, k, v)
+    return out
+
+
+def _flash_fwd_rule(cfg: FlashCfg, q, k, v):
+    out, lse = _flash_forward(cfg, q, k, v)
+    return out, (q, k, v, out, lse)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_backward)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+    causal_mode: str = "masked",
+    compute_dtype: str = "bf16",
+) -> jax.Array:
+    """GQA chunked attention with flash custom-VJP.
+
+    q: (B, G, P, S, D) — G kv groups, P q-heads per group
+    k, v: (B, G, S_kv, D);  returns (B, G, P, S, D) in q's dtype.
+    """
+    b, g, p, s, d = q.shape
+    s_kv = k.shape[2]
+
+    def divisor_block(n, target):
+        c = min(target, n)
+        while n % c != 0:
+            c -= 1
+        return c
+
+    cfg = FlashCfg(
+        causal=causal, window=window,
+        q_block=divisor_block(s, q_block),
+        kv_block=divisor_block(s_kv, kv_block),
+        causal_mode=causal_mode, compute_dtype=compute_dtype,
+    )
+    out = _flash(cfg, q, k, v)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    t: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    q: (B, G, P, D);  k_cache/v_cache: (B, S_cache, G, D);  t: current step.
+    """
+    b, g, p, d = q.shape
+    s_cache = k_cache.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+    s = jax.lax.dot_general(
+        qf.astype(jnp.bfloat16),
+        k_cache.astype(jnp.bfloat16),
+        (((3,), (3,)), ((0, 1), (0, 2))),
+        preferred_element_type=jnp.float32,
+    )  # (B, G, P, S)
+    slot = jnp.arange(s_cache)
+    if window is None:
+        valid = slot[None, :] <= t
+    else:
+        # ring buffer: slot holds position t - ((t - slot) mod S_cache)
+        pos = t - ((t - slot) % s_cache)
+        valid = (pos >= 0) & (pos > t - window)
+        valid = valid[None, :]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jax.lax.dot_general(
+        w.astype(jnp.bfloat16),
+        v_cache.astype(jnp.bfloat16),
+        (((3,), (1,)), ((0, 1), (0, 2))),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(q.dtype)

@@ -1,0 +1,125 @@
+"""Shared model components: norms, RoPE/M-RoPE, initialisers, int8 matmul.
+
+The ``int8_matmul`` path is the NITRO-numerics adaptation for LM matmuls
+(DESIGN.md §4): activations are brought to the int8 operational range with
+a *static power-of-two* scale (2⁶ — the paper's σ=64 operating point) and
+weights are stored int8 against a power-of-two scale frozen at init, so the
+de-scale is a shift, not a learned/calibrated FP multiplier.  The MXU then
+runs at its double int8 rate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shard
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def head_rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head qk-norm (qwen3): normalise the trailing head_dim."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D), positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: tuple[int, ...]
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): the D/2 frequency slots are split into
+    (t, h, w) sections, each rotated by its own position stream.
+
+    x: (B, S, H, D);  positions: (3, B, S) integer t/h/w indices.
+    """
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_freqs(x.shape[-1], theta)                       # (D/2,)
+    # section id per frequency slot → pick the matching position stream
+    sec_ids = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=d_half
+    )                                                            # (D/2,)
+    pos = positions.astype(jnp.float32)                          # (3, B, S)
+    pos_per_slot = pos[sec_ids]                                  # (D/2, B, S)
+    angles = jnp.moveaxis(pos_per_slot, 0, -1) * freqs           # (B, S, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, fan_in, dtype=jnp.float32):
+    scale = 1.0 / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# NITRO int8 matmul path for LM layers
+# ---------------------------------------------------------------------------
+
+ACT_SHIFT = 6  # static activation scale 2⁶ — the paper's σ=64 operating point
+
+
+def quantize_weight_int8(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Quantise against a *power-of-two* per-tensor scale frozen at call
+    time: shift = ceil(log2(max|w|/127)).  Returns (int8 weights, shift)."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)))
+    shift = jnp.ceil(jnp.log2(jnp.maximum(amax / 127.0, 1e-30)))
+    wq = jnp.clip(jnp.round(w.astype(jnp.float32) * 2.0 ** (-shift)), -127, 127)
+    return wq.astype(jnp.int8), shift.astype(jnp.float32)
+
+
+def int8_matmul(x: jax.Array, w_q: jax.Array, w_shift: jax.Array) -> jax.Array:
+    """NITRO-numerics matmul: x·2⁶ → int8, int8×int8→int32 on the MXU,
+    de-scale by the two power-of-two shifts."""
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) * (1 << ACT_SHIFT)), -127, 127)
+    z = jax.lax.dot_general(
+        xq.astype(jnp.int8), w_q,
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    scale = jnp.exp2(w_shift - ACT_SHIFT)
+    return (z.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def matmul(x: jax.Array, w: jax.Array, *, int8: bool = False) -> jax.Array:
+    """Project ``x`` by ``w`` in the configured numerics mode (weights are
+    cast down to the activation/compute dtype — fp32 master, bf16 compute)."""
+    if int8:
+        w_q, w_shift = quantize_weight_int8(w)
+        return int8_matmul(x, w_q, w_shift)
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))

@@ -1,0 +1,429 @@
+"""Model facade: full forward passes, LM loss, prefill/decode steps.
+
+Three entry points (all pure functions, jit/pjit-able):
+
+  * ``train_loss``  — full-sequence forward + next-token CE (+ MoE aux,
+    + LES local-group losses when ``cfg.les_groups > 0``);
+  * ``prefill``     — full-sequence forward that also populates the KV /
+    recurrent caches and returns last-position logits;
+  * ``decode_step`` — single-token step against the caches.
+
+LES mode (the paper's learning algorithm, ported to LMs — DESIGN.md §4):
+the scanned stack is split into ``les_groups`` segments with a
+``stop_gradient`` boundary between them; each segment gets a local
+next-token loss through the shared unembedding.  Gradients are confined to
+their segment exactly like NITRO-D's integer local-loss blocks, which (a)
+removes the cross-segment backward dependency chain and (b) lets XLA
+overlap segment backwards with downstream forwards.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Stack execution
+# ---------------------------------------------------------------------------
+
+
+def _unit_forward(cfg: ModelConfig, unit_params: dict, x, positions, causal_mode):
+    """One scan unit (e.g. ('rec','rec','attn')) over a full sequence.
+    Recurrent states start at zero per segment in train mode (standard for
+    non-streaming training). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.scan_unit):
+        p = unit_params[f"u{i}"]
+        if kind == "attn":
+            x, a = T.attn_layer(
+                p, cfg, x, positions, window=cfg.sliding_window,
+                causal_mode=causal_mode,
+            )
+            aux += a
+        elif kind == "local_attn":
+            x, a = T.attn_layer(
+                p, cfg, x, positions, window=cfg.local_attn_window,
+                causal_mode=causal_mode,
+            )
+            aux += a
+        elif kind == "rec":
+            state = T.rglru_mod.init_rglru_state(cfg, x.shape[0])
+            x, _ = T.rec_layer(p, cfg, x, state)
+        elif kind == "rwkv":
+            state = T.rwkv_mod.init_rwkv_state(cfg, x.shape[0])
+            x, _ = T.rwkv_mod.rwkv_layer(p, cfg, x, state)
+        else:
+            raise ValueError(kind)
+    return x, aux
+
+
+def run_stack(
+    params: dict, cfg: ModelConfig, x: jax.Array, positions,
+    *, causal_mode: str = "masked", collect_les: bool = False,
+):
+    """Scan the stacked units + tail.  Returns (x, aux, les_taps)."""
+
+    def body(carry, unit_params):
+        h, aux = carry
+        h = shard(h, "batch", "seq_sp", None)
+        h, a = _unit_forward(cfg, unit_params, h, positions, causal_mode)
+        return (h, aux + a), None
+
+    # nothing_saveable: only the (bf16, sequence-sharded) carry survives per
+    # layer — without it, partial-eval saves the layer-entry f32 upcast of
+    # the residual stream (2× the bytes) instead of the carry itself
+    body_fn = (
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.remat else body
+    )
+
+    les_taps = []
+    aux = jnp.zeros((), jnp.float32)
+    if collect_les and cfg.les_groups > 0:
+        reps = cfg.scan_repeats
+        per = max(reps // cfg.les_groups, 1)
+        offset = 0
+        while offset < reps:
+            n = min(per, reps - offset)
+            seg = jax.tree_util.tree_map(
+                lambda t: jax.lax.slice_in_dim(t, offset, offset + n, axis=0),
+                params["scan"],
+            )
+            (x, aux), _ = jax.lax.scan(body_fn, (x, aux), seg)
+            les_taps.append(x)
+            x = jax.lax.stop_gradient(x)  # confine gradients to the group
+            offset += n
+    else:
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux), params["scan"])
+
+    for p, kind in zip(params["tail"], cfg.tail):
+        x, aux = _tail_forward(cfg, p, kind, x, positions, causal_mode, aux)
+    return x, aux, les_taps
+
+
+def _tail_forward(cfg, p, kind, x, positions, causal_mode, aux):
+    if kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if kind == "attn" else cfg.local_attn_window
+        x, a = T.attn_layer(p, cfg, x, positions, window=window, causal_mode=causal_mode)
+        return x, aux + a
+    if kind == "rec":
+        state = T.rglru_mod.init_rglru_state(cfg, x.shape[0])
+        x, _ = T.rec_layer(p, cfg, x, state)
+        return x, aux
+    if kind == "rwkv":
+        state = T.rwkv_mod.init_rwkv_state(cfg, x.shape[0])
+        x, _ = T.rwkv_mod.rwkv_layer(p, cfg, x, state)
+        return x, aux
+    raise ValueError(kind)
+
+
+def _embed(params, cfg: ModelConfig, tokens_or_embeds):
+    if cfg.embeds_input:
+        return tokens_or_embeds.astype(cfg.dtype)
+    scale = jnp.asarray(jnp.sqrt(cfg.d_model), cfg.dtype)
+    return params["embed"].astype(cfg.dtype)[tokens_or_embeds] * scale
+
+
+def _logits(params, cfg: ModelConfig, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    # bf16 MXU inputs, fp32 accumulation (stable softmax downstream)
+    logits = jax.lax.dot_general(
+        x.astype(cfg.dtype), w.astype(cfg.dtype),
+        dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return shard(logits, "batch", None, "vocab") if logits.ndim == 3 else shard(logits, "batch", "vocab")
+
+
+def _positions(cfg: ModelConfig, b: int, s: int):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(pos[None], (3, b, s))  # text-stream M-RoPE
+    return pos
+
+
+def run_encoder(params, cfg: ModelConfig, enc_embeds: jax.Array):
+    """Whisper encoder: non-causal stack over stub frontend embeddings."""
+
+    def body(h, unit_params):
+        h = T.attn_layer(
+            unit_params["u0"], cfg, h, None, window=None, causal=False
+        )[0]
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, enc_embeds.astype(cfg.dtype), params["encoder"])
+    return T.rms_norm(h, params["enc_final_ln"])
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logz = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logz, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def _pick_chunk(s: int, target: int = 512) -> int:
+    c = min(target, s)
+    while s % c != 0:
+        c -= 1
+    return c
+
+
+def _chunked_xent(params, cfg: ModelConfig, x: jax.Array, labels: jax.Array) -> jax.Array:
+    """Next-token CE without materialising (B, S, V) logits.
+
+    The unembedding + softmax run per sequence chunk inside a rematted
+    scan: peak logits memory drops from S/chunk× (2.5 GiB/chip for the
+    150k-vocab archs at 4k×16) to one chunk.  Backward recomputes each
+    chunk's logits (checkpoint) — the standard large-vocab CE treatment.
+    """
+    b, s, _ = x.shape
+    chunk = _pick_chunk(s)
+    n_chunks = s // chunk
+
+    def body(acc, idx):
+        xc = jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, idx * chunk, chunk, axis=1)
+        logits = _logits(params, cfg, xc)
+        logz = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logz, lc[..., None], axis=-1)[..., 0]
+        return acc - jnp.sum(ll), None
+
+    loss_sum, _ = jax.lax.scan(
+        jax.checkpoint(body), jnp.zeros((), jnp.float32), jnp.arange(n_chunks)
+    )
+    return loss_sum / (b * s)
+
+
+def train_loss(
+    params: dict, cfg: ModelConfig, batch: dict, *, causal_mode: str = "masked"
+) -> tuple[jax.Array, dict]:
+    """Next-token CE over the full sequence.
+
+    batch: {"tokens": (B,S) int32  (or "embeds": (B,S,d) for stub-frontend
+    archs), "labels": (B,S) int32, optional "positions", "enc_embeds"}.
+    """
+    inp = batch["embeds"] if cfg.embeds_input else batch["tokens"]
+    b, s = batch["labels"].shape
+    x = _embed(params, cfg, inp)
+    x = shard(x, "batch", "seq_sp", None)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _positions(cfg, b, s)
+
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = run_encoder(params, cfg, batch["enc_embeds"])
+
+    if cfg.encoder_layers:
+        x, aux, les_taps = _run_decoder_with_cross(
+            params, cfg, x, positions, enc_out, causal_mode
+        )
+    else:
+        x, aux, les_taps = run_stack(
+            params, cfg, x, positions, causal_mode=causal_mode,
+            collect_les=cfg.les_groups > 0,
+        )
+
+    x = T.rms_norm(x, params["final_ln"])
+    loss = _chunked_xent(params, cfg, x, batch["labels"])
+    metrics = {"ce": loss, "aux": aux}
+    if les_taps:
+        # LES: every group (incl. the last) trains through its local head;
+        # the main CE then reaches only the output head (x was stop-graded
+        # at the last tap) — exactly NITRO-D's output-layer treatment.
+        les_loss = jnp.zeros((), jnp.float32)
+        for tap in les_taps:
+            les_loss += _chunked_xent(
+                params, cfg, T.rms_norm(tap, params["final_ln"]), batch["labels"]
+            )
+        loss = loss + les_loss / len(les_taps)
+        metrics["les"] = les_loss
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux / max(cfg.num_layers, 1)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _run_decoder_with_cross(params, cfg, x, positions, enc_out, causal_mode):
+    """Whisper decoder: self-attn (causal) + cross-attn per layer."""
+
+    def body(carry, unit_params):
+        h, aux = carry
+        p = unit_params["u0"]
+        h, a = T.attn_layer(p, cfg, h, positions, window=None, causal_mode=causal_mode)
+        h = T.cross_attn(p, cfg, h, enc_out)
+        return (h, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(
+        body_fn, (x, jnp.zeros((), jnp.float32)), params["scan"]
+    )
+    return x, aux, []
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params: dict, cfg: ModelConfig, batch: dict, cache: dict
+) -> tuple[jax.Array, dict]:
+    """Full-sequence forward that fills the caches.
+
+    Implemented as the train-mode forward (cheap matmul-form for recurrent
+    archs, flash for attention) plus cache population from the computed
+    K/V/state tensors.
+    """
+    inp = batch["embeds"] if cfg.embeds_input else batch["tokens"]
+    b, s = (inp.shape[0], inp.shape[1])
+    x = _embed(params, cfg, inp)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _positions(cfg, b, s)
+
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = run_encoder(params, cfg, batch["enc_embeds"])
+
+    def body(carry, scan_in):
+        h = carry
+        unit_params, unit_cache = scan_in
+        new_unit_cache = {}
+        for i, kind in enumerate(cfg.scan_unit):
+            p = unit_params[f"u{i}"]
+            c = unit_cache[f"u{i}"]
+            if kind in ("attn", "local_attn", "attn_cross"):
+                window = (
+                    cfg.local_attn_window if kind == "local_attn"
+                    else cfg.sliding_window
+                )
+                # cache is filled from the layer *input* (same tensor the
+                # in-layer attention projects), before the layer mutates h
+                new_unit_cache[f"u{i}"] = _fill_kv_cache(p, cfg, h, positions, c)
+                h, _ = T.attn_layer(p, cfg, h, positions, window=window)
+                if kind == "attn_cross":
+                    h = T.cross_attn(p, cfg, h, enc_out)
+            elif kind == "rec":
+                state = T.rglru_mod.init_rglru_state(cfg, h.shape[0])
+                h, st = T.rec_layer(p, cfg, h, state)
+                new_unit_cache[f"u{i}"] = st
+            elif kind == "rwkv":
+                state = T.rwkv_mod.init_rwkv_state(cfg, h.shape[0])
+                h, st = T.rwkv_mod.rwkv_layer(p, cfg, h, state)
+                new_unit_cache[f"u{i}"] = st
+        return h, new_unit_cache
+
+    x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+
+    new_tail = []
+    for p, kind, c in zip(params["tail"], cfg.tail, cache["tail"]):
+        if kind in ("attn", "local_attn"):
+            window = cfg.sliding_window if kind == "attn" else cfg.local_attn_window
+            new_tail.append(_fill_kv_cache(p, cfg, x, positions, c))
+            x, _ = T.attn_layer(p, cfg, x, positions, window=window)
+        elif kind == "rec":
+            state = T.rglru_mod.init_rglru_state(cfg, x.shape[0])
+            x, st = T.rec_layer(p, cfg, x, state)
+            new_tail.append(st)
+        elif kind == "rwkv":
+            state = T.rwkv_mod.init_rwkv_state(cfg, x.shape[0])
+            x, st = T.rwkv_mod.rwkv_layer(p, cfg, x, state)
+            new_tail.append(st)
+
+    x = T.rms_norm(x, params["final_ln"])
+    logits = _logits(params, cfg, x[:, -1, :])
+    new_cache = {"scan": scan_cache, "tail": new_tail, "t": jnp.asarray(s, jnp.int32)}
+    return logits, new_cache
+
+
+def _fill_kv_cache(p, cfg: ModelConfig, x_in, positions, cache: T.LayerCache):
+    """Compute K/V from the layer input and lay them into the (ring) cache.
+    For windows shorter than the sequence, only the last ``window`` entries
+    are kept, rotated so slot ``p % window`` holds position ``p``."""
+    xn = T.rms_norm(x_in, p["ln1"])
+    _, k, v = T._project_qkv(p, cfg, xn, positions)
+    k = T._expand_kv(k, cfg.kv_repeat)
+    v = T._expand_kv(v, cfg.kv_repeat)
+    s_cache = cache.k.shape[1]
+    s = k.shape[1]
+    if s >= s_cache:  # keep the last window, ring-ordered
+        k_win, v_win = k[:, -s_cache:], v[:, -s_cache:]
+        start = (s - s_cache) % s_cache
+        k_new = jnp.roll(k_win, start, axis=1)
+        v_new = jnp.roll(v_win, start, axis=1)
+    else:
+        k_new = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1)
+        v_new = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1)
+    return T.LayerCache(k=k_new.astype(cache.k.dtype), v=v_new.astype(cache.v.dtype))
+
+
+def decode_step(
+    params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+    enc_out: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """One greedy decode step.  tokens: (B,) int32 → (logits, new cache)."""
+    b = tokens.shape[0]
+    t = cache["t"]
+    # decode always consumes token ids (stub-frontend archs emit text too)
+    scale = jnp.asarray(jnp.sqrt(cfg.d_model), cfg.dtype)
+    x = params["embed"].astype(cfg.dtype)[tokens] * scale
+
+    def body(carry, scan_in):
+        h = carry
+        unit_params, unit_cache = scan_in
+        new_unit_cache = {}
+        for i, kind in enumerate(cfg.scan_unit):
+            p = unit_params[f"u{i}"]
+            c = unit_cache[f"u{i}"]
+            if kind in ("attn", "local_attn", "attn_cross"):
+                window = (
+                    cfg.local_attn_window if kind == "local_attn"
+                    else cfg.sliding_window
+                )
+                h, nc = T.attn_layer_decode(
+                    p, cfg, h, t, c, window=window,
+                    enc_out=enc_out if kind == "attn_cross" else None,
+                )
+                new_unit_cache[f"u{i}"] = nc
+            elif kind == "rec":
+                h, st = T.rec_layer(p, cfg, h, c, decode=True)
+                new_unit_cache[f"u{i}"] = st
+            elif kind == "rwkv":
+                h, st = T.rwkv_mod.rwkv_layer(p, cfg, h, c, decode=True)
+                new_unit_cache[f"u{i}"] = st
+        return h, new_unit_cache
+
+    x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+
+    new_tail = []
+    for p, kind, c in zip(params["tail"], cfg.tail, cache["tail"]):
+        if kind in ("attn", "local_attn"):
+            window = cfg.sliding_window if kind == "attn" else cfg.local_attn_window
+            x, nc = T.attn_layer_decode(p, cfg, x, t, c, window=window, enc_out=enc_out)
+            new_tail.append(nc)
+        elif kind == "rec":
+            x, st = T.rec_layer(p, cfg, x, c, decode=True)
+            new_tail.append(st)
+        elif kind == "rwkv":
+            x, st = T.rwkv_mod.rwkv_layer(p, cfg, x, c, decode=True)
+            new_tail.append(st)
+
+    x = T.rms_norm(x[:, None, :], params["final_ln"])[:, 0]
+    logits = _logits(params, cfg, x)
+    return logits, {"scan": scan_cache, "tail": new_tail, "t": t + 1}

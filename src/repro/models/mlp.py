@@ -1,0 +1,189 @@
+"""Dense MLP (SwiGLU/GeLU) and sort-free capacity-based MoE.
+
+MoE uses the scatter/gather dispatch (position-in-expert via one-hot
+cumsum): tokens are placed into an (E, C, d) buffer, experts run as one
+batched matmul, and results are combined with the router's top-k weights.
+Sharding: ``expert_parallel=True`` shards the E dim over the ``model`` axis
+(EP — OLMoE's 64 experts, 4/chip at TP16); ``False`` shards each expert's
+ffn dim (TP — Mixtral's 8 wide experts).  Overflowing tokens beyond
+capacity are dropped (standard capacity-factor semantics), contributing
+zero — the combine gather returns zeros for dropped slots.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, matmul
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.moe is not None:
+        e, fe = cfg.moe.num_experts, cfg.moe.d_ff_expert
+        ks = jax.random.split(key, 4)
+        p = {
+            "router": dense_init(ks[0], (d, e), d),
+            "wi": dense_init(ks[1], (e, d, fe), d),
+            "wo": dense_init(ks[2], (e, fe, d), fe),
+        }
+        if cfg.mlp_type == "swiglu":
+            p["wg"] = dense_init(ks[3], (e, d, fe), d)
+        return p
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(ks[0], (d, f), d),
+        "wo": dense_init(ks[1], (f, d), f),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["wg"] = dense_init(ks[2], (d, f), d)
+    return p
+
+
+def mlp_logical_axes(cfg: ModelConfig) -> dict:
+    if cfg.moe is not None:
+        axes = {
+            "router": ("p_fsdp", None),
+            "wi": ("p_expert", "p_fsdp", "p_mlp_expert"),
+            "wo": ("p_expert", "p_mlp_expert", "p_fsdp"),
+        }
+        if cfg.mlp_type == "swiglu":
+            axes["wg"] = ("p_expert", "p_fsdp", "p_mlp_expert")
+        return axes
+    axes = {"wi": ("p_fsdp", "p_mlp"), "wo": ("p_mlp", "p_fsdp")}
+    if cfg.mlp_type == "swiglu":
+        axes["wg"] = ("p_fsdp", "p_mlp")
+    return axes
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def dense_mlp(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = matmul(x, params["wi"], int8=cfg.int8_matmul)
+    if cfg.mlp_type == "swiglu":
+        h = _act(h, "silu") * matmul(x, params["wg"], int8=cfg.int8_matmul)
+    else:
+        h = _act(h, "gelu")
+    h = shard(h, "batch", "seq", "mlp")
+    return matmul(h, params["wo"], int8=cfg.int8_matmul)
+
+
+def _moe_local(params, cfg: ModelConfig, xt, gate_vals, expert_idx, capacity):
+    """Per-data-shard MoE dispatch → expert compute → combine.
+
+    Runs on each shard's LOCAL tokens (inside shard_map, or globally when no
+    mesh is active): the dispatch scatter/gather never crosses shards, so
+    the SPMD partitioner never sees an opaque-index scatter.  Capacity is
+    per-shard (the standard local-capacity MoE semantics).
+    """
+    moe = cfg.moe
+    n, d = xt.shape
+    flat_e = expert_idx.reshape(-1)                            # (n·k,)
+    onehot = jax.nn.one_hot(flat_e, moe.num_experts, dtype=jnp.int32)
+    pos = (jnp.cumsum(onehot, axis=0) - 1) * onehot
+    pos_in_e = pos.sum(axis=-1)
+    keep = pos_in_e < capacity
+
+    # row scatter with a single linear index; drops → trash row
+    lin = jnp.where(
+        keep, flat_e * capacity + pos_in_e, moe.num_experts * capacity
+    )
+    xk = jnp.repeat(xt, moe.top_k, axis=0)                     # (n·k, d)
+    buffer = jnp.zeros((moe.num_experts * capacity + 1, d), xt.dtype)
+    buffer = buffer.at[lin].set(xk)
+    buffer = buffer[:-1].reshape(moe.num_experts, capacity, d)
+    if cfg.moe_shard_buffers:
+        # pin the dispatch buffer and expert activations to the expert
+        # sharding so EP expert matmuls stay shard-local (one buffer
+        # all-to-all at dispatch instead of per-einsum all-reduces)
+        buffer = shard(buffer, "expert", None, None)
+
+    # expert compute (model-axis sharding of wi/wo handled by the auto
+    # partitioner: TP on the ffn dim for mixtral, EP over experts for olmoe)
+    h = jnp.einsum("ecd,edf->ecf", buffer, params["wi"].astype(xt.dtype))
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buffer, params["wg"].astype(xt.dtype))
+        h = jax.nn.silu(h) * g
+    else:
+        h = jax.nn.gelu(h)
+    if cfg.moe_shard_buffers:
+        h = shard(h, "expert", None, "mlp_expert")
+    y = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(xt.dtype))
+    if cfg.moe_shard_buffers:
+        y = shard(y, "expert", None, None)
+
+    # combine: local row gather
+    y_flat = y.reshape(moe.num_experts * capacity, d)
+    gathered = jnp.take(y_flat, jnp.where(keep, lin, 0), axis=0)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    weighted = gathered.astype(jnp.float32) * gate_vals.reshape(-1)[:, None]
+    return weighted.reshape(n, moe.top_k, d).sum(axis=1).astype(xt.dtype)
+
+
+def moe_mlp(
+    params: dict, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k MoE. x: (B, S, d) → (out, aux_load_balance_loss)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import sharding as shr
+
+    moe = cfg.moe
+    b, s, d = x.shape
+    n = b * s
+    xt = x.reshape(n, d)
+    xt = shard(xt, "batch", None)
+
+    logits = (xt.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, moe.top_k)    # (N, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9
+    )
+
+    # load-balance aux loss (Switch): E · Σ_e load_e · prob_e
+    onehot_n = jax.nn.one_hot(expert_idx, moe.num_experts, dtype=jnp.float32)
+    load = onehot_n.sum(axis=(0, 1)) / (n * moe.top_k)
+    imp = probs.mean(axis=0)
+    aux = moe.num_experts * jnp.sum(load * imp)
+
+    ctx = shr._current()
+    if ctx is None:
+        capacity = int(CAPACITY_FACTOR * n * moe.top_k / moe.num_experts) + 1
+        out = _moe_local(params, cfg, xt, gate_vals, expert_idx, capacity)
+    else:
+        mesh, rules = ctx
+        batch_axes = rules.get("batch")
+        axes = (batch_axes,) if isinstance(batch_axes, str) else tuple(batch_axes or ())
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        n_shards = 1
+        for a in axes:
+            n_shards *= mesh.shape[a]
+        n_local = n // max(n_shards, 1)
+        capacity = int(CAPACITY_FACTOR * n_local * moe.top_k / moe.num_experts) + 1
+        if not axes:
+            out = _moe_local(params, cfg, xt, gate_vals, expert_idx, capacity)
+        else:
+            # manual over the batch axes only; expert/ffn sharding of the
+            # weights stays with the auto partitioner inside the body
+            param_specs = jax.tree_util.tree_map(lambda _: P(), params)
+            out = jax.shard_map(
+                lambda p, a, g, e: _moe_local(p, cfg, a, g, e, capacity),
+                mesh=mesh,
+                in_specs=(param_specs, P(axes), P(axes), P(axes)),
+                out_specs=P(axes),
+                axis_names=frozenset(axes),
+                check_vma=False,
+            )(params, xt, gate_vals, expert_idx)
+
+    out = shard(out, "batch", None)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,157 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    i_t = σ(x_t W_x + b_x)                      (input gate)
+    r_t = σ(x_t W_a + b_a)                      (recurrence gate)
+    a_t = exp(-c · r_t · softplus(Λ))           (data-dependent decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Gates use block-diagonal weights with 16 blocks — block count chosen so the
+block dim shards exactly over the 16-way ``model`` axis (one block per TP
+rank, zero-comm gating).  The recurrence is per-channel, so TP over the
+lru width is collective-free; the sequence dim is handled by
+``lax.associative_scan`` (log-depth on TPU) for train/prefill and a single
+fused step for decode.
+
+Full recurrent block (Griffin layout): y = W_out( GeLU(x W_g) ⊙
+RG-LRU(conv1d₄(x W_in)) ).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+N_GATE_BLOCKS = 16
+RGLRU_C = 8.0
+CONV_WIDTH = 4
+
+
+class RglruState(NamedTuple):
+    h: jax.Array       # (B, W) recurrent state
+    conv: jax.Array    # (B, CONV_WIDTH-1, W) conv1d tail
+
+
+def init_rglru_layer(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    bw = w // N_GATE_BLOCKS
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "w_in": dense_init(ks[0], (d, w), d),
+        "w_gate": dense_init(ks[1], (d, w), d),
+        "w_out": dense_init(ks[2], (w, d), w),
+        "conv_w": dense_init(ks[3], (CONV_WIDTH, w), CONV_WIDTH),
+        # block-diagonal input/recurrence gates: (blocks, bw, bw)
+        "gate_x": dense_init(ks[4], (N_GATE_BLOCKS, bw, bw), bw),
+        "gate_a": dense_init(ks[5], (N_GATE_BLOCKS, bw, bw), bw),
+        "lam": jnp.full((w,), 2.0, jnp.float32),  # softplus(Λ) init ≈ 2.1
+    }
+
+
+def rglru_logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ln": (None,),
+        "w_in": ("p_fsdp", "p_rnn"),
+        "w_gate": ("p_fsdp", "p_rnn"),
+        "w_out": ("p_rnn", "p_fsdp"),
+        "conv_w": (None, "p_rnn"),
+        "gate_x": ("p_rnn_block", None, None),
+        "gate_a": ("p_rnn_block", None, None),
+        "lam": ("p_rnn",),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., W) → (..., W) through (blocks, bw, bw) block-diagonal w."""
+    shape = x.shape
+    b = w.shape[0]
+    xb = x.reshape(*shape[:-1], b, shape[-1] // b)
+    out = jnp.einsum("...bi,bij->...bj", xb, w.astype(x.dtype))
+    return out.reshape(shape)
+
+
+def _gates(p, x):
+    f32 = jnp.float32
+    i_t = jax.nn.sigmoid(_block_diag(x, p["gate_x"]).astype(f32))
+    r_t = jax.nn.sigmoid(_block_diag(x, p["gate_a"]).astype(f32))
+    log_a = -RGLRU_C * r_t * jax.nn.softplus(p["lam"].astype(f32))
+    a_t = jnp.exp(log_a)
+    # √(1−a²) via log-space for stability at a → 1
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a_t, beta * i_t * x.astype(f32)
+
+
+def rglru_scan(p, x: jax.Array, h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sequence recurrence via associative scan.  x: (B,S,W) → (B,S,W)."""
+    a, b = _gates(p, x)                     # (B,S,W) fp32
+    a = shard(a, "batch", None, "rnn")
+    b = shard(b, "batch", None, "rnn")
+
+    def combine(l, r):
+        a_l, b_l = l
+        a_r, b_r = r
+        return a_l * a_r, b_l * a_r + b_r
+
+    # fold the incoming state into the first step (concat, not scatter —
+    # scatters drop the sharding annotation through SPMD)
+    first = b[:, :1, :] + a[:, :1, :] * h0.astype(jnp.float32)[:, None, :]
+    b = jnp.concatenate([first, b[:, 1:, :]], axis=1)
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = shard(h, "batch", None, "rnn")
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(p, x: jax.Array, h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single decode step.  x: (B,W)."""
+    a, b = _gates(p, x[:, None, :])
+    h = a[:, 0] * h0.astype(jnp.float32) + b[:, 0]
+    return h.astype(x.dtype), h
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, tail: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d (width 4).  x: (B,S,W), tail: (B,3,W)."""
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype)
+        for i in range(CONV_WIDTH)
+    )
+    return out, xp[:, -(CONV_WIDTH - 1) :, :]
+
+
+def rglru_block(
+    p: dict, cfg: ModelConfig, x: jax.Array, state: RglruState, *, decode: bool = False
+) -> tuple[jax.Array, RglruState]:
+    """Full Griffin recurrent block (pre-norm, residual added by caller)."""
+    xn = rms_norm(x if not decode else x[:, None, :], p["ln"])
+    gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", xn, p["w_gate"].astype(xn.dtype)))
+    u = jnp.einsum("...d,dw->...w", xn, p["w_in"].astype(xn.dtype))
+    u = shard(u, "batch", None, "rnn") if not decode else u
+    if decode:
+        conv_in = jnp.concatenate([state.conv.astype(u.dtype), u], axis=1)
+        u_c = sum(conv_in[:, i, :] * p["conv_w"][i].astype(u.dtype) for i in range(CONV_WIDTH))
+        new_tail = conv_in[:, 1:, :]
+        h, h_last = rglru_step(p, u_c, state.h)
+        y = h * gate[:, 0]
+        out = jnp.einsum("bw,wd->bd", y, p["w_out"].astype(y.dtype))
+        return out, RglruState(h=h_last, conv=new_tail)
+    u_c, new_tail = _causal_conv(u, p["conv_w"], state.conv)
+    h, h_last = rglru_scan(p, u_c, state.h)
+    y = h * gate
+    y = shard(y, "batch", None, "rnn")
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(y.dtype))
+    return out, RglruState(h=h_last, conv=new_tail)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> RglruState:
+    w = cfg.lru_width or cfg.d_model
+    return RglruState(
+        h=jnp.zeros((batch, w), jnp.float32),
+        conv=jnp.zeros((batch, CONV_WIDTH - 1, w), jnp.bfloat16),
+    )

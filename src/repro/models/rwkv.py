@@ -1,0 +1,247 @@
+"""RWKV6 ("Finch") layer: attention-free token mixing with data-dependent
+per-channel decay, plus squared-ReLU channel mixing.
+
+Semantics (per head, key/value dims D)::
+
+    out_t = r_tᵀ ( S_{t-1} + diag(u) k_t v_tᵀ )
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ          w_t ∈ (0,1) data-dependent
+
+TPU adaptation (DESIGN.md §2): the token-by-token recurrence is VPU-bound;
+we use the *chunked* GLA formulation so all FLOPs run on the MXU.  With
+L_t = Σ_{u≤t} log w_u (per channel, chunk-local):
+
+    inter :  out_t += (r_t ⊙ e^{L_{t-1}})ᵀ S₀
+    intra :  M_{ts} = (r_t ⊙ e^{L_{t-1}}) · (k_s ⊙ e^{-L_s}),  s < t  (matmul!)
+    bonus :  out_t += (r_t ⊙ u · k_t) v_t
+    state :  S_C = diag(e^{L_C}) S₀ + (k ⊙ e^{L_C - L})ᵀ v
+
+The per-channel decay folds *inside* the contraction, so intra-chunk work is
+two (C×D)·(D×C/D×D) matmuls — exactly what the MXU wants.  Chunk length 64
+keeps e^{±L} in fp32 range (decays are products of ≤64 values clamped below
+by exp(-36)).  A `lax.scan` carries S across chunks; decode is the naive
+single-step update (identical math, C = 1).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+CHUNK = 64
+DECAY_LORA = 64
+MIN_LOG_W = -8.0  # clamp: w ≥ e^-8 keeps chunk-local e^{-L} ≤ e^512 ... bounded via chunk reset
+
+
+class RwkvState(NamedTuple):
+    s: jax.Array        # (B, H, Dk, Dv) wkv state
+    x_prev_tm: jax.Array  # (B, d) last token (time-mix shift)
+    x_prev_cm: jax.Array  # (B, d) last token (channel-mix shift)
+
+
+def init_rwkv_layer(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        # time-mix lerp coefficients for (r, k, v, g, w)
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "wr": dense_init(ks[0], (d, d), d),
+        "wk": dense_init(ks[1], (d, d), d),
+        "wv": dense_init(ks[2], (d, d), d),
+        "wg": dense_init(ks[3], (d, d), d),
+        "wo": dense_init(ks[4], (d, d), d),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "wA": dense_init(ks[5], (d, DECAY_LORA), d),
+        "wB": dense_init(ks[6], (DECAY_LORA, d), DECAY_LORA) * 0.1,
+        "u": jnp.zeros((d,), jnp.float32),      # current-token bonus
+        "ln_head": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "mu_cm": 0.5 * jnp.ones((2, d), jnp.float32),
+        "cm_k": dense_init(ks[7], (d, f), d),
+        "cm_v": dense_init(ks[8], (f, d), f),
+        "cm_r": dense_init(ks[9], (d, d), d),
+    }
+
+
+def rwkv_logical_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": (None,), "ln2": (None,),
+        "mu": (None, None),
+        "wr": ("p_fsdp", "p_rnn"), "wk": ("p_fsdp", "p_rnn"),
+        "wv": ("p_fsdp", "p_rnn"), "wg": ("p_fsdp", "p_rnn"),
+        "wo": ("p_rnn", "p_fsdp"),
+        "w0": ("p_rnn",), "wA": ("p_fsdp", None), "wB": (None, "p_rnn"),
+        "u": ("p_rnn",), "ln_head": (None,),
+        "mu_cm": (None, None),
+        "cm_k": ("p_fsdp", "p_mlp"), "cm_v": ("p_mlp", "p_fsdp"),
+        "cm_r": ("p_fsdp", "p_rnn"),
+    }
+
+
+def _shift(x: jax.Array, x_prev: jax.Array) -> jax.Array:
+    """Token shift: (B,S,d) rolled right by one, front-filled from state."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, x_shift, mu):
+    return x + (x_shift - x) * mu
+
+
+def _decay_log_w(p, xw: jax.Array) -> jax.Array:
+    """log w_t ∈ [MIN_LOG_W, 0): w = exp(-exp(w0 + tanh(x A) B))."""
+    lw = -jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + jnp.tanh(xw.astype(jnp.float32) @ p["wA"].astype(jnp.float32))
+        @ p["wB"].astype(jnp.float32)
+    )
+    return jnp.clip(lw, MIN_LOG_W, -1e-6)
+
+
+def _wkv_chunk(carry_s, rkvwl, u):
+    """One chunk of the GLA recurrence. All (B,H,C,D) fp32."""
+    r, k, v, lw = rkvwl
+    s0 = carry_s                                   # (B,H,Dk,Dv)
+    lcum = jnp.cumsum(lw, axis=2)                  # L_t, inclusive
+    l_prev = lcum - lw                             # L_{t-1}
+    r_t = r * jnp.exp(l_prev)
+    k_t = k * jnp.exp(-lcum)
+    # intra-chunk: strictly-lower-triangular attention matrix
+    m = jnp.einsum("bhtd,bhsd->bhts", r_t, k_t)
+    c = r.shape[2]
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    m = jnp.where(tri, m, 0.0)
+    out = jnp.einsum("bhts,bhsv->bhtv", m, v)
+    # inter-chunk: contribution of the incoming state
+    out = out + jnp.einsum("bhtd,bhdv->bhtv", r_t, s0)
+    # current-token bonus (diagonal)
+    out = out + jnp.einsum("bhtd,bhtv->bhtv", r * u * k, v)[..., : out.shape[-1]]
+    # state update
+    l_tot = lcum[:, :, -1:, :]                     # L_C
+    s_new = s0 * jnp.exp(l_tot.squeeze(2))[..., None] + jnp.einsum(
+        "bhsd,bhsv->bhdv", k * jnp.exp(l_tot - lcum), v
+    )
+    return s_new, out
+
+
+def rwkv_time_mix(
+    p: dict, cfg: ModelConfig, x: jax.Array, state: RwkvState
+) -> tuple[jax.Array, RwkvState]:
+    """Token-mixing over a full sequence (train/prefill), chunked."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xs = _shift(x, state.x_prev_tm)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (_mix(x, xs, mu[i]) for i in range(5))
+
+    f32 = jnp.float32
+    r = (xr @ p["wr"].astype(x.dtype)).astype(f32).reshape(b, s, h, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).astype(f32).reshape(b, s, h, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).astype(f32).reshape(b, s, h, hd)
+    g = jax.nn.silu((xg @ p["wg"].astype(x.dtype)).astype(f32))
+    lw = _decay_log_w(p, xw).reshape(b, s, h, hd)
+    u = p["u"].astype(f32).reshape(1, h, 1, hd)
+
+    # (B,S,H,D) → (B,H,S,D), chunked over S
+    r, k, v, lw = (jnp.moveaxis(t, 2, 1) for t in (r, k, v, lw))
+    r = shard(r, "batch", "rnn", None, None)
+    n_chunks = max(s // CHUNK, 1)
+    ck = s // n_chunks
+
+    def body(carry, xs_chunk):
+        return _wkv_chunk(carry, xs_chunk, u)
+
+    rc, kc, vc, lwc = (
+        t.reshape(b, h, n_chunks, ck, hd).transpose(2, 0, 1, 3, 4)
+        for t in (r, k, v, lw)
+    )
+    s_final, outs = jax.lax.scan(body, state.s, (rc, kc, vc, lwc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd)
+    out = jnp.moveaxis(out, 1, 2).reshape(b, s, d)
+
+    # per-head groupnorm, output gate, projection
+    out = rms_norm(out.reshape(b, s, h, hd), jnp.zeros((hd,), f32)).reshape(b, s, d)
+    out = out * (1.0 + p["ln_head"].astype(f32))
+    out = (out * g).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    new_state = RwkvState(s=s_final, x_prev_tm=x[:, -1, :], x_prev_cm=state.x_prev_cm)
+    return out, new_state
+
+
+def rwkv_time_mix_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, state: RwkvState
+) -> tuple[jax.Array, RwkvState]:
+    """Single-token recurrence (the naive form — C = 1)."""
+    b, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xs = state.x_prev_tm
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xg, xw = (x + (xs - x) * mu[i] for i in range(5))
+
+    f32 = jnp.float32
+    r = (xr @ p["wr"].astype(x.dtype)).astype(f32).reshape(b, h, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).astype(f32).reshape(b, h, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).astype(f32).reshape(b, h, hd)
+    g = jax.nn.silu((xg @ p["wg"].astype(x.dtype)).astype(f32))
+    w = jnp.exp(_decay_log_w(p, xw)).reshape(b, h, hd)
+    u = p["u"].astype(f32).reshape(1, h, hd)
+
+    kv = jnp.einsum("bhd,bhv->bhdv", k, v)
+    out = jnp.einsum("bhd,bhdv->bhv", r, state.s + u[..., None] * kv)
+    s_new = state.s * w[..., None] + kv
+    out = out.reshape(b, 1, d)
+    out = rms_norm(out.reshape(b, 1, h, hd), jnp.zeros((hd,), f32)).reshape(b, 1, d)
+    out = out * (1.0 + p["ln_head"].astype(f32))
+    out = (out * g[:, None, :].reshape(b, 1, d)).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return out.squeeze(1), RwkvState(s=s_new, x_prev_tm=x, x_prev_cm=state.x_prev_cm)
+
+
+def rwkv_channel_mix(
+    p: dict, cfg: ModelConfig, x: jax.Array, state: RwkvState, *, decode: bool = False
+) -> tuple[jax.Array, RwkvState]:
+    if decode:
+        xs = state.x_prev_cm
+        new_prev = x
+    else:
+        xs = _shift(x, state.x_prev_cm)
+        new_prev = x[:, -1, :]
+    mu = p["mu_cm"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(x.dtype)))
+    k = shard(k, "batch", "seq", "mlp") if not decode else k
+    r = jax.nn.sigmoid(xr @ p["cm_r"].astype(x.dtype))
+    out = r * (k @ p["cm_v"].astype(x.dtype))
+    return out, RwkvState(s=state.s, x_prev_tm=state.x_prev_tm, x_prev_cm=new_prev)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RwkvState:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return RwkvState(
+        s=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        x_prev_tm=jnp.zeros((batch, d), jnp.bfloat16),
+        x_prev_cm=jnp.zeros((batch, d), jnp.bfloat16),
+    )
+
+
+def rwkv_layer(
+    p: dict, cfg: ModelConfig, x: jax.Array, state: RwkvState, *, decode: bool = False
+) -> tuple[jax.Array, RwkvState]:
+    """Full RWKV6 block: time-mix + channel-mix with pre-norms."""
+    if decode:
+        h, state = rwkv_time_mix_decode(p, cfg, rms_norm(x, p["ln1"]), state)
+    else:
+        h, state = rwkv_time_mix(p, cfg, rms_norm(x, p["ln1"]), state)
+    x = x + h
+    h, state = rwkv_channel_mix(p, cfg, rms_norm(x, p["ln2"]), state, decode=decode)
+    return x + h, state

@@ -1,0 +1,421 @@
+"""The generic decoder/encoder stack covering every assigned architecture.
+
+Layer layout is ``cfg.scan_unit × cfg.scan_repeats + cfg.tail``: parameters
+of each kind are stacked on a leading dim and executed through ``lax.scan``
+(small HLO even for 80-layer models); heterogeneous units (RecurrentGemma's
+(rec, rec, attn)) scan as one fused step.
+
+GQA sharding strategy (DESIGN.md §5): query heads are sharded over the
+``model`` axis; KV heads are *expanded* (repeated) to align with the query
+head sharding — Megatron-style KV duplication, collective-free attention.
+``cfg.kv_repeat`` (set per config for the 16-wide model axis) controls the
+stored-cache duplication so decode cache shards land on the chips that
+consume them.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mlp as mlp_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.common import (
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    head_rms_norm,
+    matmul,
+    rms_norm,
+)
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+
+def init_attn_layer(key, cfg: ModelConfig, *, cross: bool = False) -> dict:
+    d, h, g, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "wq": dense_init(ks[0], (d, h, hd), d),
+        "wk": dense_init(ks[1], (d, g, hd), d),
+        "wv": dense_init(ks[2], (d, g, hd), d),
+        "wo": dense_init(ks[3], (h, hd, d), h * hd),
+        "mlp": mlp_mod.init_mlp(ks[4], cfg),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    if cross:
+        p["ln_x"] = jnp.zeros((d,), jnp.float32)
+        p["xq"] = dense_init(ks[5], (d, h, hd), d)
+        p["xk"] = dense_init(ks[6], (d, g, hd), d)
+        p["xv"] = dense_init(ks[7], (d, g, hd), d)
+        p["xo"] = dense_init(ks[5], (h, hd, d), h * hd)
+    return p
+
+
+def attn_logical_axes(cfg: ModelConfig, *, cross: bool = False) -> dict:
+    p = {
+        "ln1": (None,), "ln2": (None,),
+        "wq": ("p_fsdp", "p_heads", None),
+        "wk": ("p_fsdp", "p_kv_heads", None),
+        "wv": ("p_fsdp", "p_kv_heads", None),
+        "wo": ("p_heads", None, "p_fsdp"),
+        "mlp": mlp_mod.mlp_logical_axes(cfg),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    if cross:
+        p.update({
+            "ln_x": (None,),
+            "xq": ("p_fsdp", "p_heads", None),
+            "xk": ("p_fsdp", "p_kv_heads", None),
+            "xv": ("p_fsdp", "p_kv_heads", None),
+            "xo": ("p_heads", None, "p_fsdp"),
+        })
+    return p
+
+
+def init_layer(key, cfg: ModelConfig, kind: str) -> dict:
+    if kind in ("attn", "local_attn", "enc_attn"):
+        return init_attn_layer(key, cfg)
+    if kind == "attn_cross":
+        return init_attn_layer(key, cfg, cross=True)
+    if kind == "rec":
+        p = init_rglru_layer_with_mlp(key, cfg)
+        return p
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_layer(key, cfg)
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def init_rglru_layer_with_mlp(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = rglru_mod.init_rglru_layer(k1, cfg)
+    p["ln2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    p["mlp"] = mlp_mod.init_mlp(k2, cfg)
+    return p
+
+
+def layer_logical_axes(cfg: ModelConfig, kind: str) -> dict:
+    if kind in ("attn", "local_attn", "enc_attn"):
+        return attn_logical_axes(cfg)
+    if kind == "attn_cross":
+        return attn_logical_axes(cfg, cross=True)
+    if kind == "rec":
+        p = rglru_mod.rglru_logical_axes(cfg)
+        p["ln2"] = (None,)
+        p["mlp"] = mlp_mod.mlp_logical_axes(cfg)
+        return p
+    if kind == "rwkv":
+        return rwkv_mod.rwkv_logical_axes(cfg)
+    raise ValueError(kind)
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    """Full model parameters: embeddings + scanned stack + tail (+ encoder)."""
+    keys = jax.random.split(key, 6)
+    d, v = cfg.d_model, cfg.vocab_size
+    # gemma-style: σ_embed = 1/√d, inputs rescaled by √d at lookup — keeps
+    # tied-unembedding logits O(1) at init
+    params: dict[str, Any] = {
+        "embed": dense_init(keys[0], (v, d), d),
+        "final_ln": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (d, v), d)
+
+    unit_keys = jax.random.split(keys[2], cfg.scan_repeats)
+    scan_params = []
+    for uk in unit_keys:
+        layer_keys = jax.random.split(uk, len(cfg.scan_unit))
+        scan_params.append(
+            {f"u{i}": init_layer(k, cfg, kind)
+             for i, (kind, k) in enumerate(zip(cfg.scan_unit, layer_keys))}
+        )
+    params["scan"] = _stack(scan_params)
+
+    tail_keys = jax.random.split(keys[3], max(len(cfg.tail), 1))
+    params["tail"] = [
+        init_layer(k, cfg, kind) for kind, k in zip(cfg.tail, tail_keys)
+    ]
+
+    if cfg.encoder_layers:
+        enc_keys = jax.random.split(keys[4], cfg.encoder_layers)
+        params["encoder"] = _stack(
+            [{"u0": init_layer(k, cfg, "enc_attn")} for k in enc_keys]
+        )
+        params["enc_final_ln"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def logical_axes(cfg: ModelConfig) -> dict:
+    """Same structure as init_params, leaves = logical axis tuples."""
+    axes: dict[str, Any] = {
+        "embed": ("p_vocab", "p_embed"),
+        "final_ln": (None,),
+    }
+    if not cfg.tie_embeddings:
+        axes["unembed"] = ("p_embed", "p_vocab")
+
+    def stacked(tree):
+        return jax.tree_util.tree_map(
+            lambda t: ("stack", *t), tree, is_leaf=lambda x: isinstance(x, tuple)
+        )
+
+    axes["scan"] = stacked({
+        f"u{i}": layer_logical_axes(cfg, kind)
+        for i, kind in enumerate(cfg.scan_unit)
+    })
+    axes["tail"] = [layer_logical_axes(cfg, kind) for kind in cfg.tail]
+    if cfg.encoder_layers:
+        axes["encoder"] = stacked({"u0": layer_logical_axes(cfg, "enc_attn")})
+        axes["enc_final_ln"] = (None,)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent caches
+# ---------------------------------------------------------------------------
+
+
+class LayerCache(NamedTuple):
+    """Cache for one attention layer (decode).  KV heads stored pre-repeated
+    ``cfg.kv_repeat``× so the shard layout matches the query-head shards."""
+
+    k: jax.Array  # (B, S_cache, G·R, hd)
+    v: jax.Array
+
+
+def _cache_len(cfg: ModelConfig, kind: str, max_seq: int) -> int:
+    if kind == "local_attn":
+        return min(max_seq, cfg.local_attn_window)
+    if cfg.sliding_window is not None:
+        return min(max_seq, cfg.sliding_window)
+    return max_seq
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    if kind in ("attn", "local_attn", "attn_cross"):
+        g = cfg.num_kv_heads * cfg.kv_repeat
+        s = _cache_len(cfg, kind, max_seq)
+        shape = (batch, s, g, cfg.head_dim)
+        return LayerCache(
+            k=jnp.zeros(shape, cfg.dtype), v=jnp.zeros(shape, cfg.dtype)
+        )
+    if kind == "rec":
+        return rglru_mod.init_rglru_state(cfg, batch)
+    if kind == "rwkv":
+        return rwkv_mod.init_rwkv_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    def unit_cache():
+        return {
+            f"u{i}": init_layer_cache(cfg, kind, batch, max_seq)
+            for i, kind in enumerate(cfg.scan_unit)
+        }
+
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.scan_repeats, *x.shape)),
+        unit_cache(),
+    )
+    return {
+        "scan": stacked,
+        "tail": [
+            init_layer_cache(cfg, kind, batch, max_seq) for kind in cfg.tail
+        ],
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    """Sharding for cache pytrees (kv heads → model via the repeat trick)."""
+    def layer_axes(kind, stacked: bool):
+        pre = ("stack",) if stacked else ()
+        if kind in ("attn", "local_attn", "attn_cross"):
+            kv = ("batch", "kv_seq", "kv_cache_heads", None)
+            return LayerCache(k=pre + kv, v=pre + kv)
+        if kind == "rec":
+            return rglru_mod.RglruState(
+                h=pre + ("batch", "rnn"), conv=pre + ("batch", None, "rnn")
+            )
+        if kind == "rwkv":
+            return rwkv_mod.RwkvState(
+                s=pre + ("batch", "rnn", None, None),
+                x_prev_tm=pre + ("batch", None),
+                x_prev_cm=pre + ("batch", None),
+            )
+        raise ValueError(kind)
+
+    return {
+        "scan": {
+            f"u{i}": layer_axes(kind, True)
+            for i, kind in enumerate(cfg.scan_unit)
+        },
+        "tail": [layer_axes(kind, False) for kind in cfg.tail],
+        "t": (),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Layer forward
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, cfg: ModelConfig, xn, positions):
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"].astype(xn.dtype))
+    k = jnp.einsum("bsd,dgk->bsgk", xn, p["wk"].astype(xn.dtype))
+    v = jnp.einsum("bsd,dgk->bsgk", xn, p["wv"].astype(xn.dtype))
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"])
+        k = head_rms_norm(k, p["k_norm"])
+    if positions is not None:
+        if cfg.mrope_sections is not None:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, repeats: int) -> jax.Array:
+    """(B,S,G,D) → (B,S,G·r,D): Megatron KV duplication for head-sharding."""
+    if repeats == 1:
+        return k
+    return jnp.repeat(k, repeats, axis=2)
+
+
+def attn_layer(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions,
+    *,
+    window: int | None,
+    causal: bool = True,
+    causal_mode: str = "masked",
+) -> jax.Array:
+    """Full-sequence attention + MLP block (train / prefill / encoder)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    xn = rms_norm(x, p["ln1"])
+    q, k, v = _project_qkv(p, cfg, xn, positions)
+    q = shard(q, "batch", None, "heads", None)
+    # expand KV to the full query-head count (collective-free GQA)
+    k = _expand_kv(k, cfg.q_per_kv)
+    v = _expand_kv(v, cfg.q_per_kv)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    # (B,S,H,D) → (B,H,1,S,D): flash signature (B, groups, per-group, S, D)
+    qf = jnp.moveaxis(q, 1, 2)[:, :, None]
+    kf = jnp.moveaxis(k, 1, 2)
+    vf = jnp.moveaxis(v, 1, 2)
+    out = flash_attention(
+        qf, kf, vf, causal=causal, window=window, causal_mode=causal_mode
+    )
+    out = jnp.moveaxis(out[:, :, 0], 1, 2)          # (B,S,H,D)
+    out = shard(out, "batch", None, "heads", None)
+    attn_out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype))
+    # row-parallel output lands directly on the sequence-sharded residual:
+    # forces reduce-scatter (1× wire) instead of all-reduce-then-slice (2×)
+    attn_out = shard(attn_out, "batch", "seq_sp", None)
+    x = x + attn_out
+
+    xn2 = rms_norm(x, p["ln2"])
+    if cfg.moe is not None:
+        mlp_out, aux = mlp_mod.moe_mlp(p["mlp"], cfg, xn2)
+    else:
+        mlp_out, aux = mlp_mod.dense_mlp(p["mlp"], cfg, xn2), jnp.zeros((), jnp.float32)
+    mlp_out = shard(mlp_out, "batch", "seq_sp", None)
+    return x + mlp_out, aux
+
+
+def cross_attn(p: dict, cfg: ModelConfig, x: jax.Array, enc_out: jax.Array) -> jax.Array:
+    """Encoder-decoder cross attention (whisper). Non-causal, no cache."""
+    xn = rms_norm(x, p["ln_x"])
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["xq"].astype(xn.dtype))
+    k = jnp.einsum("bsd,dgk->bsgk", enc_out, p["xk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dgk->bsgk", enc_out, p["xv"].astype(enc_out.dtype))
+    k = _expand_kv(k, cfg.q_per_kv)
+    v = _expand_kv(v, cfg.q_per_kv)
+    qf = jnp.moveaxis(q, 1, 2)[:, :, None]
+    kf = jnp.moveaxis(k, 1, 2)
+    vf = jnp.moveaxis(v, 1, 2)
+    out = flash_attention(qf, kf, vf, causal=False, window=None)
+    out = jnp.moveaxis(out[:, :, 0], 1, 2)
+    return x + jnp.einsum("bshk,hkd->bsd", out, p["xo"].astype(out.dtype))
+
+
+def attn_layer_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    t: jax.Array,
+    cache: LayerCache,
+    *,
+    window: int | None,
+    enc_out: jax.Array | None = None,
+) -> tuple[jax.Array, LayerCache]:
+    """Single-token attention + MLP with cache update.  x: (B, d)."""
+    b, d = x.shape
+    xn = rms_norm(x[:, None, :], p["ln1"])
+    pos = t[None, None].astype(jnp.int32) if cfg.mrope_sections is None else (
+        jnp.broadcast_to(t, (3, b, 1)).astype(jnp.int32)
+    )
+    q, k, v = _project_qkv(p, cfg, xn, pos)
+    # write this step's KV (duplicated R×) into the ring slot
+    s_cache = cache.k.shape[1]
+    slot = t % s_cache
+    k_new = _expand_kv(k, cfg.kv_repeat)[:, 0]      # (B, G·R, D)
+    v_new = _expand_kv(v, cfg.kv_repeat)[:, 0]
+    new_cache = LayerCache(
+        k=jax.lax.dynamic_update_index_in_dim(cache.k, k_new, slot, axis=1),
+        v=jax.lax.dynamic_update_index_in_dim(cache.v, v_new, slot, axis=1),
+    )
+    # group query heads onto the duplicated-KV slots
+    g_pad = cfg.num_kv_heads * cfg.kv_repeat
+    per = cfg.num_heads // g_pad
+    qd = q[:, 0].reshape(b, g_pad, per, cfg.head_dim)
+    out = decode_attention(
+        qd, new_cache.k, new_cache.v, t,
+        window=window if window is not None else None,
+    )
+    out = out.reshape(b, cfg.num_heads, cfg.head_dim)
+    attn_out = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(out.dtype))
+    x = x + attn_out
+    if enc_out is not None:
+        x = cross_attn(p, cfg, x[:, None, :], enc_out)[:, 0]
+    xn2 = rms_norm(x[:, None, :], p["ln2"])
+    if cfg.moe is not None:
+        mlp_out, _ = mlp_mod.moe_mlp(p["mlp"], cfg, xn2)
+    else:
+        mlp_out = mlp_mod.dense_mlp(p["mlp"], cfg, xn2)
+    return x + mlp_out[:, 0], new_cache
+
+
+def rec_layer(p, cfg, x, state, *, decode=False):
+    """RG-LRU block + MLP (recurrentgemma 'rec' layer)."""
+    h, new_state = rglru_mod.rglru_block(p, cfg, x, state, decode=decode)
+    x = x + h
+    xn = rms_norm(x[:, None, :] if decode else x, p["ln2"])
+    out = mlp_mod.dense_mlp(p["mlp"], cfg, xn)
+    return x + (out[:, 0] if decode else out), new_state

@@ -1,0 +1,140 @@
+"""Logical-axis sharding: one rule table maps model-space axis names to mesh
+axes, so changing the parallelism strategy is a dict edit, not a model edit.
+
+Models annotate tensors with *logical* axes (``"batch"``, ``"embed"``,
+``"heads"``, ``"mlp"``, ``"kv_seq"``, ``"expert"``, …).  A ``ShardingRules``
+context installed by the launcher resolves those names against the active
+mesh.  Outside any context every annotation is a no-op, so the same model
+code runs on 1 CPU device (tests) and on a 512-chip multi-pod mesh
+(dry-run/production) unchanged.
+
+Rule sets provided:
+
+  * ``train_rules``  — DP×TP with FSDP-style weight sharding: the TP dim of
+    every weight goes to ``model``, the other dim to ``data`` (ZeRO-3-like
+    storage; XLA inserts the gather), batch to ``("pod", "data")``.
+  * ``serve_rules``  — TP-only weights (replicated over ``data``; no
+    optimiser state at inference), batch to ``("pod", "data")``,
+    KV-cache heads to ``model``.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _current() -> tuple[Mesh, Mapping[str, Any]] | None:
+    return getattr(_state, "active", None)
+
+
+@contextmanager
+def use_rules(mesh: Mesh, rules: Mapping[str, Any]):
+    """Install (mesh, logical→mesh rules) for the enclosed region."""
+    prev = _current()
+    _state.active = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.active = prev
+
+
+def resolve(axes: Sequence[str | None]) -> P:
+    """Translate logical axis names to a PartitionSpec under active rules."""
+    ctx = _current()
+    if ctx is None:
+        return P()
+    _, rules = ctx
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Annotate ``x`` with logical axes; no-op without an active context."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(axes))
+    )
+
+
+def named_sharding(mesh: Mesh, rules: Mapping[str, Any], axes: Sequence[str | None]) -> NamedSharding:
+    spec = P(*[rules.get(a) if a is not None else None for a in axes])
+    return NamedSharding(mesh, spec)
+
+
+def _is_axes_tuple(x) -> bool:
+    """A leaf is a tuple of axis names — NOT a NamedTuple of such tuples
+    (caches are NamedTuples whose *fields* are the leaves)."""
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x
+    )
+
+
+def tree_shardings(mesh: Mesh, rules: Mapping[str, Any], logical_tree):
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings."""
+    return jax.tree_util.tree_map(
+        lambda axes: named_sharding(mesh, rules, axes),
+        logical_tree,
+        is_leaf=_is_axes_tuple,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rule tables (DESIGN.md §5).  ``data_axes``/``pod`` collapse automatically on
+# single-pod meshes: rules reference only axis names present in the mesh.
+# ---------------------------------------------------------------------------
+
+
+def train_rules(multi_pod: bool = False) -> dict[str, Any]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        # activations
+        "batch": batch,
+        "seq": None,
+        "seq_sp": "model",       # sequence-parallel segments between blocks
+        "embed": None,
+        "heads": "model",
+        # KV heads < 16 on most GQA archs: weights/activations replicated
+        # (Megatron KV duplication); the *stored cache* is duplicated
+        # kv_repeat× to exactly 16 and shards on its own axis below.
+        "kv_heads": None,
+        "kv_cache_heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",        # EP archs (olmoe); overridden to None for TP-MoE
+        "mlp_expert": None,       # TP-MoE archs (mixtral) override to "model"
+        "expert_cap": "data",     # MoE dispatch-buffer capacity dim
+        # parameters: TP dim → model, FSDP storage dim → data
+        "p_embed": "data",
+        "p_vocab": "model",
+        "p_heads": "model",
+        "p_kv_heads": None,
+        "p_mlp": "model",
+        "p_expert": "model",
+        "p_mlp_expert": None,
+        "p_rnn": "model",
+        "p_rnn_block": "model",
+        "p_fsdp": "data",
+        # recurrent / conv states
+        "rnn": "model",
+        "kv_seq": None,
+        "stack": None,           # scan-stacked layer dim — never sharded
+    }
+
+
+def serve_rules(multi_pod: bool = False) -> dict[str, Any]:
+    rules = train_rules(multi_pod)
+    rules.update({
+        "p_embed": None,   # weights TP-only at inference (replicated on data)
+        "p_fsdp": None,
+        "seq_sp": None,
+    })
+    return rules

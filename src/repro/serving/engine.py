@@ -1,0 +1,70 @@
+"""Minimal batched serving engine: continuous prefill → greedy decode.
+
+Production posture without production scope: fixed-batch synchronous
+engine (one prefill per request batch, step-lock decode), the pattern the
+decode_32k / long_500k dry-run cells lower.  Request padding, EOS handling
+and per-request stop make it usable by the examples; the multi-chip
+sharding comes from the same ``build_prefill``/``build_decode_step``
+builders the dry-run compiles.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    generated: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_seq: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self._decode = jax.jit(
+            lambda p, t, c: lm.decode_step(p, cfg, t, c)
+        )
+
+    def generate(self, requests: list[Request]) -> list[Request]:
+        """Run a batch of requests to completion (greedy)."""
+        cfg = self.cfg
+        b = len(requests)
+        prompt_len = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, prompt_len), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, prompt_len - len(r.prompt):] = r.prompt  # left-pad
+
+        cache = T.init_cache(cfg, batch=b, max_seq=self.max_seq)
+        logits, cache = lm.prefill(
+            self.params, cfg, {"tokens": jnp.asarray(toks)}, cache
+        )
+        steps = max(r.max_new_tokens for r in requests)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        for _ in range(steps):
+            for i, r in enumerate(requests):
+                if not r.done:
+                    tok = int(cur[i])
+                    r.generated.append(tok)
+                    if r.eos_id is not None and tok == r.eos_id:
+                        r.done = True
+                    if len(r.generated) >= r.max_new_tokens:
+                        r.done = True
+            if all(r.done for r in requests):
+                break
+            logits, cache = self._decode(self.params, cur, cache)
+            cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        return requests

@@ -1,0 +1,2 @@
+"""Training substrate: optimiser, sharded step builder, checkpoints,
+fault tolerance."""

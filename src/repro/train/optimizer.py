@@ -1,0 +1,82 @@
+"""AdamW for the LM substrate (no optax in this container).
+
+State is two fp32 moments with the same sharding as the parameters
+(FSDP-sharded under train rules → ZeRO-like optimiser-state sharding for
+free).  Includes global-norm clipping and decoupled weight decay.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jax.Array
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def update(
+    params,
+    grads,
+    state: AdamWState,
+    *,
+    lr: float | jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    """One AdamW step; returns (params, state, grad_norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads
+    )
+    count = state.count + 1
+    t = count.astype(jnp.float32)
+    mu = jax.tree_util.tree_map(
+        lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads
+    )
+    nu = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads
+    )
+
+    def upd(p, m, v):
+        mhat = m / (1 - b1 ** t)
+        vhat = v / (1 - b2 ** t)
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, AdamWState(mu=mu, nu=nu, count=count), gnorm
+
+
+def lr_schedule(step: jax.Array, *, peak: float, warmup: int = 200,
+                total: int = 10_000) -> jax.Array:
+    """Linear warmup → cosine decay."""
+    s = step.astype(jnp.float32)
+    warm = peak * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,190 @@
+"""Sharded LM train/serve step builders.
+
+``build_train_step(cfg, mesh, rules)`` returns a jit-compiled function with
+explicit in/out shardings derived from the logical-axis tables — the same
+object the dry-run lowers for the 256/512-chip meshes and the e2e examples
+execute on CPU.  Handles:
+
+  * FSDP+TP parameter shardings from ``transformer.logical_axes``;
+  * AdamW with the same shardings for both moments (ZeRO-style);
+  * activation rematerialisation (per scan unit, inside the model);
+  * cross-pod gradient handling: XLA reduces over ``pod``+``data`` as part
+    of the batch-sharded loss gradient (int8-EF compression path available
+    via ``parallel.compress`` in the shard_map trainer).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import lm
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as shr
+from repro.train import optimizer as opt
+
+
+def resolved_rules(cfg: ModelConfig, base_rules: dict) -> dict:
+    rules = dict(base_rules)
+    for key, value in cfg.rule_overrides:
+        if key in ("serve_batch_data_only",):
+            continue  # launcher marker, not a logical axis
+        rules[key] = value
+    return rules
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules: dict):
+    axes = T.logical_axes(cfg)
+    return shr.tree_shardings(mesh, rules, axes)
+
+
+def batch_spec(cfg: ModelConfig, mesh, rules: dict, *, shapes: dict):
+    """NamedShardings for the input batch dict."""
+    b_axes = rules.get("batch")
+
+    def spec_for(name, ndim):
+        if name == "positions" and cfg.mrope_sections is not None:
+            return NamedSharding(mesh, P(None, b_axes, None))
+        lead = [b_axes] + [None] * (ndim - 1)
+        return NamedSharding(mesh, P(*lead))
+
+    return {k: spec_for(k, len(v)) for k, v in shapes.items()}
+
+
+def loss_fn(params, cfg: ModelConfig, batch, causal_mode="masked"):
+    if cfg.cast_params_once:
+        # one explicit cast at the step boundary — the backward of this cast
+        # converts bf16 cotangents to fp32 *after* the data-axis reduction,
+        # so weight gathers and grad reductions move bf16 on the wire
+        params = jax.tree_util.tree_map(
+            lambda p: p.astype(cfg.dtype) if p.dtype == jnp.float32 else p,
+            params,
+        )
+    return lm.train_loss(params, cfg, batch, causal_mode=causal_mode)
+
+
+def train_step(state, cfg: ModelConfig, batch, *, causal_mode="masked",
+               total_steps: int = 10_000):
+    """Pure step: (params, opt, step) + batch → new state + metrics."""
+    params, opt_state, step = state
+    (loss, metrics), grads = jax.value_and_grad(
+        loss_fn, has_aux=True
+    )(params, cfg, batch, causal_mode)
+    lr = opt.lr_schedule(step, peak=cfg.learning_rate, total=total_steps)
+    new_params, new_opt, gnorm = opt.update(
+        params, grads, opt_state,
+        lr=lr, weight_decay=cfg.weight_decay,
+    )
+    metrics = dict(metrics)
+    metrics["grad_norm"] = gnorm
+    metrics["lr"] = lr
+    return (new_params, new_opt, step + 1), metrics
+
+
+def build_train_step(cfg: ModelConfig, mesh, rules: dict, *, shapes: dict,
+                     causal_mode: str = "masked", donate: bool = True):
+    """jit-compiled train step with explicit in/out shardings.
+
+    ``shapes``: dict name → shape tuple for the batch inputs (used only to
+    build shardings; the returned fn takes (state, batch)).
+    """
+    p_shard = param_shardings(cfg, mesh, rules)
+    opt_shard = opt.AdamWState(
+        mu=p_shard, nu=p_shard,
+        count=NamedSharding(mesh, P()),
+    )
+    state_shard = (p_shard, opt_shard, NamedSharding(mesh, P()))
+    b_shard = batch_spec(cfg, mesh, rules, shapes=shapes)
+
+    def fn(state, batch):
+        # install the logical-axis rules so in-model shard() constraints
+        # resolve against this mesh during tracing
+        with shr.use_rules(mesh, rules):
+            return train_step(state, cfg=cfg, batch=batch,
+                              causal_mode=causal_mode)
+
+    return jax.jit(
+        fn,
+        in_shardings=(state_shard, b_shard),
+        out_shardings=(state_shard, None),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+def init_state(key, cfg: ModelConfig):
+    params = T.init_params(key, cfg)
+    return (params, opt.init(params), jnp.zeros((), jnp.int32))
+
+
+def abstract_state(key, cfg: ModelConfig):
+    """ShapeDtypeStructs for the train state — used by the dry-run (no
+    allocation for 72B-parameter models on a CPU host)."""
+    return jax.eval_shape(functools.partial(init_state, cfg=cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def build_decode_step(cfg: ModelConfig, mesh, rules: dict, *, has_enc: bool = False):
+    """jit-compiled single-token decode with cache shardings."""
+    p_axes = T.logical_axes(cfg)
+    p_shard = shr.tree_shardings(mesh, rules, p_axes)
+    c_axes = T.cache_logical_axes(cfg)
+    c_shard = shr.tree_shardings(mesh, rules, c_axes)
+    b_axes = rules.get("batch")
+    tok_shard = NamedSharding(mesh, P(b_axes))
+    out_shard = (NamedSharding(mesh, P(b_axes, rules.get("vocab"))), c_shard)
+
+    if has_enc:
+        enc_shard = NamedSharding(mesh, P(b_axes, None, None))
+
+        def fn_enc(params, tokens, cache, enc_out):
+            with shr.use_rules(mesh, rules):
+                return lm.decode_step(params, cfg, tokens, cache, enc_out=enc_out)
+
+        return jax.jit(
+            fn_enc,
+            in_shardings=(p_shard, tok_shard, c_shard, enc_shard),
+            out_shardings=out_shard,
+            donate_argnums=(2,),
+        )
+
+    def fn(params, tokens, cache):
+        with shr.use_rules(mesh, rules):
+            return lm.decode_step(params, cfg, tokens, cache)
+
+    return jax.jit(
+        fn,
+        in_shardings=(p_shard, tok_shard, c_shard),
+        out_shardings=out_shard,
+        donate_argnums=(2,),
+    )
+
+
+def build_prefill(cfg: ModelConfig, mesh, rules: dict, *, shapes: dict):
+    p_axes = T.logical_axes(cfg)
+    p_shard = shr.tree_shardings(mesh, rules, p_axes)
+    c_axes = T.cache_logical_axes(cfg)
+    c_shard = shr.tree_shardings(mesh, rules, c_axes)
+    b_shard = batch_spec(cfg, mesh, rules, shapes=shapes)
+
+    def fn(params, batch, cache):
+        with shr.use_rules(mesh, rules):
+            return lm.prefill(params, cfg, batch, cache)
+
+    return jax.jit(
+        fn,
+        in_shardings=(p_shard, b_shard, c_shard),
+        out_shardings=(
+            NamedSharding(mesh, P(rules.get("batch"), rules.get("vocab"))),
+            c_shard,
+        ),
+        donate_argnums=(2,),
+    )

@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates a REDUCED same-family config and
+runs one forward/train step + one prefill/decode step on CPU, asserting
+output shapes and the absence of NaNs.  Full configs are exercised only
+via the dry-run (ShapeDtypeStructs, no allocation).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.models import lm
+from repro.models import transformer as T
+
+
+def make_batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.embeds_input:
+        batch["embeds"] = jnp.asarray(
+            rng.normal(0, 1, (b, s, cfg.d_model)), jnp.float32
+        )
+        if cfg.mrope_sections:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, None], (3, b, s)
+            )
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32
+        )
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (b, cfg.encoder_seq, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+ALL_ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+class TestArchSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = get_smoke_config(arch)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        batch = make_batch(cfg)
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.train_loss, has_aux=True
+        )(params, cfg, batch)
+        assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+        assert float(loss) > 0
+        # one SGD step must produce finite params (the 'train step')
+        new_params = jax.tree_util.tree_map(lambda p, g: p - 1e-3 * g, params, grads)
+        for leaf in jax.tree_util.tree_leaves(new_params):
+            assert jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))
+        # gradient actually flows into the stack
+        gsum = sum(
+            float(jnp.sum(jnp.abs(g)))
+            for g in jax.tree_util.tree_leaves(grads["scan"])
+        )
+        assert gsum > 0, f"{arch}: zero gradient in stack"
+
+    def test_prefill_decode_shapes_no_nan(self, arch):
+        cfg = get_smoke_config(arch)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        b, s = 2, 32
+        batch = make_batch(cfg, b=b, s=s)
+        cache = T.init_cache(cfg, batch=b, max_seq=64)
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = lm.run_encoder(params, cfg, batch["enc_embeds"])
+        logits, cache = lm.prefill(params, cfg, batch, cache)
+        assert logits.shape == (b, cfg.vocab_size)
+        assert jnp.all(jnp.isfinite(logits))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for _ in range(3):
+            logits, cache = lm.decode_step(params, cfg, tok, cache, enc_out=enc_out)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        assert logits.shape == (b, cfg.vocab_size)
+        assert jnp.all(jnp.isfinite(logits))
+        assert int(cache["t"]) == s + 3
+
+    def test_full_config_matches_assignment(self, arch):
+        """The full config must carry the exact published numbers."""
+        spec = {
+            "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+            "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+            "starcoder2-7b": (32, 4608, 36, 4, 18432, 49152),
+            "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+            "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+            "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+            "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+            "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+            "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+            "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        }[arch]
+        cfg = get_config(arch)
+        got = (
+            cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+            cfg.d_ff, cfg.vocab_size,
+        )
+        assert got == spec
+        # layer layout covers exactly num_layers
+        assert len(cfg.scan_unit) * cfg.scan_repeats + len(cfg.tail) == cfg.num_layers
+
+
+class TestArchSpecifics:
+    def test_moe_specs(self):
+        olmoe = get_config("olmoe-1b-7b")
+        assert olmoe.moe.num_experts == 64 and olmoe.moe.top_k == 8
+        mix = get_config("mixtral-8x22b")
+        assert mix.moe.num_experts == 8 and mix.moe.top_k == 2
+        assert mix.sliding_window is not None  # SWA per assignment
+
+    def test_param_counts_in_expected_range(self):
+        """Sanity: parameter counts land near the advertised sizes."""
+        for arch, lo, hi in [
+            ("qwen3-32b", 25e9, 40e9),
+            ("llama3.2-1b", 0.9e9, 1.8e9),
+            ("starcoder2-7b", 6e9, 9e9),
+            ("h2o-danube-1.8b", 1.3e9, 2.4e9),
+            ("rwkv6-3b", 2e9, 4e9),
+            ("recurrentgemma-9b", 6.5e9, 12e9),
+            ("olmoe-1b-7b", 5e9, 8.5e9),
+            ("mixtral-8x22b", 120e9, 160e9),
+            ("qwen2-vl-72b", 60e9, 85e9),
+        ]:
+            n = get_config(arch).param_count()
+            assert lo < n < hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+    def test_olmoe_active_params_below_total(self):
+        cfg = get_config("olmoe-1b-7b")
+        assert cfg.active_param_count() < 0.45 * cfg.param_count()
+
+    def test_les_groups_mode_runs(self):
+        """The paper's LES algorithm applied to an LM (technique hook)."""
+        from dataclasses import replace
+
+        cfg = replace(get_smoke_config("llama3.2-1b"), num_layers=4, les_groups=2)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        batch = make_batch(cfg)
+        (loss, metrics), grads = jax.value_and_grad(
+            lm.train_loss, has_aux=True
+        )(params, cfg, batch)
+        assert "les" in metrics and jnp.isfinite(loss)
+
+    def test_int8_matmul_mode_runs(self):
+        """NITRO int8 numerics on LM matmuls (technique hook)."""
+        from dataclasses import replace
+
+        cfg = replace(get_smoke_config("qwen3-32b"), int8_matmul=True)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        batch = make_batch(cfg)
+        loss, _ = lm.train_loss(params, cfg, batch)
+        assert jnp.isfinite(loss)

@@ -1,0 +1,69 @@
+"""FP LES / FP BP baselines (paper Tables 1–2 comparison columns)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fp_baselines as fp
+from repro.core.blocks import BlockSpec
+from repro.core.model import NitroConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = NitroConfig(
+        blocks=(BlockSpec("conv", 16, pool=True, d_lr=256), BlockSpec("linear", 64)),
+        input_shape=(8, 8, 3), num_classes=10,
+    )
+    rng = np.random.default_rng(0)
+    templates = rng.integers(-60, 61, (10, 8, 8, 3))
+    y = rng.integers(0, 10, 64).astype(np.int32)
+    x = np.clip(templates[y] + rng.integers(-40, 41, (64, 8, 8, 3)), -127, 127)
+    return cfg, jnp.asarray(x, jnp.float32) / 64.0, jnp.asarray(y)
+
+
+class TestFPBP:
+    def test_learns(self, setup):
+        cfg, x, y = setup
+        params = fp.init_fp_params(jax.random.PRNGKey(0), cfg)
+        opt_state = fp.adam_init(params)
+        step = jax.jit(functools.partial(fp.train_step_bp, cfg=cfg))
+        losses = []
+        for i in range(60):
+            params, opt_state, loss = step(
+                params, opt_state, x=x, labels=y, key=jax.random.PRNGKey(i)
+            )
+            losses.append(float(loss))
+        assert losses[-1] < 0.5 * losses[0]
+        assert int(fp.accuracy_fp(params, cfg, x, y)) > 32
+
+
+class TestFPLES:
+    def test_learns_with_confined_gradients(self, setup):
+        cfg, x, y = setup
+        params = fp.init_fp_params(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(functools.partial(fp.train_step_les, cfg=cfg, lr=2e-2))
+        losses = []
+        for i in range(150):
+            params, loss = step(params, x=x, labels=y, key=jax.random.PRNGKey(i))
+            losses.append(float(loss))
+        assert losses[-1] < 0.8 * losses[0]
+        assert int(fp.accuracy_fp(params, cfg, x, y)) > 20  # 64 samples, chance 6.4
+
+    def test_stop_gradient_confines(self, setup):
+        """Gradient of block-0 params wrt LES loss is unaffected by
+        downstream weight perturbation (same invariant as integer LES)."""
+        cfg, x, y = setup
+        params = fp.init_fp_params(jax.random.PRNGKey(0), cfg)
+        g1 = jax.grad(fp.loss_les)(params, cfg, x, y, jax.random.PRNGKey(0))
+        params2 = jax.tree_util.tree_map(lambda p: p, params)
+        params2["output"] = params2["output"] + 0.5
+        params2["blocks"][1]["fw"] = params2["blocks"][1]["fw"] * 1.1
+        g2 = jax.grad(fp.loss_les)(params2, cfg, x, y, jax.random.PRNGKey(0))
+        np.testing.assert_allclose(
+            np.asarray(g1["blocks"][0]["fw"]), np.asarray(g2["blocks"][0]["fw"]),
+            rtol=1e-6,
+        )

@@ -1,0 +1,145 @@
+"""Pallas kernel validation: interpret-mode kernel vs pure-jnp oracle,
+swept over shapes, dtypes, scale factors and tile sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.scaling import conv_scale_factor, linear_scale_factor
+from repro.kernels.integer_sgd.integer_sgd import integer_sgd_update
+from repro.kernels.integer_sgd.ref import integer_sgd_ref
+from repro.kernels.nitro_matmul import ops
+from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul
+from repro.kernels.nitro_matmul.ref import nitro_matmul_ref
+
+
+class TestNitroMatmulKernel:
+    @pytest.mark.parametrize("m,k,n", [
+        (1, 1, 1), (7, 13, 5), (64, 64, 64), (128, 128, 128),
+        (130, 200, 90), (256, 384, 128), (33, 257, 65),
+    ])
+    def test_shape_sweep_matches_ref(self, m, k, n):
+        rng = np.random.default_rng(m * 1000 + k * 10 + n)
+        x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int32)
+        sf = linear_scale_factor(k)
+        got = nitro_matmul(x, w, sf=sf, interpret=True, bm=32, bn=32, bk=64)
+        want = nitro_matmul_ref(x, w, sf=sf)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("in_dtype", [jnp.int8, jnp.int32])
+    @pytest.mark.parametrize("out_dtype", [jnp.int8, jnp.int32])
+    def test_dtype_sweep(self, in_dtype, out_dtype):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.integers(-127, 128, (48, 96)), in_dtype)
+        w = jnp.asarray(rng.integers(-127, 128, (96, 32)), in_dtype)
+        sf = linear_scale_factor(96)
+        got = nitro_matmul(x, w, sf=sf, out_dtype=out_dtype, interpret=True)
+        want = nitro_matmul_ref(x, w, sf=sf, out_dtype=out_dtype)
+        assert got.dtype == out_dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("apply_relu", [True, False])
+    @pytest.mark.parametrize("alpha_inv", [3, 10, 100])
+    def test_epilogue_variants(self, apply_relu, alpha_inv):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.integers(-127, 128, (32, 64)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, (64, 32)), jnp.int32)
+        sf = linear_scale_factor(64)
+        got = nitro_matmul(
+            x, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu, interpret=True
+        )
+        want = nitro_matmul_ref(x, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 64), (128, 128, 128)])
+    def test_tile_size_sweep(self, bm, bn, bk):
+        """Result must be invariant to BlockSpec tiling."""
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.integers(-127, 128, (100, 100)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, (100, 100)), jnp.int32)
+        sf = linear_scale_factor(100)
+        got = nitro_matmul(x, w, sf=sf, bm=bm, bn=bn, bk=bk, interpret=True)
+        want = nitro_matmul_ref(x, w, sf=sf)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=20, deadline=None)
+    def test_property_random_shapes(self, seed):
+        rng = np.random.default_rng(seed)
+        m, k, n = rng.integers(1, 80, 3)
+        x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int32)
+        sf = linear_scale_factor(int(k))
+        got = nitro_matmul(x, w, sf=sf, interpret=True, bm=32, bn=32, bk=32)
+        want = nitro_matmul_ref(x, w, sf=sf)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_output_range_fits_int8(self):
+        """Fused scale+relu output always fits int8 — the contract that lets
+        the kernel write int8 activations back to HBM."""
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.integers(-127, 128, (64, 128)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, (128, 64)), jnp.int32)
+        out = nitro_matmul(x, w, sf=linear_scale_factor(128), interpret=True)
+        assert int(jnp.abs(out).max()) <= 127
+
+
+class TestNitroOps:
+    def test_nitro_linear_matches_layer_pipeline(self):
+        """ops.nitro_linear(kernel) ≡ Linear → Scaling → NITRO-ReLU refs."""
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.integers(-127, 128, (4, 10, 48)), jnp.int32)
+        w = jnp.asarray(rng.integers(-60, 61, (48, 24)), jnp.int32)
+        got = ops.nitro_linear(x, w, use_kernel=True, interpret=True)
+        want = nitro_matmul_ref(
+            x.reshape(-1, 48), w, sf=linear_scale_factor(48)
+        ).reshape(4, 10, 24)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_nitro_conv2d_matches_reference_block(self):
+        """Fused conv path ≡ conv_forward → scale → relu from repro.core."""
+        from repro.core import activations, layers, scaling
+
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.integers(-127, 128, (2, 6, 6, 3)), jnp.int32)
+        w = jnp.asarray(rng.integers(-50, 51, (3, 3, 3, 8)), jnp.int32)
+        got = ops.nitro_conv2d(x, w, use_kernel=True, interpret=True)
+        z, _ = layers.conv_forward({"w": w}, x)
+        want = activations.nitro_relu(
+            scaling.scale_forward(z, scaling.conv_scale_factor(3, 3)), 10
+        )
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestIntegerSGDKernel:
+    @pytest.mark.parametrize("shape", [(1,), (127,), (128,), (1000,), (8, 128), (3, 3, 2, 5)])
+    def test_shape_sweep(self, shape):
+        rng = np.random.default_rng(sum(shape))
+        w = jnp.asarray(rng.integers(-30000, 30000, shape), jnp.int32)
+        g = jnp.asarray(rng.integers(-(2**20), 2**20, shape), jnp.int32)
+        got = integer_sgd_update(w, g, 512, 3000, interpret=True)
+        want = integer_sgd_ref(w, g, 512, 3000)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("gamma,eta", [(1, 0), (512, 0), (512, 3000), (4096, 28000)])
+    def test_hyperparameter_sweep(self, gamma, eta):
+        rng = np.random.default_rng(gamma + eta)
+        w = jnp.asarray(rng.integers(-(2**15), 2**15, (300,)), jnp.int32)
+        g = jnp.asarray(rng.integers(-(2**24), 2**24, (300,)), jnp.int32)
+        got = integer_sgd_update(w, g, gamma, eta, interpret=True)
+        want = integer_sgd_ref(w, g, gamma, eta)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_scalars_are_runtime_values(self):
+        """One compiled kernel must serve different γ/η (SMEM scalars) —
+        the ×3 lr schedule cannot trigger recompilation."""
+        w = jnp.zeros((256,), jnp.int32) + 9000
+        g = jnp.zeros((256,), jnp.int32) + 51200
+        a = integer_sgd_update(w, g, jnp.int32(512), jnp.int32(3000), interpret=True)
+        b = integer_sgd_update(w, g, jnp.int32(1536), jnp.int32(3000), interpret=True)
+        assert int(a[0]) == 9000 - 100 - 3
+        assert int(b[0]) == 9000 - 33 - 3

@@ -1,0 +1,159 @@
+"""Integer layers: forwards vs naive oracles, backwards vs float autodiff.
+
+Integer gradients are exact integer computations; when inputs are small
+enough that every product/sum is exactly representable in float32, the
+integer backward must equal ``jax.grad`` of the equivalent float function.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import layers
+
+
+def _rand_int(rng, shape, lo=-9, hi=10):
+    return rng.integers(lo, hi, shape).astype(np.int32)
+
+
+class TestLinear:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_backward_matches_float_autodiff(self, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand_int(rng, (4, 6))
+        w = _rand_int(rng, (6, 3))
+        g = _rand_int(rng, (4, 3))
+        params = {"w": jnp.asarray(w)}
+        _, cache = layers.linear_forward(params, jnp.asarray(x))
+        gx, gw = layers.linear_backward(params, cache, jnp.asarray(g))
+
+        f = lambda xf, wf: jnp.sum(xf @ wf * g.astype(jnp.float32))
+        gxf, gwf = jax.grad(f, argnums=(0, 1))(
+            x.astype(np.float32), w.astype(np.float32)
+        )
+        np.testing.assert_array_equal(np.asarray(gx), np.asarray(gxf).astype(np.int32))
+        np.testing.assert_array_equal(np.asarray(gw["w"]), np.asarray(gwf).astype(np.int32))
+
+
+class TestConv2D:
+    def _naive_conv(self, x, w):
+        n, h, ww, c = x.shape
+        k, _, _, f = w.shape
+        pad = k // 2
+        xp = np.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        out = np.zeros((n, h, ww, f), np.int64)
+        for i in range(k):
+            for j in range(k):
+                out += np.einsum(
+                    "nhwc,cf->nhwf",
+                    xp[:, i : i + h, j : j + ww, :].astype(np.int64),
+                    w[i, j].astype(np.int64),
+                )
+        return out.astype(np.int32)
+
+    @pytest.mark.parametrize("k", [1, 3, 5])
+    def test_forward_matches_naive(self, k):
+        rng = np.random.default_rng(0)
+        x = _rand_int(rng, (2, 6, 6, 3), -127, 128)
+        w = _rand_int(rng, (k, k, 3, 4), -50, 51)
+        z, _ = layers.conv_forward({"w": jnp.asarray(w)}, jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(z), self._naive_conv(x, w))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_backward_matches_float_autodiff(self, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand_int(rng, (2, 5, 5, 2))
+        w = _rand_int(rng, (3, 3, 2, 3))
+        g = _rand_int(rng, (2, 5, 5, 3))
+        params = {"w": jnp.asarray(w)}
+        _, cache = layers.conv_forward(params, jnp.asarray(x))
+        gx, gw = layers.conv_backward(params, cache, jnp.asarray(g))
+
+        def f(xf, wf):
+            z = jax.lax.conv_general_dilated(
+                xf, wf, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+            )
+            return jnp.sum(z * g.astype(jnp.float32))
+
+        gxf, gwf = jax.grad(f, argnums=(0, 1))(
+            x.astype(np.float32), w.astype(np.float32)
+        )
+        np.testing.assert_array_equal(np.asarray(gx), np.asarray(gxf).astype(np.int32))
+        np.testing.assert_array_equal(np.asarray(gw["w"]), np.asarray(gwf).astype(np.int32))
+
+
+class TestMaxPool:
+    def test_forward(self):
+        x = jnp.asarray(np.arange(16).reshape(1, 4, 4, 1), jnp.int32)
+        y, _ = layers.maxpool_forward(x)
+        np.testing.assert_array_equal(
+            np.asarray(y).squeeze(), np.array([[5, 7], [13, 15]])
+        )
+
+    def test_backward_routes_to_argmax(self):
+        x = jnp.asarray(np.arange(16).reshape(1, 4, 4, 1), jnp.int32)
+        _, cache = layers.maxpool_forward(x)
+        g = jnp.asarray([[[[10], [20]], [[30], [40]]]], jnp.int32)
+        gx = np.asarray(layers.maxpool_backward(cache, g)).squeeze()
+        assert gx[1, 1] == 10 and gx[1, 3] == 20
+        assert gx[3, 1] == 30 and gx[3, 3] == 40
+        assert gx.sum() == 100  # gradient mass preserved
+
+    def test_odd_sizes_floor_pooled(self):
+        x = jnp.asarray(np.arange(49).reshape(1, 7, 7, 1), jnp.int32)
+        y, cache = layers.maxpool_forward(x)
+        assert y.shape == (1, 3, 3, 1)
+        g = jnp.ones((1, 3, 3, 1), jnp.int32)
+        gx = layers.maxpool_backward(cache, g)
+        assert gx.shape == x.shape  # cropped edge repadded with zeros
+
+
+class TestAvgPoolTo:
+    def test_integer_mean(self):
+        x = jnp.full((1, 4, 4, 2), 7, jnp.int32)
+        y, cache = layers.avgpool_to(x, target=8)  # s = isqrt(8//2) = 2
+        assert y.shape == (1, 2, 2, 2)
+        assert int(y[0, 0, 0, 0]) == 7  # 7·4 // 4
+
+    def test_backward_is_ste_replication(self):
+        x = jnp.zeros((1, 4, 4, 2), jnp.int32)
+        _, cache = layers.avgpool_to(x, target=8)
+        g = jnp.full((1, 2, 2, 2), 5, jnp.int32)
+        gx = np.asarray(layers.avgpool_to_backward(cache, g))
+        assert gx.shape == (1, 4, 4, 2)
+        assert (gx == 5).all()  # replicated, not divided
+
+
+class TestDropout:
+    def test_zero_rate_is_identity(self):
+        x = jnp.arange(10, dtype=jnp.int32)
+        y, _ = layers.dropout_forward(jax.random.PRNGKey(0), x, 0.0)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    def test_expectation_preserved(self):
+        x = jnp.full((20000,), 100, jnp.int32)
+        y, _ = layers.dropout_forward(jax.random.PRNGKey(0), x, 0.25)
+        mean = float(jnp.mean(y.astype(jnp.float32)))
+        assert abs(mean - 100.0) < 2.5  # inverted-dropout rescale works
+
+    def test_mask_shared_by_backward(self):
+        x = jnp.full((1000,), 64, jnp.int32)
+        y, cache = layers.dropout_forward(jax.random.PRNGKey(1), x, 0.5)
+        g = layers.dropout_backward(cache, jnp.full((1000,), 64, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(y == 0), np.asarray(g == 0))
+
+    def test_integer_only(self):
+        """The dropout jaxpr must contain no float op (integer Bernoulli)."""
+        jaxpr = jax.make_jaxpr(
+            lambda k, x: layers.dropout_forward(k, x, 0.3)[0]
+        )(jax.random.PRNGKey(0), jnp.ones((8,), jnp.int32))
+        for eqn in jaxpr.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if aval is not None:
+                    assert "float" not in str(aval.dtype)

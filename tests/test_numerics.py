@@ -1,0 +1,70 @@
+"""Unit + property tests for the integer arithmetic primitives."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import numerics
+
+
+class TestFloorDiv:
+    def test_rounds_toward_neg_infinity(self):
+        # The paper's ⌊·⌋ is mathematical floor, not C truncation.
+        assert int(numerics.floor_div(jnp.int32(-7), 2)) == -4
+        assert int(numerics.floor_div(jnp.int32(7), 2)) == 3
+        assert int(numerics.floor_div(jnp.int32(-1), 512)) == -1
+
+    @given(st.integers(-(2**20), 2**20), st.integers(1, 2**16))
+    @settings(max_examples=200, deadline=None)
+    def test_matches_python_floor(self, x, d):
+        assert int(numerics.floor_div(jnp.int32(x), d)) == x // d
+
+
+class TestIntMatmul:
+    @given(
+        st.integers(1, 8), st.integers(1, 8), st.integers(1, 8),
+        st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_matches_numpy_int64(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.integers(-127, 128, (m, k)).astype(np.int32)
+        w = rng.integers(-127, 128, (k, n)).astype(np.int32)
+        got = np.asarray(numerics.int_matmul(jnp.asarray(a), jnp.asarray(w)))
+        want = (a.astype(np.int64) @ w.astype(np.int64)).astype(np.int32)
+        np.testing.assert_array_equal(got, want)
+
+    def test_accumulates_in_int32(self):
+        a = jnp.full((1, 1000), 127, jnp.int32)
+        w = jnp.full((1000, 1), 127, jnp.int32)
+        out = numerics.int_matmul(a, w)
+        assert out.dtype == jnp.int32
+        assert int(out[0, 0]) == 127 * 127 * 1000
+
+
+class TestIsqrt:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=300, deadline=None)
+    def test_matches_math_isqrt(self, n):
+        assert int(numerics.isqrt(jnp.int32(n))) == math.isqrt(n)
+
+    def test_jit_and_vmap(self):
+        ns = jnp.arange(0, 100, dtype=jnp.int32)
+        got = jax.jit(jax.vmap(numerics.isqrt))(ns)
+        want = jnp.asarray([math.isqrt(i) for i in range(100)], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestBitwidthBound:
+    def test_paper_example(self):
+        # §3.2: b_a = 8, b_W = 8 → b_z = 15 + log2(M)
+        assert numerics.bitwidth_bound(8, 8, 1024) == 15 + 10
+
+    def test_assert_int_rejects_float(self):
+        with pytest.raises(TypeError):
+            numerics.assert_int(jnp.zeros((2,), jnp.float32))

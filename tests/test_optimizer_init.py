@@ -1,0 +1,76 @@
+"""IntegerSGD (Algorithm 1), NITRO Amplification Factor, integer Kaiming."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import init as init_mod
+from repro.core import optimizer as opt
+
+
+class TestIntegerSGD:
+    def test_algorithm1_no_decay(self):
+        state = opt.init_state(gamma_inv=512, eta_inv=0)
+        w = jnp.asarray([1000, -1000], jnp.int32)
+        g = jnp.asarray([5120, -5120], jnp.int32)
+        w2 = opt.apply_update(w, g, state)
+        np.testing.assert_array_equal(np.asarray(w2), [1000 - 10, -1000 + 10])
+
+    def test_decay_threshold_behaviour(self):
+        """Paper §3.3: only weights with |w| ≥ η_inv are penalised."""
+        state = opt.init_state(gamma_inv=512, eta_inv=3000)
+        w = jnp.asarray([2999, 3000, -3000, -6001], jnp.int32)
+        g = jnp.zeros((4,), jnp.int32)
+        w2 = np.asarray(opt.apply_update(w, g, state))
+        assert w2[0] == 2999          # |w| < η: ⌊2999/3000⌋ = 0 → untouched
+        assert w2[1] == 3000 - 1      # ⌊3000/3000⌋ = 1
+        assert w2[2] == -3000 + 1     # ⌊-3000/3000⌋ = -1 → +1 (floor semantics)
+        assert w2[3] == -6001 + 3     # ⌊-6001/3000⌋ = -3
+
+    @given(
+        st.integers(-(2**15), 2**15), st.integers(-(2**20), 2**20),
+        st.integers(1, 2**12), st.integers(0, 2**14),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_matches_python_reference(self, w, g, gamma, eta):
+        state = opt.init_state(gamma, eta)
+        got = int(opt.apply_update(jnp.int32(w), jnp.int32(g), state))
+        delta = g // gamma
+        if eta != 0:
+            delta += w // eta
+        assert got == w - delta
+
+    def test_lr_schedule_triples_gamma_inv(self):
+        state = opt.init_state(512, 0)
+        state = opt.step_lr_schedule(state, jnp.asarray(True))
+        assert int(state.gamma_inv) == 1536
+        state = opt.step_lr_schedule(state, jnp.asarray(False))
+        assert int(state.gamma_inv) == 1536
+
+    def test_amplification_factor(self):
+        # AF = 2^6 × G
+        assert opt.amplification_factor(10) == 640
+        assert opt.amplification_factor(1000) == 64000
+
+
+class TestIntegerKaiming:
+    def test_bound_formula(self):
+        # b = ⌊128·1732/(⌊√fan_in⌋·1000)⌋
+        assert init_mod.kaiming_bound(784) == (128 * 1732) // (28 * 1000)
+        assert init_mod.kaiming_bound(1024) == (128 * 1732) // (32 * 1000)
+
+    @given(st.integers(1, 2**16))
+    @settings(max_examples=100, deadline=None)
+    def test_bound_always_positive(self, fan_in):
+        assert init_mod.kaiming_bound(fan_in) >= 1
+
+    def test_support_and_dtype(self):
+        key = jax.random.PRNGKey(0)
+        w = init_mod.integer_kaiming_uniform(key, (1000,), fan_in=64)
+        b = init_mod.kaiming_bound(64)
+        assert w.dtype == jnp.int32
+        assert int(w.min()) >= -b and int(w.max()) <= b
+        # both extremes actually reachable (inclusive uniform)
+        assert int(w.min()) == -b and int(w.max()) == b

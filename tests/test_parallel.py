@@ -1,0 +1,232 @@
+"""Distribution substrate: sharding rules, ring collectives, gradient
+compression, fault tolerance, checkpointing, data loader.
+
+These run on CPU with a handful of forced host devices (set per-test via
+shard_map over a 1-device mesh where possible; multi-device semantics are
+covered by the dry-run)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel import collectives as coll
+from repro.parallel import compress
+from repro.parallel.sharding import (
+    resolve,
+    serve_rules,
+    shard,
+    train_rules,
+    use_rules,
+)
+from repro.train import checkpoint as ckpt
+from repro.train import fault_tolerance as ft
+
+
+class TestShardingRules:
+    def test_no_context_is_noop(self):
+        x = jnp.ones((4, 4))
+        y = shard(x, "batch", "embed")
+        assert y is x
+
+    def test_rule_tables_cover_model_axes(self):
+        r = train_rules(multi_pod=True)
+        assert r["batch"] == ("pod", "data")
+        assert r["heads"] == "model"
+        assert r["p_fsdp"] == "data"
+        s = serve_rules()
+        assert s["p_fsdp"] is None  # weights replicated over data at serve
+
+    def test_resolve_inside_context(self):
+        mesh = jax.make_mesh(
+            (1, 1), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+        with use_rules(mesh, train_rules()):
+            spec = resolve(("batch", None, "heads"))
+            assert spec == jax.sharding.PartitionSpec(("data",), None, "model")
+
+    def test_constraint_applies_in_jit(self):
+        mesh = jax.make_mesh(
+            (1, 1), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        )
+
+        def f(x):
+            with use_rules(mesh, train_rules()):
+                return shard(x * 2, "batch", "embed")
+
+        y = jax.jit(f)(jnp.ones((4, 8)))
+        np.testing.assert_array_equal(np.asarray(y), 2 * np.ones((4, 8)))
+
+
+class TestRingCollectives:
+    def _shmap(self, fn, n, *args):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        mesh = jax.make_mesh(
+            (n,), ("x",), axis_types=(jax.sharding.AxisType.Auto,)
+        )
+        return shard_map(
+            fn, mesh=mesh, in_specs=P("x"), out_specs=P("x")
+        )(*args)
+
+    def test_ring_all_reduce_single_device(self):
+        x = jnp.arange(8.0)
+        out = self._shmap(lambda v: coll.ring_all_reduce(v, "x"), 1, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+
+    def test_ring_all_reduce_matches_psum(self):
+        n = jax.device_count()
+        if n < 2:
+            pytest.skip("needs >1 device (covered by dry-run on 512)")
+        x = jnp.arange(float(8 * n))
+        ring = self._shmap(lambda v: coll.ring_all_reduce(v, "x"), n, x)
+        ref = self._shmap(lambda v: jax.lax.psum(v, "x"), n, x)
+        np.testing.assert_allclose(np.asarray(ring), np.asarray(ref))
+
+
+class TestGradientCompression:
+    def test_roundtrip_error_bounded(self):
+        rng = np.random.default_rng(0)
+        g = {"w": jnp.asarray(rng.normal(0, 1e-3, (256,)), jnp.float32)}
+        ef = compress.ef_init(g)
+        q, s, ef = compress.compress(g, ef)
+        assert q["w"].dtype == jnp.int8
+        back = compress.decompress(q, s)
+        err = np.abs(np.asarray(back["w"] - g["w"])).max()
+        assert err <= float(s["w"]) / 2 + 1e-12  # half-ulp of the int8 grid
+
+    def test_error_feedback_accumulates(self):
+        """EF: the quantisation residual re-enters the next step — the
+        *running sum* of compressed gradients tracks the true sum."""
+        rng = np.random.default_rng(1)
+        true_sum = np.zeros(64, np.float32)
+        comp_sum = np.zeros(64, np.float32)
+        g0 = {"w": jnp.zeros((64,), jnp.float32)}
+        ef = compress.ef_init(g0)
+        for i in range(30):
+            g = rng.normal(0, 1e-4, 64).astype(np.float32)
+            true_sum += g
+            q, s, ef = compress.compress({"w": jnp.asarray(g)}, ef)
+            comp_sum += np.asarray(compress.decompress(q, s)["w"])
+        resid = np.abs(np.asarray(ef.residual["w"])).max()
+        # EF invariant: |Σtrue − Σcompressed| == |residual| (bounded, no drift)
+        drift = np.abs(true_sum - comp_sum).max()
+        assert drift <= resid + 1e-6
+
+    def test_integer_gradients_sum_exactly(self):
+        """NITRO path: int32 gradient reduction is exact (no compression)."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        mesh = jax.make_mesh((1,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        g = {"w": jnp.asarray([2**30, -(2**30), 123], jnp.int32)}
+        out = shard_map(
+            lambda t: compress.exact_integer_psum(t, "pod"),
+            mesh=mesh, in_specs=P(), out_specs=P(),
+        )(g)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(g["w"]))
+
+
+class TestFaultTolerance:
+    def test_straggler_detector_flags_slow_steps(self):
+        det = ft.StragglerDetector(threshold=2.0, warmup_steps=3)
+        for _ in range(10):
+            det.record(1.0)
+        assert not det.should_rebalance(1)
+        assert det.record(5.0)  # straggler
+        assert det.incidents == 1
+        # EWMA not poisoned by the straggler
+        assert det.ewma < 1.5
+
+    def test_preemption_guard_simulation(self):
+        guard = ft.PreemptionGuard(install=False)
+        assert not guard.requested
+        guard.simulate()
+        assert guard.requested
+
+    def test_elastic_policy_chooses_divisible_mesh(self):
+        pol = ft.ElasticPolicy(model_parallel=16, global_batch=256)
+        assert pol.choose_mesh_shape(256) == (16, 16)
+        # lost 32 chips → 14 data slices don't divide 256 → fall to 8
+        assert pol.choose_mesh_shape(224) == (8, 16)
+        with pytest.raises(RuntimeError):
+            pol.choose_mesh_shape(15)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(12, dtype=jnp.int32).reshape(3, 4),
+                "b": [jnp.ones((2,)), jnp.zeros((5,), jnp.bfloat16)]}
+        ckpt.save(str(tmp_path), 7, tree, extra={"note": "x"})
+        like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+        restored, step = ckpt.restore(str(tmp_path), like)
+        assert step == 7
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32)
+            )
+
+    def test_latest_ignores_partial(self, tmp_path):
+        tree = {"a": jnp.ones((2,))}
+        ckpt.save(str(tmp_path), 1, tree)
+        # simulate a preempted writer: manifest missing
+        os.makedirs(tmp_path / "step_00000002")
+        (tmp_path / "LATEST").write_text("step_00000002")
+        assert ckpt.latest_step(str(tmp_path)) is None  # refuses partial
+
+    def test_async_checkpointer(self, tmp_path):
+        tree = {"a": jnp.full((1000,), 3.0)}
+        ac = ckpt.AsyncCheckpointer(str(tmp_path))
+        ac.save(3, tree)
+        ac.wait()
+        restored, step = ckpt.restore(str(tmp_path), tree)
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+
+    def test_elastic_restore_resharding_hook(self, tmp_path):
+        """Restore accepts shardings — single-device here, resharded meshes
+        exercised by the dry-run; this validates the API path."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        tree = {"w": jnp.arange(16, dtype=jnp.float32)}
+        ckpt.save(str(tmp_path), 1, tree)
+        shardings = {"w": NamedSharding(mesh, P("data"))}
+        restored, _ = ckpt.restore(str(tmp_path), tree, shardings=shardings)
+        assert restored["w"].sharding == shardings["w"]
+
+
+class TestLoader:
+    def test_sharded_loader_prefetches(self):
+        from repro.data.loader import ShardedLoader, synthetic_lm_generator
+
+        gen = synthetic_lm_generator(1000, 16, global_batch=8)
+        loader = ShardedLoader(
+            gen, global_batch=8, process_index=0, process_count=1
+        )
+        b = next(loader)
+        assert b["tokens"].shape == (8, 16)
+        assert b["labels"].shape == (8, 16)
+        # next-token alignment
+        g0 = gen(0)
+        np.testing.assert_array_equal(g0["tokens"][:, 1:], g0["labels"][:, :-1])
+        loader.close()
+
+    def test_local_slice_partitions_batch(self):
+        from repro.data.loader import ShardedLoader, synthetic_lm_generator
+
+        gen = synthetic_lm_generator(1000, 8, global_batch=8)
+        l0 = ShardedLoader(gen, global_batch=8, process_index=0, process_count=2)
+        l1 = ShardedLoader(gen, global_batch=8, process_index=1, process_count=2)
+        b0, b1 = next(l0), next(l1)
+        full = gen(0)
+        np.testing.assert_array_equal(
+            np.concatenate([b0["tokens"], b1["tokens"]]), full["tokens"]
+        )
+        l0.close(); l1.close()

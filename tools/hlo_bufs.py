@@ -1,0 +1,42 @@
+"""Diagnostic: largest tensors in a dry-run cell's compiled HLO.
+
+    PYTHONPATH=src python tools/hlo_bufs.py <arch> <shape> [threshold_mb]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re
+import sys
+
+from repro.launch.dryrun import lower_cell
+
+DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "s8": 1, "pred": 1,
+      "f16": 2, "u16": 2, "s16": 2, "u8": 1, "s64": 8, "u64": 8}
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    thresh = float(sys.argv[3]) * 1e6 if len(sys.argv) > 3 else 200e6
+    compiled, info = lower_cell(arch, shape, multi_pod=False)
+    print({k: info[k] for k in ("arch", "shape", "compile_s")})
+    ma = compiled.memory_analysis()
+    print(f"args={ma.argument_size_in_bytes/2**30:.2f} out={ma.output_size_in_bytes/2**30:.2f} "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f} alias={ma.alias_size_in_bytes/2**30:.2f} GiB")
+    txt = compiled.as_text()
+    sizes = {}
+    for m in re.finditer(r"%[\w.\-]+ = (\w+)\[([\d,]+)\]", txt):
+        dt, dims = m.groups()
+        if dt not in DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        b = n * DT[dt]
+        if b > thresh:
+            key = f"{dt}[{dims}]"
+            sizes.setdefault(key, [0, b])[0] += 1
+    for k, (c, b) in sorted(sizes.items(), key=lambda kv: -kv[1][1])[:25]:
+        print(f"{b/2**30:8.2f} GiB  x{c:4d}  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Generate the EXPERIMENTS.md §Roofline markdown table from dry-run JSONs.
+
+    PYTHONPATH=src python tools/make_roofline_table.py [pod1|pod2]
+"""
+
+import glob
+import json
+import sys
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    pod = sys.argv[1] if len(sys.argv) > 1 else "pod1"
+    rows = []
+    for f in sorted(glob.glob(f"results/dryrun/*_{pod}.json")):
+        rows.append(json.load(open(f)))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+
+    print(f"| arch | shape | compute_s | memory_s | collective_s | dominant "
+          f"| model/HLO flops | roofline frac | mem GiB (XLA / analytic) | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("skipped"):
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | — | "
+                  f"n/a ({r['reason'][:48]}…) |")
+            continue
+        t, m = r["roofline"], r["memory"]
+        fits = "✓" if m.get("analytic_fits_16gib", m["fits_16gib_hbm"]) else "✗"
+        print(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.2f} | "
+            f"{t['memory_s']:.2f} | {t['collective_s']:.2f} | {t['dominant']} | "
+            f"{t['model_over_hlo_flops']:.3f} | {t['roofline_fraction']:.4f} | "
+            f"{m['live_gib']:.1f} / {m.get('analytic_live_gib', float('nan')):.1f} | {fits} |"
+        )
+
+
+if __name__ == "__main__":
+    main()

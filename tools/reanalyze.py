@@ -1,0 +1,61 @@
+"""Re-run the HLO analyzer over cached .hlo.gz files (no recompilation) and
+rewrite the roofline section of each dry-run JSON.
+
+    PYTHONPATH=src python tools/reanalyze.py [results/dryrun]
+"""
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.configs import get_config
+from repro.launch.hlo_analysis import analyze, roofline_terms
+
+
+def reanalyze(json_path: str) -> bool:
+    hlo_path = json_path.replace(".json", ".hlo.gz")
+    if not os.path.exists(hlo_path):
+        return False
+    with open(json_path) as f:
+        r = json.load(f)
+    if r.get("skipped"):
+        return False
+    with gzip.open(hlo_path, "rt") as f:
+        text = f.read()
+    costs = analyze(text)
+    terms = roofline_terms(costs)
+
+    cfg = get_config(r["arch"])
+    n_active = cfg.active_param_count()
+    tokens = r["batch"] * (r["seq"] if r["kind"] != "decode" else 1)
+    fl_per_tok = 6 if r["kind"] == "train" else 2
+    model_flops = fl_per_tok * n_active * tokens
+    hlo_global = sum(terms["flops_by_dtype"].values()) * r["chips"]
+    terms["model_flops"] = model_flops
+    terms["model_over_hlo_flops"] = model_flops / hlo_global if hlo_global else 0.0
+    terms["roofline_bound_s"] = max(
+        terms["compute_s"], terms["memory_s"], terms["collective_s"]
+    )
+    useful_s = (model_flops / r["chips"]) / 197e12
+    terms["roofline_fraction"] = (
+        useful_s / terms["roofline_bound_s"] if terms["roofline_bound_s"] else 0.0
+    )
+    r["roofline"] = terms
+    with open(json_path, "w") as f:
+        json.dump(r, f, indent=1)
+    return True
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    n = 0
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        if reanalyze(p):
+            n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()
