@@ -1,0 +1,137 @@
+"""Inference serving benchmark: engine throughput + latency percentiles.
+
+Measures the full deploy path — freeze → fused plan → VisionEngine — for
+the paper CNN configs at a CPU-feasible scale.  Two load shapes per
+config:
+
+  * ``offline``  — all requests submitted at once (max batching, the
+                   throughput ceiling);
+  * ``trickle``  — a handful of concurrent synchronous clients (the
+                   latency-bound regime real traffic looks like).
+
+Emits the usual ``name,us_per_call,derived`` CSV rows on stdout *and*
+machine-readable ``BENCH_infer.json`` next to the CWD, so downstream
+tooling doesn't have to parse the CSV.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+JSON_PATH = "BENCH_infer.json"
+
+# (arch, scale, engine batch) — small enough for CI, same topology as paper
+CONFIGS = [
+    ("vgg8b", 0.0625, 16),
+    ("vgg11b", 0.0625, 16),
+]
+
+
+def _percentile(sorted_vals, q):
+    if not sorted_vals:
+        return 0.0
+    return sorted_vals[min(int(q * len(sorted_vals)), len(sorted_vals) - 1)]
+
+
+def _bench_config(arch: str, scale: float, batch: int, n_requests: int,
+                  results: list):
+    from repro.configs import paper
+    from repro.core import les
+    from repro.infer import compile_plan, freeze
+    from repro.serving.vision import VisionEngine
+
+    cfg = paper.get(arch, scale=scale)
+    state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+    fm = freeze(state, cfg)
+    plan = compile_plan(fm)
+    rng = np.random.default_rng(1)
+    images = [rng.integers(-127, 128, cfg.input_shape).astype(np.int32)
+              for _ in range(n_requests)]
+
+    # ---- offline: submit everything, drain ------------------------------
+    with VisionEngine(plan, batch_size=batch, max_wait_ms=2.0) as engine:
+        engine.classify(images[:1])  # compile outside the clock
+        t0 = time.perf_counter()
+        futs = [engine.submit(img) for img in images]
+        lats = sorted(f.result().latency_s for f in futs)
+        wall = time.perf_counter() - t0
+        fill = engine.stats.avg_batch_fill
+    rps = n_requests / wall
+    emit(f"infer/{arch}/offline", wall / n_requests * 1e6,
+         f"{rps:.1f} req/s; fill {fill:.2f}")
+    offline = {
+        "mode": "offline", "requests": n_requests, "wall_s": wall,
+        "requests_per_s": rps, "batch_fill": fill,
+        "latency_ms": {"p50": _percentile(lats, 0.5) * 1e3,
+                       "p90": _percentile(lats, 0.9) * 1e3,
+                       "p99": _percentile(lats, 0.99) * 1e3},
+    }
+
+    # ---- trickle: 4 sync clients ----------------------------------------
+    n_clients = 4
+    lat_lock = threading.Lock()
+    client_lats: list[float] = []
+
+    with VisionEngine(plan, batch_size=batch, max_wait_ms=2.0) as engine:
+        engine.classify(images[:1])
+
+        def client(w):
+            for i in range(w, n_requests, n_clients):
+                lat = engine.submit(images[i]).result().latency_s
+                with lat_lock:
+                    client_lats.append(lat)
+
+        t0 = time.perf_counter()
+        threads = [threading.Thread(target=client, args=(w,))
+                   for w in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        fill = engine.stats.avg_batch_fill
+    lats = sorted(client_lats)
+    p50, p99 = _percentile(lats, 0.5) * 1e3, _percentile(lats, 0.99) * 1e3
+    emit(f"infer/{arch}/trickle", wall / n_requests * 1e6,
+         f"p50 {p50:.1f}ms; p99 {p99:.1f}ms")
+    trickle = {
+        "mode": "trickle", "clients": n_clients, "requests": n_requests,
+        "wall_s": wall, "requests_per_s": n_requests / wall,
+        "batch_fill": fill,
+        "latency_ms": {"p50": p50,
+                       "p90": _percentile(lats, 0.9) * 1e3,
+                       "p99": p99},
+    }
+
+    results.append({
+        "arch": arch, "scale": scale, "engine_batch": batch,
+        "backend": plan.backend,
+        "weight_bytes": fm.num_bytes(),
+        "runs": [offline, trickle],
+    })
+
+
+def run(quick: bool = False) -> None:
+    n_requests = 48 if quick else 160
+    results: list[dict] = []
+    for arch, scale, batch in CONFIGS:
+        _bench_config(arch, scale, batch, n_requests, results)
+    payload = {
+        "benchmark": "serve_infer",
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("infer/json", 0.0, JSON_PATH)
+
+
+if __name__ == "__main__":
+    run()

@@ -106,7 +106,7 @@ def eval_step(
     state: TrainState, cfg: M.NitroConfig, x: jax.Array, labels: jax.Array
 ) -> jax.Array:
     """# correct predictions (integer) over a batch."""
-    y_hat, _, _, _ = M.forward(state.params, cfg, x, train=False)
+    y_hat = M.frozen_forward(state.params, cfg, x)
     return jnp.sum(jnp.argmax(y_hat, axis=-1) == labels)
 
 

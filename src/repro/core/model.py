@@ -77,10 +77,20 @@ def forward(
     return y_hat, acts, caches, out_cache
 
 
+def frozen_forward(params: dict, cfg: NitroConfig, x: jax.Array) -> jax.Array:
+    """Inference logits on frozen params (train=False, no caches used).
+
+    The single source of truth for the deploy-time forward: ``les.eval_step``,
+    ``predict`` and the ``repro.infer`` parity reference all route through it,
+    so the fused inference plan has exactly one oracle to match bit-for-bit.
+    """
+    y_hat, _, _, _ = forward(params, cfg, x, train=False)
+    return y_hat
+
+
 def predict(params: dict, cfg: NitroConfig, x: jax.Array) -> jax.Array:
     """Inference-only path (learning layers unused — paper §E.3)."""
-    y_hat, _, _, _ = forward(params, cfg, x, train=False)
-    return jnp.argmax(y_hat, axis=-1)
+    return jnp.argmax(frozen_forward(params, cfg, x), axis=-1)
 
 
 def count_params(params) -> int:

@@ -1,0 +1,28 @@
+"""repro.infer — integer-only CNN inference subsystem.
+
+NITRO-D is integer-only for *both* training and inference; this package is
+the inference half.  Pipeline::
+
+    les.TrainState ──freeze──▶ FrozenModel ──compile_plan──▶ ExecutionPlan
+                       │                                          │
+                  save/load (manifest)                 fused nitro_matmul
+                                                       (Pallas, one HBM
+                                                        write per layer)
+
+``FrozenModel`` (export.py) is the immutable deploy artifact: forward-layer
+weights narrowed to the smallest lossless integer dtype, per-layer NITRO
+scale factors, and topology metadata — learning layers are dropped (paper
+§E.3: unused at inference).  ``ExecutionPlan`` (plan.py) lowers each layer
+onto the fused ``nitro_matmul`` kernel (matmul + NITRO Scaling + NITRO-ReLU
+in one VMEM pass) with a pure-``jnp`` reference backend for parity checks.
+``serving.vision.VisionEngine`` batches concurrent requests over a plan.
+"""
+
+from repro.infer.export import (  # noqa: F401
+    FrozenLayer,
+    FrozenModel,
+    freeze,
+    load_frozen,
+    save_frozen,
+)
+from repro.infer.plan import ExecutionPlan, compile_plan  # noqa: F401

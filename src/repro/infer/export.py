@@ -1,0 +1,163 @@
+"""Freeze a trained NITRO-D model into an immutable inference artifact.
+
+``freeze`` strips a ``les.TrainState`` down to what the deploy-time forward
+actually needs:
+
+  * the forward-layer weights of every block — the learning layers (each
+    block's local classifier head) and both optimiser states are dropped,
+    as the paper notes they are unused at inference (§E.3);
+  * each weight narrowed to the smallest integer dtype that represents it
+    losslessly (int8 for most trained NITRO-D layers, int16 above that) —
+    narrowing is range-checked, never saturating, so frozen logits are
+    bit-exact with the training-time ``model.frozen_forward``;
+  * per-layer static metadata: NITRO scale factor (derived from the weight
+    geometry exactly as ``core.scaling`` does), NITRO-ReLU α_inv, and the
+    pooling flag — everything the plan compiler needs without the original
+    ``NitroConfig``.
+
+On disk a frozen model is a ``train.checkpoint`` manifest directory (one
+npy per weight, MANIFEST.json written last with fsync) whose ``extra``
+field carries the topology — the same crash-safe format the trainer
+already uses, so export inherits its fault-tolerance contract.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as M
+from repro.core.scaling import conv_scale_factor, linear_scale_factor
+from repro.train import checkpoint as ckpt
+
+FORMAT = "nitro-frozen-v1"
+
+
+class FrozenLayer(NamedTuple):
+    """One inference layer: fused matmul → scale → (optional) ReLU/pool."""
+
+    kind: str            # 'conv' | 'linear' | 'output'
+    w: jax.Array         # (K,K,C,F) conv / (M,N) linear — narrowest dtype
+    sf: int              # NITRO scale factor for the producing matmul
+    alpha_inv: int       # NITRO-ReLU leak (ignored when apply_relu=False)
+    apply_relu: bool
+    pool: bool           # MaxPool2D(2,2) after the activation (conv only)
+
+
+class FrozenModel(NamedTuple):
+    layers: tuple[FrozenLayer, ...]
+    input_shape: tuple[int, ...]   # per-sample shape, e.g. (32,32,3)
+    num_classes: int
+    name: str
+
+    def num_bytes(self) -> int:
+        return sum(int(l.w.size) * l.w.dtype.itemsize for l in self.layers)
+
+
+def _narrow(w: jax.Array) -> jax.Array:
+    """Cast to the smallest integer dtype holding every value losslessly."""
+    arr = np.asarray(jax.device_get(w))
+    lo, hi = int(arr.min()), int(arr.max())
+    for dt in (np.int8, np.int16):
+        info = np.iinfo(dt)
+        if info.min <= lo and hi <= info.max:
+            return jnp.asarray(arr.astype(dt))
+    return jnp.asarray(arr.astype(np.int32))
+
+
+def _layer_sf(kind: str, w: jax.Array) -> int:
+    """Scale factor from weight geometry — matches core.blocks exactly."""
+    if kind == "conv":
+        k, _, c_in, _ = w.shape
+        return conv_scale_factor(k, c_in)
+    return linear_scale_factor(w.shape[0])
+
+
+def freeze(state_or_params, cfg: M.NitroConfig) -> FrozenModel:
+    """TrainState (or raw params dict) + config → immutable FrozenModel."""
+    params = getattr(state_or_params, "params", state_or_params)
+    if len(params["blocks"]) != len(cfg.blocks):
+        raise ValueError(
+            f"params have {len(params['blocks'])} blocks, "
+            f"config describes {len(cfg.blocks)}"
+        )
+    layers: list[FrozenLayer] = []
+    for spec, p in zip(cfg.blocks, params["blocks"]):
+        w = _narrow(p["fw"]["w"])
+        layers.append(FrozenLayer(
+            kind=spec.kind, w=w, sf=_layer_sf(spec.kind, w),
+            alpha_inv=spec.alpha_inv, apply_relu=True,
+            pool=bool(spec.pool and spec.kind == "conv"),
+        ))
+    w_out = _narrow(params["output"]["w"])
+    layers.append(FrozenLayer(
+        kind="output", w=w_out, sf=_layer_sf("output", w_out),
+        alpha_inv=0, apply_relu=False, pool=False,
+    ))
+    return FrozenModel(
+        layers=tuple(layers),
+        input_shape=tuple(cfg.input_shape),
+        num_classes=cfg.num_classes,
+        name=cfg.name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Persistence — train/checkpoint manifest format, topology in `extra`
+# ---------------------------------------------------------------------------
+
+
+def _topology(fm: FrozenModel) -> dict:
+    return {
+        "format": FORMAT,
+        "name": fm.name,
+        "input_shape": list(fm.input_shape),
+        "num_classes": fm.num_classes,
+        "layers": [
+            {"kind": l.kind, "sf": l.sf, "alpha_inv": l.alpha_inv,
+             "apply_relu": l.apply_relu, "pool": l.pool}
+            for l in fm.layers
+        ],
+    }
+
+
+def save_frozen(path: str, fm: FrozenModel) -> str:
+    """Write the frozen model as a COMPLETE manifest checkpoint."""
+    tree = [{"w": l.w} for l in fm.layers]
+    return ckpt.save(path, 0, tree, extra=_topology(fm))
+
+
+def load_frozen(path: str) -> FrozenModel:
+    """Load a frozen model; validates format and restores exact weights."""
+    step = ckpt.latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no COMPLETE frozen model in {path}")
+    with open(os.path.join(path, f"step_{step:08d}", "MANIFEST.json")) as f:
+        meta = json.load(f)["extra"]
+    if meta.get("format") != FORMAT:
+        raise ValueError(
+            f"{path} is not a frozen NITRO model "
+            f"(format={meta.get('format')!r}, expected {FORMAT!r})"
+        )
+    # structure-only template: restore fills in the real arrays by path
+    tree_like = [{"w": np.zeros((), np.int8)} for _ in meta["layers"]]
+    tree, _ = ckpt.restore(path, tree_like, step=step)
+    layers = tuple(
+        FrozenLayer(
+            kind=lm["kind"], w=jnp.asarray(leaf["w"]), sf=int(lm["sf"]),
+            alpha_inv=int(lm["alpha_inv"]), apply_relu=bool(lm["apply_relu"]),
+            pool=bool(lm["pool"]),
+        )
+        for lm, leaf in zip(meta["layers"], tree)
+    )
+    return FrozenModel(
+        layers=layers,
+        input_shape=tuple(meta["input_shape"]),
+        num_classes=int(meta["num_classes"]),
+        name=meta["name"],
+    )

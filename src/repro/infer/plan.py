@@ -1,0 +1,174 @@
+"""Compile a FrozenModel into a fused integer execution plan.
+
+The training-time forward (``core.blocks.forward_layers``) runs each layer
+as three separate XLA ops — integer matmul, NITRO Scaling, NITRO-ReLU —
+materialising the int32 pre-activation ``z`` in HBM between each.  The plan
+lowers every layer onto the fused ``nitro_matmul`` Pallas kernel instead:
+``z`` lives in a VMEM scratch accumulator and only the final activation is
+written back, narrowed to int8 whenever the NITRO-ReLU output range fits
+(it always does for α_inv ≥ 2 — the range is [⌊-127/α_inv⌋-μ, 127-μ]).
+
+    HBM traffic per layer:  unfused  M·N·(4+4+4) bytes  →  fused  M·N·1
+
+Conv layers go through the same kernel via im2col (pad + static slices —
+layout work XLA folds into the kernel prologue); 2×2 max-pool and flatten
+run as cheap jnp ops between fused matmuls.
+
+Backends (static at compile time):
+
+  * ``'pallas'``     — the real TPU kernel;
+  * ``'interpret'``  — the same kernel through the Pallas interpreter
+                       (bit-exact off-TPU, used by the parity tests);
+  * ``'reference'``  — pure-jnp composition from ``core`` (fast on CPU);
+  * ``'auto'``       — pallas on TPU, reference elsewhere.
+
+Every backend is bit-exact with ``model.frozen_forward`` on the same
+frozen params — asserted by tests/test_infer.py over the paper configs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activations import mu_int8
+from repro.core.layers import _window_view, im2col
+from repro.core.numerics import INT_DTYPE
+from repro.infer.export import FrozenModel
+from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul
+from repro.kernels.nitro_matmul.ref import nitro_matmul_ref
+
+BACKENDS = ("auto", "pallas", "interpret", "reference")
+
+
+class StepMeta(NamedTuple):
+    """Static (hashable) description of one fused plan step."""
+
+    kind: str           # 'conv' | 'linear' | 'output'
+    sf: int
+    alpha_inv: int
+    apply_relu: bool
+    pool: bool
+    kernel_size: int    # conv only (0 otherwise)
+    out_dtype: str      # 'int8' | 'int32' — inter-layer activation dtype
+
+
+def _relu_fits_int8(alpha_inv: int) -> bool:
+    """NITRO-ReLU output range [⌊-127/α_inv⌋-μ, 127-μ] within int8?"""
+    mu = mu_int8(alpha_inv)
+    lo = (-127) // alpha_inv - mu
+    hi = 127 - mu
+    return -128 <= lo and hi <= 127
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    return backend
+
+
+def _fused(x2, w2, meta: StepMeta, backend: str):
+    """One fused matmul+scale(+relu) on 2-D operands."""
+    out_dtype = jnp.dtype(meta.out_dtype)
+    if backend == "reference":
+        return nitro_matmul_ref(
+            x2, w2, sf=meta.sf,
+            alpha_inv=meta.alpha_inv or 1, apply_relu=meta.apply_relu,
+            out_dtype=out_dtype,
+        )
+    return nitro_matmul(
+        x2, w2, sf=meta.sf,
+        alpha_inv=meta.alpha_inv or 1, apply_relu=meta.apply_relu,
+        out_dtype=out_dtype, interpret=(backend == "interpret"),
+    )
+
+
+def _maxpool2x2(a: jax.Array) -> jax.Array:
+    """Inference max-pool: window max only, no argmax routing cache."""
+    return jnp.max(_window_view(a), axis=3)
+
+
+def _execute(weights, x, *, metas: tuple[StepMeta, ...], backend: str):
+    a = jnp.asarray(x, INT_DTYPE)
+    for w, meta in zip(weights, metas):
+        if meta.kind == "conv":
+            n, h, ww, c = a.shape
+            k = meta.kernel_size
+            patches = im2col(a, k, k // 2).reshape(n * h * ww, k * k * c)
+            out = _fused(patches, w.reshape(-1, w.shape[-1]), meta, backend)
+            a = out.reshape(n, h, ww, w.shape[-1])
+            if meta.pool:
+                a = _maxpool2x2(a)
+        else:  # 'linear' | 'output' — flatten anything spatial entering
+            if a.ndim > 2:
+                a = a.reshape(a.shape[0], -1)
+            a = _fused(a, w, meta, backend)
+    return a
+
+
+class ExecutionPlan:
+    """A FrozenModel lowered to fused kernel calls; jit-compiled per batch
+    shape (serve with a fixed batch size to compile exactly once)."""
+
+    def __init__(self, fm: FrozenModel, *, backend: str = "auto"):
+        self.backend = _resolve_backend(backend)
+        self.input_shape = fm.input_shape
+        self.num_classes = fm.num_classes
+        self.name = fm.name
+        metas = []
+        for layer in fm.layers:
+            out_dtype = (
+                "int8"
+                if layer.apply_relu and _relu_fits_int8(layer.alpha_inv)
+                else "int32"
+            )
+            metas.append(StepMeta(
+                kind=layer.kind, sf=layer.sf, alpha_inv=layer.alpha_inv,
+                apply_relu=layer.apply_relu, pool=layer.pool,
+                kernel_size=layer.w.shape[0] if layer.kind == "conv" else 0,
+                out_dtype=out_dtype,
+            ))
+        self.metas = tuple(metas)
+        self.weights = [layer.w for layer in fm.layers]
+        self._fn = jax.jit(functools.partial(
+            _execute, metas=self.metas, backend=self.backend
+        ))
+
+    def logits(self, x) -> jax.Array:
+        """(N, *input_shape) integer batch → (N, num_classes) int32 logits."""
+        return self._fn(self.weights, x)
+
+    __call__ = logits
+
+    def predict(self, x) -> jax.Array:
+        return jnp.argmax(self.logits(x), axis=-1)
+
+    def summary(self) -> list[dict]:
+        """Per-step introspection incl. the fused-vs-unfused HBM estimate."""
+        rows = []
+        for w, meta in zip(self.weights, self.metas):
+            rows.append({
+                "kind": meta.kind,
+                "weight_shape": tuple(int(d) for d in w.shape),
+                "weight_dtype": str(w.dtype),
+                "sf": meta.sf,
+                "activation_dtype": meta.out_dtype,
+                "pool": meta.pool,
+                # per output element: unfused writes z(int32) + z*(int32) +
+                # act(int32); fused writes only the narrowed activation
+                "hbm_bytes_per_out_elem": {
+                    "unfused": 12,
+                    "fused": jnp.dtype(meta.out_dtype).itemsize,
+                },
+            })
+        return rows
+
+
+def compile_plan(fm: FrozenModel, *, backend: str = "auto") -> ExecutionPlan:
+    """FrozenModel → jit-compiled fused ExecutionPlan."""
+    return ExecutionPlan(fm, backend=backend)

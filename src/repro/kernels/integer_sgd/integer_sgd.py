@@ -25,6 +25,11 @@ from jax.experimental.pallas import tpu as pltpu
 LANE = 128
 DEFAULT_BLOCK_ROWS = 8  # (8, 128) native int32 VREG tile
 
+# jax renamed TPUCompilerParams → CompilerParams; support both.
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
 
 def _integer_sgd_kernel(scalars_ref, w_ref, g_ref, out_ref):
     """scalars = [γ_inv, η_inv]; η_inv == 0 disables decay."""
@@ -82,7 +87,7 @@ def integer_sgd_update(
         ],
         out_specs=pl.BlockSpec((br, LANE), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(wf.shape, w.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -36,6 +36,11 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.activations import mu_int8
 from repro.core.scaling import pow2_split
 
+# jax renamed TPUCompilerParams → CompilerParams; support both.
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
 # MXU-native tile sizes.
 DEFAULT_BM = 128
 DEFAULT_BN = 128
@@ -144,7 +149,7 @@ def nitro_matmul(
         out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], w.shape[1]), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,1 +1,2 @@
-"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs."""
+"""Launchers: production mesh, multi-pod dry-run, train/serve CLIs
+(`serve` = LM engine, `serve_vision` = integer CNN engine)."""

@@ -16,19 +16,30 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+# jax < 0.5 has neither jax.sharding.AxisType nor make_mesh(axis_types=…);
+# newer jax wants the explicit Auto axis type.  One compat entry point.
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(shape, axes):
+    """Version-compat ``jax.make_mesh`` with Auto axis types when supported."""
+    if _HAS_AXIS_TYPES:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many (host) devices the test session has."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def mesh_num_chips(mesh) -> int:

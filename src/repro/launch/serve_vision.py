@@ -1,0 +1,119 @@
+"""Vision serving launcher: freeze → fused plan → batched engine.
+
+    # train briefly, export, then serve synthetic requests:
+    PYTHONPATH=src python -m repro.launch.serve_vision --arch vgg8b \
+        --scale 0.125 --train-steps 50 --requests 200
+
+    # serve an existing exported model:
+    PYTHONPATH=src python -m repro.launch.serve_vision \
+        --model-dir /tmp/nitro_frozen --requests 200
+
+With ``--train-steps 0`` the model is random-init (throughput smoke).
+Prints per-request latency percentiles and the fused-plan summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _train_and_freeze(arch: str, scale: float, steps: int, batch: int,
+                      seed: int):
+    from repro.configs import get_paper_config
+    from repro.core import les
+    from repro.data import synthetic
+    from repro.infer import freeze
+
+    ds = synthetic.make_image_dataset("tiles32", n_train=2048, n_test=256,
+                                      seed=seed)
+    cfg = get_paper_config(arch, scale=scale, input_shape=ds.input_shape)
+    state = les.create_train_state(jax.random.PRNGKey(seed), cfg)
+    if steps:
+        import functools
+        step_fn = jax.jit(functools.partial(les.train_step, cfg=cfg))
+        it = 0
+        while it < steps:
+            for x, y in synthetic.batches(ds.x_train, ds.y_train, batch,
+                                          seed=it):
+                if it >= steps:
+                    break
+                state, metrics = step_fn(
+                    state, x=jnp.asarray(x), labels=jnp.asarray(y),
+                    key=jax.random.PRNGKey(it),
+                )
+                if it % 20 == 0:
+                    print(f"[train] step {it:4d} loss={int(metrics.loss)}")
+                it += 1
+    return freeze(state, cfg), ds
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vgg8b")
+    ap.add_argument("--scale", type=float, default=0.125)
+    ap.add_argument("--train-steps", type=int, default=0)
+    ap.add_argument("--train-batch", type=int, default=64)
+    ap.add_argument("--model-dir", default=None,
+                    help="load a frozen model instead of training")
+    ap.add_argument("--export-dir", default=None,
+                    help="also save the frozen model here")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "pallas", "interpret", "reference"])
+    ap.add_argument("--batch", type=int, default=32,
+                    help="engine compiled batch size")
+    ap.add_argument("--max-wait-ms", type=float, default=3.0)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.infer import compile_plan, load_frozen, save_frozen
+    from repro.serving.vision import VisionEngine
+
+    if args.model_dir:
+        fm = load_frozen(args.model_dir)
+        print(f"[load] {fm.name} from {args.model_dir}")
+    else:
+        fm, _ = _train_and_freeze(args.arch, args.scale, args.train_steps,
+                                  args.train_batch, args.seed)
+    if args.export_dir:
+        path = save_frozen(args.export_dir, fm)
+        print(f"[export] frozen model → {path} ({fm.num_bytes()} weight bytes)")
+
+    plan = compile_plan(fm, backend=args.backend)
+    print(f"[plan] backend={plan.backend}")
+    for row in plan.summary():
+        hbm = row["hbm_bytes_per_out_elem"]
+        print(f"  {row['kind']:<7} w={row['weight_shape']} "
+              f"({row['weight_dtype']}) sf={row['sf']} "
+              f"act={row['activation_dtype']} pool={row['pool']} "
+              f"hbm/elem {hbm['unfused']}B→{hbm['fused']}B")
+
+    rng = np.random.default_rng(args.seed)
+    images = [rng.integers(-127, 128, fm.input_shape).astype(np.int32)
+              for _ in range(args.requests)]
+    with VisionEngine(plan, batch_size=args.batch,
+                      max_wait_ms=args.max_wait_ms) as engine:
+        engine.classify(images[:1])  # warmup compile outside the clock
+        t0 = time.perf_counter()
+        futs = [engine.submit(img) for img in images]
+        results = [f.result() for f in futs]
+        wall = time.perf_counter() - t0
+        stats = engine.stats
+
+    lats = sorted(r.latency_s for r in results)
+    p = lambda q: lats[min(int(q * len(lats)), len(lats) - 1)] * 1e3
+    print(f"[serve] {len(results)} requests in {wall:.3f}s "
+          f"({len(results) / wall:.1f} req/s)")
+    print(f"[serve] latency ms p50={p(0.50):.1f} p90={p(0.90):.1f} "
+          f"p99={p(0.99):.1f}")
+    print(f"[serve] {stats.batches} batches, "
+          f"avg fill {stats.avg_batch_fill:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,17 @@ import jax
 import jax.numpy as jnp
 
 
+def axis_size(axis_name: str) -> int:
+    """jax.lax.axis_size where available (jax ≥ 0.5); psum(1) fallback.
+
+    Public version-compat shim — pipeline.py and any shard_map code that
+    needs the named-axis extent should use this, not jax.lax directly.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return int(jax.lax.psum(1, axis_name))
+
+
 def _ring_perm(n: int):
     return [(i, (i + 1) % n) for i in range(n)]
 
@@ -30,7 +41,7 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
     x: identical-shape local tensor on every rank, first dim divisible by N.
     Returns this rank's reduced chunk (shape x.shape with dim0 / N).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis_name)
@@ -50,7 +61,7 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str) -> jax.Array:
 
 def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
     """All-gather via an (N−1)-step ppermute ring; concatenates on dim0."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis_name)
@@ -66,7 +77,7 @@ def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
 
 def ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     """Bandwidth-optimal ring all-reduce (reduce-scatter + all-gather)."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     pad = (-x.shape[0]) % n

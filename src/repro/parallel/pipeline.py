@@ -20,6 +20,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.collectives import axis_size
+
 
 def split_microbatches(batch: jax.Array, num_micro: int) -> jax.Array:
     """(B, ...) → (M, B/M, ...)."""
@@ -57,7 +59,7 @@ def pipeline_apply(
     # stage-axis schedule: S + M - 1 ticks, each rank active when its
     # stage has a microbatch in flight
     stage = jax.lax.axis_index(axis_name)
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     perm = [(i, (i + 1) % n) for i in range(n)]
 
     m, mb = micros.shape[0], micros.shape[1]

@@ -1,1 +1,6 @@
-"""Serving substrate: batched prefill/decode engine over the model zoo."""
+"""Serving substrate.
+
+engine.py  batched prefill/decode LM engine over the model zoo
+vision.py  dynamic-batching integer CNN engine over a fused
+           repro.infer ExecutionPlan (the NITRO-D deploy path)
+"""

@@ -1,0 +1,176 @@
+"""Batched vision serving engine over a fused integer ExecutionPlan.
+
+Dynamic request batching with a fixed compiled batch shape:
+
+  * ``submit`` enqueues one image on a bounded queue (backpressure: the
+    caller blocks when the engine is saturated rather than growing host
+    memory without bound) and returns a ``concurrent.futures.Future``;
+  * a daemon worker drains the queue — it waits at most ``max_wait_ms``
+    after the first request of a batch, takes up to ``batch_size``
+    requests, zero-pads to exactly ``batch_size`` and runs the plan.
+    Padding to one static shape means the plan jit-compiles exactly once;
+    at high load batches arrive full and the padding cost vanishes.
+
+The same bounded-queue + daemon-thread structure as ``data.loader``'s
+prefetch — the serve-side mirror of the train-side input pipeline.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.infer.plan import ExecutionPlan
+
+
+@dataclass
+class VisionResult:
+    """One classified image: predicted label + integer logits row."""
+
+    label: int
+    logits: np.ndarray
+    latency_s: float
+
+
+@dataclass
+class EngineStats:
+    requests: int = 0
+    batches: int = 0
+    padded_slots: int = 0
+    # bounded: a long-lived engine must not grow host memory per batch
+    batch_latency_s: deque = field(default_factory=lambda: deque(maxlen=1024))
+
+    @property
+    def avg_batch_fill(self) -> float:
+        total = self.requests + self.padded_slots
+        return self.requests / total if total else 0.0
+
+
+class VisionEngine:
+    """Dynamic-batching classifier over a compiled ExecutionPlan."""
+
+    _POISON = object()
+
+    def __init__(
+        self,
+        plan: ExecutionPlan,
+        *,
+        batch_size: int = 32,
+        max_wait_ms: float = 5.0,
+        queue_depth: int = 256,
+    ):
+        self.plan = plan
+        self.batch_size = batch_size
+        self.max_wait_s = max_wait_ms / 1e3
+        self.stats = EngineStats()
+        self._q: queue.Queue = queue.Queue(maxsize=queue_depth)
+        self._closed = False
+        self._lifecycle = threading.Lock()  # orders submit() vs close()
+        self._pad = np.zeros(plan.input_shape, np.int32)
+        self._worker = threading.Thread(target=self._serve_loop, daemon=True)
+        self._worker.start()
+
+    # ---- client API -------------------------------------------------------
+
+    def submit(self, image: np.ndarray) -> "Future[VisionResult]":
+        """Enqueue one image; blocks only when the engine is saturated."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        if tuple(image.shape) != tuple(self.plan.input_shape):
+            raise ValueError(
+                f"image shape {tuple(image.shape)} != "
+                f"plan input shape {tuple(self.plan.input_shape)}"
+            )
+        fut: Future = Future()
+        # the lock orders this put against close()'s poison pill — without
+        # it an item enqueued between the _closed check and put() could land
+        # behind the sentinel and its future would never resolve
+        with self._lifecycle:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            self._q.put((np.asarray(image, np.int32), fut,
+                         time.perf_counter()))
+        return fut
+
+    def classify(self, images) -> list[int]:
+        """Blocking convenience: a list of images → predicted labels."""
+        futs = [self.submit(img) for img in images]
+        return [f.result().label for f in futs]
+
+    def close(self):
+        """Drain in-flight work and stop the worker."""
+        with self._lifecycle:
+            if self._closed:
+                return
+            self._closed = True
+            self._q.put(self._POISON)
+        self._worker.join()
+
+    # ---- worker -----------------------------------------------------------
+
+    def _take_batch(self):
+        """Block for the first request, then fill until batch_size or the
+        max_wait deadline. Returns (items, saw_poison)."""
+        first = self._q.get()
+        if first is self._POISON:
+            return [], True
+        items = [first]
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(items) < self.batch_size:
+            remaining = deadline - time.perf_counter()
+            try:
+                nxt = self._q.get(block=remaining > 0,
+                                  timeout=max(remaining, 1e-4))
+            except queue.Empty:
+                break
+            if nxt is self._POISON:
+                return items, True
+            items.append(nxt)
+        return items, False
+
+    def _serve_loop(self):
+        while True:
+            items, poisoned = self._take_batch()
+            if items:
+                self._run_batch(items)
+            if poisoned:
+                return
+
+    def _run_batch(self, items):
+        t0 = time.perf_counter()
+        n = len(items)
+        batch = np.stack(
+            [img for img, _, _ in items]
+            + [self._pad] * (self.batch_size - n)
+        )
+        try:
+            logits = np.asarray(jax.device_get(self.plan.logits(batch)))
+        except Exception as e:  # surface plan failures on every waiter
+            for _, fut, _ in items:
+                fut.set_exception(e)
+            return
+        t1 = time.perf_counter()
+        labels = np.argmax(logits[:n], axis=-1)
+        for i, (_, fut, t_submit) in enumerate(items):
+            fut.set_result(VisionResult(
+                label=int(labels[i]),
+                logits=logits[i],
+                latency_s=t1 - t_submit,
+            ))
+        self.stats.requests += n
+        self.stats.batches += 1
+        self.stats.padded_slots += self.batch_size - n
+        self.stats.batch_latency_s.append(t1 - t0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

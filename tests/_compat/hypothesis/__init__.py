@@ -1,0 +1,101 @@
+"""Deterministic fallback for the ``hypothesis`` decorators.
+
+Activated by ``tests/conftest.py`` only when the real package is missing.
+Implements exactly the API surface this test-suite uses — ``given``,
+``settings``, and the strategies in ``hypothesis.strategies`` — with a
+seeded PRNG per test (stable across runs) and boundary-biased integer
+draws.  No shrinking, no database, no deadlines: a failing example is
+reported with the drawn values in the assertion context.
+
+``NITRO_HYPOTHESIS_MAX_EXAMPLES`` caps per-test example counts (the real
+package amortises far more examples than a CI container should pay for).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import random
+import zlib
+
+from . import strategies
+
+__all__ = ["given", "settings", "assume", "HealthCheck", "strategies"]
+
+_MAX_EXAMPLES_CAP = int(os.environ.get("NITRO_HYPOTHESIS_MAX_EXAMPLES", "50"))
+
+
+class HealthCheck:
+    """API-compatibility stub (health checks are meaningless here)."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+class _Assumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    """Reject the current example (the runner draws a replacement)."""
+    if not condition:
+        raise _Assumption()
+    return True
+
+
+class settings:
+    """Decorator storing run parameters; composes with ``given`` in either
+    order (the real package allows both)."""
+
+    def __init__(self, max_examples: int = 20, deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._shim_settings = self
+        return fn
+
+
+def given(*given_strategies, **given_kw):
+    """Run the test once per drawn example, deterministically seeded."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = (
+                getattr(wrapper, "_shim_settings", None)
+                or getattr(fn, "_shim_settings", None)
+                or settings()
+            )
+            n = min(cfg.max_examples, _MAX_EXAMPLES_CAP)
+            # stable per-test seed: same examples on every run/machine
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            ran = 0
+            attempts = 0
+            while ran < n and attempts < n * 20:
+                attempts += 1
+                try:
+                    drawn = [s.example(rng) for s in given_strategies]
+                    drawn_kw = {k: s.example(rng) for k, s in given_kw.items()}
+                except _Assumption:
+                    continue
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except _Assumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (shim, draw {ran}): "
+                        f"args={drawn!r} kwargs={drawn_kw!r}"
+                    ) from e
+                ran += 1
+
+        # pytest resolves fixtures from the *original* signature via
+        # ``__wrapped__``; drop it so the drawn parameters aren't mistaken
+        # for fixtures.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return decorate

@@ -1,0 +1,84 @@
+"""Strategy objects for the hypothesis fallback shim.
+
+Each strategy exposes ``example(rng) -> value``.  Integer draws are
+boundary-biased (min, max, 0, ±1 with elevated probability) — most of the
+bugs property tests catch in integer arithmetic live on the boundaries,
+and a uniform draw over ``[-2^24, 2^24]`` would essentially never hit
+them.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from typing import Any, Callable, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any]):
+        self._draw_fn = draw_fn
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw_fn(rng)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    corpus = [v for v in (min_value, max_value, 0, 1, -1, min_value + 1, max_value - 1)
+              if min_value <= v <= max_value]
+
+    def draw(rng: random.Random) -> int:
+        if corpus and rng.random() < 0.2:
+            return rng.choice(corpus)
+        return rng.randint(min_value, max_value)
+
+    return SearchStrategy(draw)
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> SearchStrategy:
+    def draw(rng: random.Random) -> float:
+        if rng.random() < 0.15:
+            return rng.choice([min_value, max_value])
+        if min_value > 0 and max_value / min_value > 1e3:
+            # span several orders of magnitude like hypothesis does
+            lo, hi = math.log(min_value), math.log(max_value)
+            return math.exp(rng.uniform(lo, hi))
+        return rng.uniform(min_value, max_value)
+
+    return SearchStrategy(draw)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements: Sequence[Any]) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng: random.Random) -> list:
+        size = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(size)]
+
+    return SearchStrategy(draw)
+
+
+def just(value: Any) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def composite(fn: Callable) -> Callable:
+    """``@st.composite`` — ``fn(draw, *args)`` becomes a strategy factory."""
+
+    def factory(*args, **kwargs) -> SearchStrategy:
+        def draw_example(rng: random.Random):
+            def draw(strategy: SearchStrategy):
+                return strategy.example(rng)
+
+            return fn(draw, *args, **kwargs)
+
+        return SearchStrategy(draw_example)
+
+    return factory

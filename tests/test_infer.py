@@ -1,0 +1,226 @@
+"""repro.infer: export round-trip, fused-plan bit-exactness, engine e2e.
+
+The acceptance bar: the fused inference plan (Pallas kernel in interpret
+mode off-TPU) must be *bit-exact* with the training-time
+``model.frozen_forward`` on identical frozen params — swept over the paper
+CNN configs — and the VisionEngine must serve a concurrent workload
+end-to-end with identical predictions.
+"""
+
+import tempfile
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import paper
+from repro.core import activations, layers, les, scaling
+from repro.core import model as M
+from repro.infer import compile_plan, freeze, load_frozen, save_frozen
+from repro.infer.plan import _relu_fits_int8
+from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul
+
+
+def _trained_ish_state(cfg, seed=0):
+    """Random-init state (init draws from the trained weight range)."""
+    return les.create_train_state(jax.random.PRNGKey(seed), cfg)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: fused kernel vs the *unfused layer composition* from core
+# ---------------------------------------------------------------------------
+
+
+class TestFusedVsUnfusedLayers:
+    @pytest.mark.parametrize("m,k_dim,n", [
+        (32, 64, 16),     # tile-aligned-ish
+        (33, 257, 65),    # non-tile-multiple everything
+        (1, 7, 3),        # degenerate small
+        (130, 100, 90),   # just past one tile
+    ])
+    def test_linear_pipeline_parity(self, m, k_dim, n):
+        """nitro_matmul(interpret) ≡ linear_forward → scale → NITRO-ReLU."""
+        rng = np.random.default_rng(m + k_dim + n)
+        x = jnp.asarray(rng.integers(-127, 128, (m, k_dim)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, (k_dim, n)), jnp.int32)
+        sf = scaling.linear_scale_factor(k_dim)
+        got = nitro_matmul(x, w, sf=sf, interpret=True, bm=32, bn=32, bk=32)
+        z, _ = layers.linear_forward({"w": w}, x)
+        want = activations.nitro_relu(scaling.scale_forward(z, sf))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("h,w_sp,c,f,ksz", [
+        (6, 6, 3, 8, 3),      # small odd spatial
+        (5, 7, 2, 4, 3),      # non-square, non-tile
+        (8, 8, 4, 8, 5),      # 5×5 kernel
+        (3, 3, 1, 2, 1),      # 1×1 conv
+    ])
+    def test_conv_pipeline_parity(self, h, w_sp, c, f, ksz):
+        """im2col + fused kernel ≡ conv_forward → scale → NITRO-ReLU."""
+        rng = np.random.default_rng(h * 100 + w_sp * 10 + c + f + ksz)
+        x = jnp.asarray(rng.integers(-127, 128, (2, h, w_sp, c)), jnp.int32)
+        wk = jnp.asarray(rng.integers(-80, 81, (ksz, ksz, c, f)), jnp.int32)
+        sf = scaling.conv_scale_factor(ksz, c)
+        patches = layers.im2col(x, ksz, ksz // 2).reshape(-1, ksz * ksz * c)
+        got = nitro_matmul(
+            patches, wk.reshape(-1, f), sf=sf, interpret=True,
+            bm=32, bn=32, bk=32,
+        ).reshape(2, h, w_sp, f)
+        z, _ = layers.conv_forward({"w": wk}, x)
+        want = activations.nitro_relu(scaling.scale_forward(z, sf))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_int8_activation_narrowing_is_lossless(self):
+        """The plan's int8 inter-layer dtype only triggers when the
+        NITRO-ReLU output range provably fits."""
+        assert _relu_fits_int8(10) and _relu_fits_int8(3)
+        assert not _relu_fits_int8(1)  # range [-126, 128] — must stay int32
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: frozen export round-trip + plan bit-exactness on paper configs
+# ---------------------------------------------------------------------------
+
+
+class TestFrozenExport:
+    def test_freeze_drops_learning_layers_and_narrows(self):
+        cfg = paper.get("vgg8b", scale=0.0625)
+        state = _trained_ish_state(cfg)
+        fm = freeze(state, cfg)
+        # blocks + output layer, nothing else
+        assert len(fm.layers) == cfg.num_blocks + 1
+        assert fm.layers[-1].kind == "output"
+        assert not fm.layers[-1].apply_relu
+        # every weight kept losslessly in a narrowed dtype
+        for layer, p in zip(fm.layers[:-1], state.params["blocks"]):
+            np.testing.assert_array_equal(
+                np.asarray(layer.w, dtype=np.int64),
+                np.asarray(p["fw"]["w"], dtype=np.int64),
+            )
+            assert layer.w.dtype in (jnp.int8, jnp.int16, jnp.int32)
+        # frozen artifact is far smaller than the train-state weights
+        train_bytes = sum(
+            int(p.size) * 4 for p in jax.tree_util.tree_leaves(state.params)
+        )
+        assert fm.num_bytes() < train_bytes // 2
+
+    def test_save_load_roundtrip_exact(self):
+        cfg = paper.get("vgg8b", scale=0.0625)
+        fm = freeze(_trained_ish_state(cfg), cfg)
+        with tempfile.TemporaryDirectory() as d:
+            save_frozen(d, fm)
+            fm2 = load_frozen(d)
+        assert fm2.input_shape == fm.input_shape
+        assert fm2.num_classes == fm.num_classes
+        for a, b in zip(fm.layers, fm2.layers):
+            assert (a.kind, a.sf, a.alpha_inv, a.apply_relu, a.pool) == \
+                   (b.kind, b.sf, b.alpha_inv, b.apply_relu, b.pool)
+            assert a.w.dtype == b.w.dtype
+            np.testing.assert_array_equal(np.asarray(a.w), np.asarray(b.w))
+
+    def test_load_rejects_non_frozen_checkpoint(self):
+        from repro.train import checkpoint as ckpt
+
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 0, {"w": jnp.zeros((3,), jnp.int32)})
+            with pytest.raises(ValueError, match="not a frozen"):
+                load_frozen(d)
+
+
+class TestPlanBitExactness:
+    @pytest.mark.parametrize("arch", ["vgg8b", "vgg11b"])
+    @pytest.mark.parametrize("backend", ["reference", "interpret"])
+    def test_plan_matches_frozen_forward(self, arch, backend):
+        """Acceptance criterion: fused plan ≡ M.forward(train=False) logits
+        on identical frozen params for the paper CNN configs."""
+        cfg = paper.get(arch, scale=0.0625)
+        state = _trained_ish_state(cfg, seed=7)
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(
+            rng.integers(-127, 128, (4, *cfg.input_shape)), jnp.int32
+        )
+        want = M.frozen_forward(state.params, cfg, x)
+        plan = compile_plan(freeze(state, cfg), backend=backend)
+        got = plan.logits(x)
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_plan_matches_on_mlp(self):
+        """Linear-only paper config goes through the same fused path."""
+        cfg = paper.get("mlp1", scale=0.25)
+        state = _trained_ish_state(cfg, seed=3)
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.integers(-127, 128, (8, 784)), jnp.int32)
+        want = M.frozen_forward(state.params, cfg, x)
+        got = compile_plan(freeze(state, cfg), backend="reference").logits(x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_predict_consistency_across_batch_shapes(self):
+        """jit per-batch-shape caching returns identical rows."""
+        cfg = paper.get("vgg8b", scale=0.0625)
+        state = _trained_ish_state(cfg)
+        plan = compile_plan(freeze(state, cfg), backend="reference")
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(
+            rng.integers(-127, 128, (8, *cfg.input_shape)), jnp.int32
+        )
+        full = np.asarray(plan.logits(x))
+        half = np.asarray(plan.logits(x[:3]))
+        np.testing.assert_array_equal(half, full[:3])
+
+
+# ---------------------------------------------------------------------------
+# Engine integration (excluded from quick CI via the slow marker)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestVisionEngineIntegration:
+    def test_concurrent_clients_bit_exact_and_stats(self):
+        from repro.serving.vision import VisionEngine
+
+        cfg = paper.get("vgg8b", scale=0.0625)
+        state = _trained_ish_state(cfg, seed=2)
+        plan = compile_plan(freeze(state, cfg), backend="reference")
+        rng = np.random.default_rng(9)
+        images = [
+            rng.integers(-127, 128, cfg.input_shape).astype(np.int32)
+            for _ in range(48)
+        ]
+        predictions = np.full(len(images), -1, np.int64)
+
+        with VisionEngine(plan, batch_size=16, max_wait_ms=2.0) as engine:
+            def client(worker, n_workers=3):
+                for i in range(worker, len(images), n_workers):
+                    predictions[i] = engine.submit(images[i]).result().label
+
+            threads = [threading.Thread(target=client, args=(w,))
+                       for w in range(3)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            stats = engine.stats
+
+        want = np.asarray(
+            M.predict(state.params, cfg, jnp.asarray(np.stack(images)))
+        )
+        np.testing.assert_array_equal(predictions, want)
+        assert stats.requests == len(images)
+        assert stats.batches >= 1
+
+    def test_submit_after_close_raises_and_shape_validated(self):
+        from repro.serving.vision import VisionEngine
+
+        cfg = paper.get("vgg8b", scale=0.0625)
+        plan = compile_plan(
+            freeze(_trained_ish_state(cfg), cfg), backend="reference"
+        )
+        engine = VisionEngine(plan, batch_size=4, max_wait_ms=1.0)
+        with pytest.raises(ValueError, match="shape"):
+            engine.submit(np.zeros((8, 8, 3), np.int32))
+        engine.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            engine.submit(np.zeros(cfg.input_shape, np.int32))

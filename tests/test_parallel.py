@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import make_mesh
 from repro.parallel import collectives as coll
 from repro.parallel import compress
 from repro.parallel.sharding import (
@@ -40,19 +41,13 @@ class TestShardingRules:
         assert s["p_fsdp"] is None  # weights replicated over data at serve
 
     def test_resolve_inside_context(self):
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        mesh = make_mesh((1, 1), ("data", "model"))
         with use_rules(mesh, train_rules()):
             spec = resolve(("batch", None, "heads"))
             assert spec == jax.sharding.PartitionSpec(("data",), None, "model")
 
     def test_constraint_applies_in_jit(self):
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        )
+        mesh = make_mesh((1, 1), ("data", "model"))
 
         def f(x):
             with use_rules(mesh, train_rules()):
@@ -67,9 +62,7 @@ class TestRingCollectives:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
-        mesh = jax.make_mesh(
-            (n,), ("x",), axis_types=(jax.sharding.AxisType.Auto,)
-        )
+        mesh = make_mesh((n,), ("x",))
         return shard_map(
             fn, mesh=mesh, in_specs=P("x"), out_specs=P("x")
         )(*args)
@@ -123,7 +116,7 @@ class TestGradientCompression:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
-        mesh = jax.make_mesh((1,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("pod",))
         g = {"w": jnp.asarray([2**30, -(2**30), 123], jnp.int32)}
         out = shard_map(
             lambda t: compress.exact_integer_psum(t, "pod"),
@@ -194,7 +187,7 @@ class TestCheckpoint:
         exercised by the dry-run; this validates the API path."""
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",))
         tree = {"w": jnp.arange(16, dtype=jnp.float32)}
         ckpt.save(str(tmp_path), 1, tree)
         shardings = {"w": NamedSharding(mesh, P("data"))}

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Quick CI gate: the tier-1 test command (minus slow integration tests)
+# plus a kernel benchmark smoke.  Run from anywhere; ~a few minutes on CPU.
+#
+#   tools/ci_check.sh          # quick gate
+#   FULL=1 tools/ci_check.sh   # include slow integration tests (tier-1 exact)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${FULL:-0}" == "1" ]]; then
+    python -m pytest -x -q
+else
+    python -m pytest -x -q -m "not slow"
+fi
+
+python -m benchmarks.run --quick --only kernel
+echo "[ci_check] OK"
