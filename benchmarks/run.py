@@ -28,12 +28,14 @@ def main() -> None:
         table1_mlp,
         table2_cnn,
         table8_lr,
+        train_step,
         weight_range,
     )
 
     q = args.quick
     suites = [
         ("kernel", lambda: kernel_bench.run()),
+        ("train", lambda: train_step.run(quick=q)),
         ("infer", lambda: serve_infer.run(quick=q)),
         ("table1", lambda: table1_mlp.run(steps=150 if q else 600)),
         ("table2", lambda: table2_cnn.run(steps=80 if q else 250)),

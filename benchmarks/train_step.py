@@ -1,0 +1,127 @@
+"""Training-step benchmark: fused vs unfused forward on the paper CNNs.
+
+Times one jit-compiled ``les.train_step`` with the forward pass routed
+through the fused ``nitro_matmul`` entry point (``fused=True``, the
+default) against the unfused matmul → NITRO Scaling → NITRO-ReLU
+reference composition (``fused=False``), at a CPU-feasible scale of the
+paper's VGG8B/VGG11B configs.  Before timing, the two paths are checked
+to produce bit-identical parameters after one step — the benchmark never
+compares two computations that disagree.
+
+Emits the usual ``name,us_per_call,derived`` CSV rows on stdout *and*
+machine-readable ``BENCH_train.json`` in the CWD (the artifact README's
+training-speed claims reference).
+
+    PYTHONPATH=src python -m benchmarks.train_step [--quick] [--smoke]
+
+``--smoke`` runs a tiny 8×8 config in seconds — the CI gate
+(tools/ci_check.sh) uses it to keep the benchmark import-and-run path
+exercised on every commit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+JSON_PATH = "BENCH_train.json"
+
+# (arch, scale, batch) — paper CNN topologies at CI-feasible width
+CONFIGS = [
+    ("vgg8b", 0.0625, 16),
+    ("vgg11b", 0.0625, 8),
+]
+
+
+def _tiny_cfg():
+    from repro.core.blocks import BlockSpec
+    from repro.core.model import NitroConfig
+
+    return NitroConfig(
+        blocks=(BlockSpec("conv", 8, pool=True, d_lr=64),
+                BlockSpec("linear", 16)),
+        input_shape=(8, 8, 3), num_classes=10, gamma_inv=512,
+        name="tiny-smoke",
+    )
+
+
+def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
+    from repro.core import les, model as M
+
+    state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-127, 128, (batch, *cfg.input_shape)),
+                    jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.num_classes, batch), jnp.int32)
+    key = jax.random.PRNGKey(2)
+
+    steps = {
+        mode: jax.jit(functools.partial(les.train_step, cfg=cfg, fused=f))
+        for mode, f in (("fused", True), ("unfused", False))
+    }
+
+    # parity gate: one step, bit-identical parameters
+    out = {m: fn(state, x=x, labels=labels, key=key) for m, fn in steps.items()}
+    for pf, pu in zip(jax.tree_util.tree_leaves(out["fused"][0].params),
+                      jax.tree_util.tree_leaves(out["unfused"][0].params)):
+        np.testing.assert_array_equal(np.asarray(pf), np.asarray(pu))
+
+    us = {
+        m: time_fn(fn, state, x=x, labels=labels, key=key,
+                   iters=iters, warmup=1)
+        for m, fn in steps.items()
+    }
+    speedup = us["unfused"] / us["fused"] if us["fused"] else 0.0
+    for m in ("fused", "unfused"):
+        emit(f"train/{cfg.name}/{m}", us[m],
+             f"batch {batch}; {us[m] / batch:.1f} us/sample")
+    emit(f"train/{cfg.name}/speedup", 0.0, f"{speedup:.2f}x fused/unfused")
+
+    results.append({
+        "arch": cfg.name,
+        "batch": batch,
+        "params": M.count_params(state.params),
+        "us_per_step": {m: us[m] for m in us},
+        "us_per_sample": {m: us[m] / batch for m in us},
+        "speedup_fused_over_unfused": speedup,
+        "bit_exact": True,  # asserted above before timing
+    })
+
+
+def run(quick: bool = False, smoke: bool = False) -> None:
+    from repro.configs import paper
+    from repro.kernels.nitro_matmul.ops import resolve_backend
+
+    iters = 3 if (quick or smoke) else 10
+    results: list[dict] = []
+    if smoke:
+        _bench_config(_tiny_cfg(), batch=8, iters=iters, results=results)
+    else:
+        for arch, scale, batch in CONFIGS:
+            cfg = paper.get(arch, scale=scale)
+            _bench_config(cfg, batch=batch, iters=iters, results=results)
+    payload = {
+        "benchmark": "train_step",
+        "backend": jax.default_backend(),
+        "kernel_backend_auto": resolve_backend("auto"),
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("train/json", 0.0, JSON_PATH)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer timing iters")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config only (CI import-and-run gate)")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

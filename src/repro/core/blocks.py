@@ -28,9 +28,23 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import activations, layers, scaling
+from repro.core import activations, layers, numerics, scaling
 from repro.core.losses import rss_grad
 from repro.core.numerics import INT_DTYPE
+
+
+def _nitro_ops():
+    """Lazy import of the fused-kernel dispatcher.
+
+    ``repro.core.__init__`` imports this module, and the kernel package
+    imports ``repro.core`` leaf modules — a module-level import here would
+    make ``import repro.kernels.nitro_matmul`` (as the first repro import
+    of a process) circular.  Resolving at trace time breaks the cycle; the
+    cost is one sys.modules lookup per traced layer.
+    """
+    from repro.kernels.nitro_matmul import ops
+
+    return ops
 
 
 @dataclass(frozen=True)
@@ -93,21 +107,57 @@ def forward_layers(
     *,
     dropout_key: jax.Array | None = None,
     train: bool = True,
+    fused: bool = True,
+    backend: str = "auto",
 ) -> tuple[jax.Array, dict]:
-    """Run a block's forward layers; cache everything backward needs."""
+    """Run a block's forward layers; cache everything backward needs.
+
+    ``fused=True`` (default) routes the matmul → NITRO Scaling → NITRO-ReLU
+    pipeline through the fused ``nitro_matmul`` kernel entry point the
+    inference plan already uses: one VMEM pass emitting both the activation
+    ``a`` and the pre-ReLU ``z_star`` the backward needs, instead of three
+    HBM round-trips of the int32 pre-activation.  ``fused=False`` is the
+    unfused reference composition — bit-exact with the fused path (the
+    tests enforce it), kept as the escape hatch/oracle.
+
+    The cache contract is identical in both modes (``z_star`` + the
+    layer input), so ``forward_layers_backward`` is unchanged.
+    """
     cache: dict[str, Any] = {}
     if spec.kind == "conv":
-        z, cache["conv"] = layers.conv_forward(params["fw"], x)
         c_in = x.shape[-1]
         sf = scaling.conv_scale_factor(spec.kernel_size, c_in)
+        if fused:
+            numerics.assert_int(x, "conv input")
+            n, h, w_sp, _ = x.shape
+            patches, w_flat = layers.conv_im2col_operands(params["fw"]["w"], x)
+            a2, z2 = _nitro_ops().fused_matmul_fwd(
+                patches, w_flat, sf=sf, alpha_inv=spec.alpha_inv,
+                backend=backend,
+            )
+            f = w_flat.shape[-1]
+            a = a2.reshape(n, h, w_sp, f)
+            cache["z_star"] = z2.reshape(n, h, w_sp, f)
+            cache["conv"] = layers.ConvCache(x=x)
+        else:
+            z, cache["conv"] = layers.conv_forward(params["fw"], x)
     else:
         if x.ndim > 2:  # flatten conv activations entering a linear block
             x, _ = layers.flatten_forward(x)
-        z, cache["linear"] = layers.linear_forward(params["fw"], x)
         sf = scaling.linear_scale_factor(x.shape[-1])
-    z_star = scaling.scale_forward(z, sf)
-    cache["z_star"] = z_star
-    a = activations.nitro_relu(z_star, spec.alpha_inv)
+        if fused:
+            numerics.assert_int(x, "linear input")
+            a, cache["z_star"] = _nitro_ops().fused_matmul_fwd(
+                x, params["fw"]["w"], sf=sf, alpha_inv=spec.alpha_inv,
+                backend=backend,
+            )
+            cache["linear"] = x
+        else:
+            z, cache["linear"] = layers.linear_forward(params["fw"], x)
+    if not fused:
+        z_star = scaling.scale_forward(z, sf)
+        cache["z_star"] = z_star
+        a = activations.nitro_relu(z_star, spec.alpha_inv)
     if spec.pool:
         a, cache["pool"] = layers.maxpool_forward(a)
     if train and spec.dropout > 0.0:

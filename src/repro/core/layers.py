@@ -80,6 +80,22 @@ def im2col(x: jax.Array, kernel_size: int, padding: int) -> jax.Array:
     return patches.reshape(n, h, w, k * k * c)
 
 
+def conv_im2col_operands(
+    w: jax.Array, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Lower a 'same' conv to 2-D matmul operands.
+
+    (N,H,W,C) input + (K,K,C,F) weight → (N·H·W, K²C) patches and (K²C, F)
+    flattened weight.  Shared by the reference ``conv_forward``, the fused
+    training forward in ``core.blocks``, and the inference plan — one
+    definition of the patch/weight layout keeps all three bit-identical.
+    """
+    k = w.shape[0]
+    n, h, ww, c = x.shape
+    patches = im2col(x, k, k // 2).reshape(n * h * ww, k * k * c)
+    return patches, w.reshape(-1, w.shape[-1])
+
+
 class ConvCache(NamedTuple):
     x: jax.Array  # input activations (N,H,W,C)
 
@@ -87,11 +103,9 @@ class ConvCache(NamedTuple):
 def conv_forward(params: dict, x: jax.Array) -> tuple[jax.Array, ConvCache]:
     """z[n,h,w,f] = Σ_{i,j,c} x[n,h+i-p,w+j-p,c] · W[i,j,c,f] (int32)."""
     numerics.assert_int(x, "conv input")
-    k = params["w"].shape[0]
-    pad = k // 2
-    patches = im2col(x, k, pad)  # (N,H,W,KKC)
-    w_flat = params["w"].reshape(-1, params["w"].shape[-1])  # (KKC,F)
-    z = int_matmul(patches, w_flat)
+    n, h, ww, _ = x.shape
+    patches, w_flat = conv_im2col_operands(params["w"], x)
+    z = int_matmul(patches, w_flat).reshape(n, h, ww, w_flat.shape[-1])
     return z, ConvCache(x=x)
 
 
@@ -107,18 +121,17 @@ def conv_backward(
     """
     w = params["w"]
     k, _, c_in, c_out = w.shape
-    pad = k // 2
     x = cache.x
     n, h, ww, _ = x.shape
 
-    patches = im2col(x, k, pad).reshape(n * h * ww, k * k * c_in)
+    patches, _ = conv_im2col_operands(w, x)
     g_flat = grad_out.reshape(n * h * ww, c_out)
     grad_w = int_matmul(patches.T, g_flat).reshape(k, k, c_in, c_out)
 
     # grad_x: conv of g with W rotated 180° and (c_in, c_out) swapped.
     w_rot = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2)  # (K,K,F,C)
-    g_patches = im2col(grad_out, k, pad)
-    grad_x = int_matmul(g_patches, w_rot.reshape(-1, c_in))
+    g_patches, w_rot_flat = conv_im2col_operands(w_rot, grad_out)
+    grad_x = int_matmul(g_patches, w_rot_flat).reshape(n, h, ww, c_in)
     return grad_x, {"w": grad_w}
 
 

@@ -60,14 +60,22 @@ def train_step(
     x: jax.Array,
     labels: jax.Array,
     key: jax.Array,
+    *,
+    fused: bool = True,
+    backend: str = "auto",
 ) -> tuple[TrainState, StepMetrics]:
-    """One integer-only NITRO-D step over a batch. jit-able (cfg static)."""
+    """One integer-only NITRO-D step over a batch. jit-able (cfg static).
+
+    The forward pass runs on the fused ``nitro_matmul`` kernel by default
+    (the same entry point the inference plan compiles to); ``fused=False``
+    is the unfused reference escape hatch, bit-exact with the fused step.
+    """
     params = state.params
     y = one_hot_int(labels, cfg.num_classes)
 
     # ---- forward ----------------------------------------------------------
     y_hat, acts, fw_caches, out_cache = M.forward(
-        params, cfg, x, train=True, key=key
+        params, cfg, x, train=True, key=key, fused=fused, backend=backend
     )
 
     # ---- output layers ----------------------------------------------------

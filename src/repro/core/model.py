@@ -56,11 +56,18 @@ def forward(
     *,
     train: bool = False,
     key: jax.Array | None = None,
+    fused: bool = True,
+    backend: str = "auto",
 ) -> tuple[jax.Array, list[jax.Array], list[dict], dict]:
     """Full forward pass.
 
     Returns (ŷ, block activations a_1..a_L, forward caches, output cache).
     Inference callers only use ŷ; the LES trainer consumes the rest.
+
+    ``fused`` selects the block-layer implementation: the fused
+    ``nitro_matmul`` entry point shared with the inference plan (default),
+    or the unfused matmul → scale → relu reference composition — bit-exact
+    with each other, test-enforced.
     """
     a = jnp.asarray(x, INT_DTYPE)
     acts: list[jax.Array] = []
@@ -70,7 +77,10 @@ def forward(
     else:
         drop_keys = [None] * cfg.num_blocks
     for spec, p, dk in zip(cfg.blocks, params["blocks"], drop_keys):
-        a, cache = B.forward_layers(p, spec, a, dropout_key=dk, train=train)
+        a, cache = B.forward_layers(
+            p, spec, a, dropout_key=dk, train=train,
+            fused=fused, backend=backend,
+        )
         acts.append(a)
         caches.append(cache)
     y_hat, out_cache = B.output_forward(params["output"], a)
@@ -83,8 +93,10 @@ def frozen_forward(params: dict, cfg: NitroConfig, x: jax.Array) -> jax.Array:
     The single source of truth for the deploy-time forward: ``les.eval_step``,
     ``predict`` and the ``repro.infer`` parity reference all route through it,
     so the fused inference plan has exactly one oracle to match bit-for-bit.
+    Deliberately runs the *unfused* reference composition — it must stay an
+    independent oracle for the fused kernel paths (train and infer alike).
     """
-    y_hat, _, _, _ = forward(params, cfg, x, train=False)
+    y_hat, _, _, _ = forward(params, cfg, x, train=False, fused=False)
     return y_hat
 
 

@@ -23,6 +23,7 @@ from repro.infer.export import (  # noqa: F401
     FrozenModel,
     freeze,
     load_frozen,
+    quantization_report,
     save_frozen,
 )
 from repro.infer.plan import ExecutionPlan, compile_plan  # noqa: F401

@@ -15,6 +15,12 @@ actually needs:
     pooling flag — everything the plan compiler needs without the original
     ``NitroConfig``.
 
+``quantization_report`` turns a FrozenModel into the paper's §4.4
+bit-growth analysis: per-layer min/max, the exact two's-complement
+bit-width the trained weights occupy, and a power-of-two magnitude
+histogram.  ``save_frozen`` writes it as ``QUANT_REPORT.json`` alongside
+the manifest (worked example in ``docs/ARCHITECTURE.md``).
+
 On disk a frozen model is a ``train.checkpoint`` manifest directory (one
 npy per weight, MANIFEST.json written last with fsync) whose ``extra``
 field carries the topology — the same crash-safe format the trainer
@@ -108,6 +114,90 @@ def freeze(state_or_params, cfg: M.NitroConfig) -> FrozenModel:
 
 
 # ---------------------------------------------------------------------------
+# Quantisation report — per-layer bit-width/histogram (paper §4.4)
+# ---------------------------------------------------------------------------
+
+REPORT_FORMAT = "nitro-quant-report-v1"
+REPORT_FILENAME = "QUANT_REPORT.json"
+
+
+def _twos_complement_bits(lo: int, hi: int) -> int:
+    """Smallest two's-complement width holding every value in [lo, hi]."""
+    bits = 1
+    while lo < -(1 << (bits - 1)) or hi > (1 << (bits - 1)) - 1:
+        bits += 1
+    return bits
+
+
+def _magnitude_histogram(arr: np.ndarray) -> dict[str, int]:
+    """Counts per power-of-two magnitude bucket.
+
+    Bucket ``"0"`` counts exact zeros; bucket ``"b"`` (b ≥ 1) counts values
+    with 2^(b-1) ≤ |v| < 2^b — i.e. values whose magnitude needs exactly
+    ``b`` bits.  This is the paper's Fig.-style bit-growth view: the
+    highest occupied bucket ``b`` puts the layer's two's-complement
+    ``bit_width`` at ``b + 1`` (sign bit), or exactly ``b`` when the only
+    magnitude-``b`` values are negative powers of two (e.g. [-8, 7] fits
+    4 bits although |−8| occupies bucket 4).
+    """
+    mag = np.abs(arr.astype(np.int64))
+    # |v| ≤ 2^31 ⇒ float64 log2 is exact enough for the integer floor
+    bl = np.where(mag > 0, np.floor(np.log2(np.maximum(mag, 1))).astype(np.int64) + 1, 0)
+    buckets, counts = np.unique(bl, return_counts=True)
+    return {str(int(b)): int(c) for b, c in zip(buckets, counts)}
+
+
+def quantization_report(fm: FrozenModel) -> dict:
+    """Per-layer bit-width / histogram report for a FrozenModel.
+
+    Pure metadata (JSON-serialisable) — the §4.4 bit-growth analysis of the
+    exported weights: how many bits each layer actually occupies vs the
+    dtype it was narrowed to, where the values concentrate, and the total
+    artifact size vs a naive int32 export.
+    """
+    report_layers = []
+    total_bytes = 0
+    total_int32_bytes = 0
+    max_bits = 0
+    for i, layer in enumerate(fm.layers):
+        arr = np.asarray(jax.device_get(layer.w))
+        lo, hi = int(arr.min()), int(arr.max())
+        bits = _twos_complement_bits(lo, hi)
+        max_bits = max(max_bits, bits)
+        nbytes = int(arr.size) * arr.dtype.itemsize
+        total_bytes += nbytes
+        total_int32_bytes += int(arr.size) * 4
+        report_layers.append({
+            "index": i,
+            "kind": layer.kind,
+            "shape": [int(d) for d in arr.shape],
+            "dtype": str(arr.dtype),
+            "sf": layer.sf,
+            "alpha_inv": layer.alpha_inv,
+            "params": int(arr.size),
+            "bytes": nbytes,
+            "min": lo,
+            "max": hi,
+            "zero_fraction": float((arr == 0).mean()),
+            "bit_width": bits,
+            "dtype_bits": arr.dtype.itemsize * 8,
+            "magnitude_histogram": _magnitude_histogram(arr.ravel()),
+        })
+    return {
+        "format": REPORT_FORMAT,
+        "name": fm.name,
+        "num_layers": len(fm.layers),
+        "max_bit_width": max_bits,
+        "total_bytes": total_bytes,
+        "total_int32_bytes": total_int32_bytes,
+        "compression_vs_int32": (
+            total_int32_bytes / total_bytes if total_bytes else 1.0
+        ),
+        "layers": report_layers,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Persistence — train/checkpoint manifest format, topology in `extra`
 # ---------------------------------------------------------------------------
 
@@ -127,9 +217,17 @@ def _topology(fm: FrozenModel) -> dict:
 
 
 def save_frozen(path: str, fm: FrozenModel) -> str:
-    """Write the frozen model as a COMPLETE manifest checkpoint."""
+    """Write the frozen model as a COMPLETE manifest checkpoint.
+
+    Also drops ``QUANT_REPORT.json`` (the per-layer bit-width/histogram
+    report) next to the manifest — informational only, written after the
+    COMPLETE marker so it never gates checkpoint validity.
+    """
     tree = [{"w": l.w} for l in fm.layers]
-    return ckpt.save(path, 0, tree, extra=_topology(fm))
+    step_dir = ckpt.save(path, 0, tree, extra=_topology(fm))
+    with open(os.path.join(step_dir, REPORT_FILENAME), "w") as f:
+        json.dump(quantization_report(fm), f, indent=2)
+    return step_dir
 
 
 def load_frozen(path: str) -> FrozenModel:

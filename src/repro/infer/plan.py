@@ -1,12 +1,13 @@
 """Compile a FrozenModel into a fused integer execution plan.
 
-The training-time forward (``core.blocks.forward_layers``) runs each layer
-as three separate XLA ops — integer matmul, NITRO Scaling, NITRO-ReLU —
-materialising the int32 pre-activation ``z`` in HBM between each.  The plan
-lowers every layer onto the fused ``nitro_matmul`` Pallas kernel instead:
+The plan lowers every layer onto the fused ``nitro_matmul`` Pallas kernel:
 ``z`` lives in a VMEM scratch accumulator and only the final activation is
 written back, narrowed to int8 whenever the NITRO-ReLU output range fits
 (it always does for α_inv ≥ 2 — the range is [⌊-127/α_inv⌋-μ, 127-μ]).
+Training shares the same kernel entry point (``kernels.nitro_matmul.ops``)
+via ``core.blocks.forward_layers``; inference differs only in dropping the
+``z_star`` cache and narrowing inter-layer activations
+(see ``docs/ARCHITECTURE.md``).
 
     HBM traffic per layer:  unfused  M·N·(4+4+4) bytes  →  fused  M·N·1
 
@@ -35,13 +36,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.activations import mu_int8
-from repro.core.layers import _window_view, im2col
+from repro.core.layers import _window_view, conv_im2col_operands
 from repro.core.numerics import INT_DTYPE
 from repro.infer.export import FrozenModel
-from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul
-from repro.kernels.nitro_matmul.ref import nitro_matmul_ref
-
-BACKENDS = ("auto", "pallas", "interpret", "reference")
+from repro.kernels.nitro_matmul import ops as nitro_ops
+from repro.kernels.nitro_matmul.ops import BACKENDS  # noqa: F401 — re-export (historical public name)
 
 
 class StepMeta(NamedTuple):
@@ -64,27 +63,17 @@ def _relu_fits_int8(alpha_inv: int) -> bool:
     return -128 <= lo and hi <= 127
 
 
-def _resolve_backend(backend: str) -> str:
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "reference"
-    return backend
-
-
 def _fused(x2, w2, meta: StepMeta, backend: str):
-    """One fused matmul+scale(+relu) on 2-D operands."""
-    out_dtype = jnp.dtype(meta.out_dtype)
-    if backend == "reference":
-        return nitro_matmul_ref(
-            x2, w2, sf=meta.sf,
-            alpha_inv=meta.alpha_inv or 1, apply_relu=meta.apply_relu,
-            out_dtype=out_dtype,
-        )
-    return nitro_matmul(
-        x2, w2, sf=meta.sf,
-        alpha_inv=meta.alpha_inv or 1, apply_relu=meta.apply_relu,
-        out_dtype=out_dtype, interpret=(backend == "interpret"),
+    """One fused matmul+scale(+relu) on 2-D operands.
+
+    Delegates to the kernel package's shared dispatcher — the same entry
+    point ``core.blocks.forward_layers`` uses for the fused training
+    forward, so train and infer execute one kernel implementation.
+    """
+    return nitro_ops.fused_matmul(
+        x2, w2, sf=meta.sf, alpha_inv=meta.alpha_inv,
+        apply_relu=meta.apply_relu, out_dtype=jnp.dtype(meta.out_dtype),
+        backend=backend,
     )
 
 
@@ -97,10 +86,9 @@ def _execute(weights, x, *, metas: tuple[StepMeta, ...], backend: str):
     a = jnp.asarray(x, INT_DTYPE)
     for w, meta in zip(weights, metas):
         if meta.kind == "conv":
-            n, h, ww, c = a.shape
-            k = meta.kernel_size
-            patches = im2col(a, k, k // 2).reshape(n * h * ww, k * k * c)
-            out = _fused(patches, w.reshape(-1, w.shape[-1]), meta, backend)
+            n, h, ww, _ = a.shape
+            patches, w_flat = conv_im2col_operands(w, a)
+            out = _fused(patches, w_flat, meta, backend)
             a = out.reshape(n, h, ww, w.shape[-1])
             if meta.pool:
                 a = _maxpool2x2(a)
@@ -116,7 +104,7 @@ class ExecutionPlan:
     shape (serve with a fixed batch size to compile exactly once)."""
 
     def __init__(self, fm: FrozenModel, *, backend: str = "auto"):
-        self.backend = _resolve_backend(backend)
+        self.backend = nitro_ops.resolve_backend(backend)
         self.input_shape = fm.input_shape
         self.num_classes = fm.num_classes
         self.name = fm.name

@@ -1,5 +1,23 @@
-from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul
-from repro.kernels.nitro_matmul.ops import nitro_conv2d, nitro_linear
-from repro.kernels.nitro_matmul.ref import nitro_matmul_ref
+from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul, nitro_matmul_fwd
+from repro.kernels.nitro_matmul.ops import (
+    BACKENDS,
+    fused_matmul,
+    fused_matmul_fwd,
+    nitro_conv2d,
+    nitro_linear,
+    resolve_backend,
+)
+from repro.kernels.nitro_matmul.ref import nitro_matmul_fwd_ref, nitro_matmul_ref
 
-__all__ = ["nitro_matmul", "nitro_matmul_ref", "nitro_linear", "nitro_conv2d"]
+__all__ = [
+    "BACKENDS",
+    "fused_matmul",
+    "fused_matmul_fwd",
+    "nitro_matmul",
+    "nitro_matmul_fwd",
+    "nitro_matmul_fwd_ref",
+    "nitro_matmul_ref",
+    "nitro_conv2d",
+    "nitro_linear",
+    "resolve_backend",
+]

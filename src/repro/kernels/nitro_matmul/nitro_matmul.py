@@ -47,6 +47,43 @@ DEFAULT_BN = 128
 DEFAULT_BK = 128
 
 
+def _scale_tile(z, sf_shift: int, sf_residual: int):
+    """NITRO Scaling on a VMEM tile: ⌊z / (residual · 2^shift)⌋.
+
+    Arithmetic right shift implements the power-of-two floor division
+    exactly; composing the two floors is exact because both divisors are
+    positive (⌊⌊z/a⌋/b⌋ = ⌊z/(ab)⌋).
+    """
+    if sf_shift:
+        z = jax.lax.shift_right_arithmetic(z, sf_shift)
+    if sf_residual != 1:
+        z = jnp.floor_divide(z, sf_residual)
+    return z
+
+
+def _relu_tile(z, alpha_inv: int, mu: int):
+    """NITRO-ReLU on a VMEM tile (VPU select/min/max/floor-div)."""
+    neg = jnp.floor_divide(jnp.maximum(z, -127), alpha_inv)
+    pos = jnp.minimum(z, 127)
+    return jnp.where(z < 0, neg, pos) - mu
+
+
+def _accumulate_tile(x_ref, w_ref, acc_ref):
+    """Zero the VMEM accumulator at k == 0, then MXU-accumulate one
+    (bm, bk)·(bk, bn) partial product — int32 accumulation."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32),
+        w_ref[...].astype(jnp.int32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
 def _nitro_matmul_kernel(
     x_ref,
     w_ref,
@@ -62,33 +99,96 @@ def _nitro_matmul_kernel(
     out_dtype,
 ):
     """One (bm, bn) output tile; accumulates over the K grid dimension."""
-
-    @pl.when(pl.program_id(2) == 0)
-    def _zero_acc():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    # MXU: integer dot with int32 accumulation.
-    acc_ref[...] += jax.lax.dot_general(
-        x_ref[...].astype(jnp.int32),
-        w_ref[...].astype(jnp.int32),
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32,
-    )
+    _accumulate_tile(x_ref, w_ref, acc_ref)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _epilogue():
-        z = acc_ref[...]
-        # NITRO Scaling: ⌊z / (residual · 2^shift)⌋.  Arithmetic right shift
-        # implements the power-of-two floor division exactly.
-        if sf_shift:
-            z = jax.lax.shift_right_arithmetic(z, sf_shift)
-        if sf_residual != 1:
-            z = jnp.floor_divide(z, sf_residual)
+        z = _scale_tile(acc_ref[...], sf_shift, sf_residual)
         if apply_relu:
-            neg = jnp.floor_divide(jnp.maximum(z, -127), alpha_inv)
-            pos = jnp.minimum(z, 127)
-            z = jnp.where(z < 0, neg, pos) - mu
+            z = _relu_tile(z, alpha_inv, mu)
         out_ref[...] = z.astype(out_dtype)
+
+
+def _nitro_matmul_fwd_kernel(
+    x_ref,
+    w_ref,
+    a_ref,
+    zstar_ref,
+    acc_ref,
+    *,
+    n_k: int,
+    sf_shift: int,
+    sf_residual: int,
+    alpha_inv: int,
+    mu: int,
+    out_dtype,
+):
+    """Training-forward variant: one accumulation pass, two outputs.
+
+    Writes both the post-ReLU activation ``a`` (the block output) and the
+    pre-ReLU scaled ``z*`` (the NITRO-ReLU/STE backward's only dependency
+    on the forward pass) from the same VMEM accumulator — the unfused
+    pipeline writes z (int32), z* (int32) and a (int32) to HBM; this
+    writes a + z* and never materialises the raw pre-activation z.
+    """
+    _accumulate_tile(x_ref, w_ref, acc_ref)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        z_star = _scale_tile(acc_ref[...], sf_shift, sf_residual)
+        zstar_ref[...] = z_star
+        a_ref[...] = _relu_tile(z_star, alpha_inv, mu).astype(out_dtype)
+
+
+def _tile_geometry(x: jax.Array, w: jax.Array, bm: int, bn: int, bk: int):
+    """Pad operands up to tile multiples (zero padding is exact for integer
+    matmul); returns padded operands, clamped block sizes, and the grid."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    pm, pn, pk = (-m) % bm_, (-n) % bn_, (-k) % bk_
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        w = jnp.pad(w, ((0, pk), (0, pn)))
+    gm, gn, gk = x.shape[0] // bm_, w.shape[1] // bn_, x.shape[1] // bk_
+    return x, w, (bm_, bn_, bk_), (gm, gn, gk)
+
+
+def _launch(kernel, x, w, tiles, grid, *, out_dtypes, interpret):
+    """Shared ``pallas_call`` scaffolding for both kernel variants.
+
+    Everything that must stay in lockstep between the single-output and
+    fused-forward kernels lives here — grid, BlockSpecs/index maps, the
+    VMEM accumulator scratch, and dimension semantics.  The variants
+    differ only in kernel body and the number of (bm, bn) outputs, given
+    by ``out_dtypes``.
+    """
+    bm_, bn_, bk_ = tiles
+    gm, gn, gk = grid
+    out_specs = [
+        pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)) for _ in out_dtypes
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((x.shape[0], w.shape[1]), dt) for dt in out_dtypes
+    ]
+    single = len(out_dtypes) == 1
+    return pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=out_specs[0] if single else out_specs,
+        out_shape=out_shape[0] if single else out_shape,
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)
 
 
 @functools.partial(
@@ -116,17 +216,8 @@ def nitro_matmul(
     Pads every dimension up to its tile multiple (zero padding is exact for
     integer matmul) and slices the result back.
     """
-    m, k = x.shape
-    k2, n = w.shape
-    assert k == k2, f"contraction mismatch {k} vs {k2}"
-
-    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
-    pm, pn, pk = (-m) % bm_, (-n) % bn_, (-k) % bk_
-    if pm or pk:
-        x = jnp.pad(x, ((0, pm), (0, pk)))
-    if pk or pn:
-        w = jnp.pad(w, ((0, pk), (0, pn)))
-    gm, gn, gk = x.shape[0] // bm_, w.shape[1] // bn_, x.shape[1] // bk_
+    m, n = x.shape[0], w.shape[1]
+    x, w, (bm_, bn_, bk_), (gm, gn, gk) = _tile_geometry(x, w, bm, bn, bk)
 
     shift, residual = pow2_split(sf)
     kernel = functools.partial(
@@ -139,19 +230,55 @@ def nitro_matmul(
         apply_relu=apply_relu,
         out_dtype=out_dtype,
     )
-    out = pl.pallas_call(
-        kernel,
-        grid=(gm, gn, gk),
-        in_specs=[
-            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((x.shape[0], w.shape[1]), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(x, w)
+    out = _launch(
+        kernel, x, w, (bm_, bn_, bk_), (gm, gn, gk),
+        out_dtypes=[out_dtype], interpret=interpret,
+    )
     return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "sf", "alpha_inv", "out_dtype", "bm", "bn", "bk", "interpret",
+    ),
+)
+def nitro_matmul_fwd(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    out_dtype=jnp.int32,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused *training* forward: returns ``(a, z_star)`` in one pass.
+
+    ``a = nitro_relu(⌊(x @ w)/sf⌋)`` is the layer output; ``z_star`` is the
+    int32 pre-ReLU scaled tensor the LES backward consumes (NITRO-ReLU
+    segment selection + STE through the scaling layer).  Both come out of
+    the same VMEM accumulator, so the raw int32 pre-activation ``z`` never
+    touches HBM — the bandwidth win of the inference plan, extended to the
+    train step.
+    """
+    m, n = x.shape[0], w.shape[1]
+    x, w, (bm_, bn_, bk_), (gm, gn, gk) = _tile_geometry(x, w, bm, bn, bk)
+
+    shift, residual = pow2_split(sf)
+    kernel = functools.partial(
+        _nitro_matmul_fwd_kernel,
+        n_k=gk,
+        sf_shift=shift,
+        sf_residual=residual,
+        alpha_inv=alpha_inv,
+        mu=mu_int8(alpha_inv),
+        out_dtype=out_dtype,
+    )
+    a, z_star = _launch(
+        kernel, x, w, (bm_, bn_, bk_), (gm, gn, gk),
+        out_dtypes=[out_dtype, jnp.int32], interpret=interpret,
+    )
+    return a[:m, :n], z_star[:m, :n]

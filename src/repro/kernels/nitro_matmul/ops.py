@@ -1,26 +1,107 @@
-"""Public jit'd wrappers around the fused NITRO matmul kernel.
+"""Public wrappers + backend dispatch for the fused NITRO matmul kernel.
 
-``nitro_linear`` / ``nitro_conv2d`` are drop-in fused replacements for the
-reference layer pipeline (IntegerLinear/IntegerConv2D → NITRO Scaling →
-NITRO-ReLU).  On CPU (this container) they run the kernel in interpret
-mode or fall back to the oracle; on TPU they emit the Pallas kernel.
+This module is the **single entry point** both forward paths share:
+
+  * training — ``core.blocks.forward_layers`` calls ``fused_matmul_fwd``
+    (returns the activation *and* the cached pre-ReLU ``z_star``);
+  * inference — ``infer.plan`` calls ``fused_matmul`` (activation only,
+    optionally narrowed to int8 between layers).
+
+Backend selection is centralised here (``resolve_backend``):
+
+  * ``'pallas'``     — the real TPU kernel;
+  * ``'interpret'``  — the same kernel through the Pallas interpreter
+                       (bit-exact off-TPU; what the parity tests use);
+  * ``'reference'``  — the pure-jnp oracle from ``ref.py`` (fast on CPU);
+  * ``'auto'``       — pallas on TPU, reference elsewhere.
+
+``nitro_linear`` / ``nitro_conv2d`` remain as drop-in fused replacements
+for the reference layer pipeline (IntegerLinear/IntegerConv2D → NITRO
+Scaling → NITRO-ReLU) with the legacy ``use_kernel``/``interpret`` knobs.
 """
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.layers import im2col
+from repro.core.layers import conv_im2col_operands
 from repro.core.scaling import conv_scale_factor, linear_scale_factor
-from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul
-from repro.kernels.nitro_matmul.ref import nitro_matmul_ref
+from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul, nitro_matmul_fwd
+from repro.kernels.nitro_matmul.ref import nitro_matmul_fwd_ref, nitro_matmul_ref
+
+BACKENDS = ("auto", "pallas", "interpret", "reference")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str) -> str:
+    """Validate + resolve ``'auto'`` to a concrete backend for this host."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "reference"
+    return backend
+
+
+def fused_matmul(
+    x2: jax.Array,
+    w2: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    apply_relu: bool = True,
+    out_dtype=jnp.int32,
+    backend: str = "auto",
+) -> jax.Array:
+    """One fused matmul+scale(+relu) on 2-D operands — the inference step."""
+    backend = resolve_backend(backend)
+    if backend == "reference":
+        return nitro_matmul_ref(
+            x2, w2, sf=sf, alpha_inv=alpha_inv or 1, apply_relu=apply_relu,
+            out_dtype=out_dtype,
+        )
+    return nitro_matmul(
+        x2, w2, sf=sf, alpha_inv=alpha_inv or 1, apply_relu=apply_relu,
+        out_dtype=out_dtype, interpret=(backend == "interpret"),
+    )
+
+
+def fused_matmul_fwd(
+    x2: jax.Array,
+    w2: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    backend: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Fused training forward on 2-D operands: ``(a, z_star)``, both int32.
+
+    ``a`` keeps int32 (not the inference plan's int8 narrowing) so the
+    fused train step is bit- *and dtype*-identical to the unfused
+    reference pipeline; ``z_star`` is what ``forward_layers_backward``
+    consumes for the NITRO-ReLU/STE backward.
+    """
+    backend = resolve_backend(backend)
+    if backend == "reference":
+        return nitro_matmul_fwd_ref(x2, w2, sf=sf, alpha_inv=alpha_inv)
+    return nitro_matmul_fwd(
+        x2, w2, sf=sf, alpha_inv=alpha_inv,
+        interpret=(backend == "interpret"),
+    )
+
+
+def _legacy_backend(use_kernel: bool | None, interpret: bool | None) -> str:
+    """Map the historical ``use_kernel``/``interpret`` knobs to a backend."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return "reference"
+    if interpret is None:
+        interpret = not _on_tpu()
+    return "interpret" if interpret else "pallas"
 
 
 def nitro_linear(
@@ -40,22 +121,12 @@ def nitro_linear(
     tests exercise the kernel explicitly with ``interpret=True``).
     """
     m = x.shape[-1]
-    sf = linear_scale_factor(m)
     lead = x.shape[:-1]
-    x2 = x.reshape(-1, m)
-    if use_kernel is None:
-        use_kernel = _on_tpu()
-    if use_kernel:
-        out = nitro_matmul(
-            x2, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
-            out_dtype=out_dtype,
-            interpret=(not _on_tpu()) if interpret is None else interpret,
-        )
-    else:
-        out = nitro_matmul_ref(
-            x2, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
-            out_dtype=out_dtype,
-        )
+    out = fused_matmul(
+        x.reshape(-1, m), w, sf=linear_scale_factor(m), alpha_inv=alpha_inv,
+        apply_relu=apply_relu, out_dtype=out_dtype,
+        backend=_legacy_backend(use_kernel, interpret),
+    )
     return out.reshape(*lead, w.shape[-1])
 
 
@@ -77,21 +148,11 @@ def nitro_conv2d(
     """
     k = w.shape[0]
     c_in = x.shape[-1]
-    sf = conv_scale_factor(k, c_in)
     n, h, ww, _ = x.shape
-    patches = im2col(x, k, k // 2).reshape(n * h * ww, k * k * c_in)
-    w_flat = w.reshape(-1, w.shape[-1])
-    if use_kernel is None:
-        use_kernel = _on_tpu()
-    if use_kernel:
-        out = nitro_matmul(
-            patches, w_flat, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
-            out_dtype=out_dtype,
-            interpret=(not _on_tpu()) if interpret is None else interpret,
-        )
-    else:
-        out = nitro_matmul_ref(
-            patches, w_flat, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
-            out_dtype=out_dtype,
-        )
+    patches, w_flat = conv_im2col_operands(w, x)
+    out = fused_matmul(
+        patches, w_flat, sf=conv_scale_factor(k, c_in), alpha_inv=alpha_inv,
+        apply_relu=apply_relu, out_dtype=out_dtype,
+        backend=_legacy_backend(use_kernel, interpret),
+    )
     return out.reshape(n, h, ww, w.shape[-1])

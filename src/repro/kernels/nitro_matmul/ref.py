@@ -29,3 +29,22 @@ def nitro_matmul_ref(
     if apply_relu:
         z_star = nitro_relu(z_star, alpha_inv)
     return z_star.astype(out_dtype)
+
+
+def nitro_matmul_fwd_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    out_dtype=jnp.int32,
+) -> tuple[jax.Array, jax.Array]:
+    """Training-forward oracle: ``(a, z_star)``, matching ``nitro_matmul_fwd``.
+
+    ``z_star`` is always int32 — it is the tensor ``core.blocks`` caches for
+    the NITRO-ReLU/STE backward, so its dtype must match ``scale_forward``.
+    """
+    z = int_matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    z_star = scale_forward(z, sf)
+    a = nitro_relu(z_star, alpha_inv)
+    return a.astype(out_dtype), z_star

@@ -1,0 +1,221 @@
+"""Fused training forward: kernel contract + bit-exactness vs the unfused path.
+
+The tentpole guarantee: routing ``forward_layers`` / ``train_step`` through
+the fused ``nitro_matmul`` entry point changes *nothing* numerically — the
+activation ``a``, the cached pre-ReLU ``z_star``, and the post-step
+parameters are all bit-identical with the unfused matmul → NITRO Scaling →
+NITRO-ReLU reference composition, on the paper CNN configs, for every
+backend the dispatcher can select off-TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import paper
+from repro.core import blocks as B
+from repro.core import les, model as M
+from repro.core.blocks import BlockSpec
+from repro.core.model import NitroConfig
+from repro.core.scaling import linear_scale_factor
+from repro.kernels.nitro_matmul import (
+    fused_matmul_fwd,
+    nitro_matmul_fwd,
+    nitro_matmul_fwd_ref,
+    resolve_backend,
+)
+
+
+def _state(cfg, seed=0):
+    return les.create_train_state(jax.random.PRNGKey(seed), cfg)
+
+
+def tiny_cnn_cfg(**kw):
+    return NitroConfig(
+        blocks=(
+            BlockSpec("conv", 16, pool=True, d_lr=256),
+            BlockSpec("linear", 64),
+        ),
+        input_shape=(8, 8, 3),
+        num_classes=10,
+        gamma_inv=512,
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level: the (a, z_star) fused-forward contract
+# ---------------------------------------------------------------------------
+
+
+class TestFusedForwardKernel:
+    @pytest.mark.parametrize("m,k_dim,n", [
+        (32, 64, 16),     # tile-aligned-ish
+        (33, 257, 65),    # non-tile-multiple everything
+        (1, 7, 3),        # degenerate small
+        (130, 100, 90),   # just past one tile
+    ])
+    def test_fwd_kernel_matches_ref(self, m, k_dim, n):
+        """nitro_matmul_fwd(interpret) ≡ (nitro_relu(z*), z*) from the refs."""
+        rng = np.random.default_rng(m + k_dim + n)
+        x = jnp.asarray(rng.integers(-127, 128, (m, k_dim)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, (k_dim, n)), jnp.int32)
+        sf = linear_scale_factor(k_dim)
+        a_k, z_k = nitro_matmul_fwd(
+            x, w, sf=sf, interpret=True, bm=32, bn=32, bk=32
+        )
+        a_r, z_r = nitro_matmul_fwd_ref(x, w, sf=sf)
+        np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+        np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
+        # z_star must keep the int32 dtype scale_forward produces — it is
+        # cached for the NITRO-ReLU/STE backward.
+        assert z_k.dtype == jnp.int32 and z_r.dtype == jnp.int32
+
+    def test_kernels_first_import_order(self):
+        """``import repro.kernels.nitro_matmul`` as a process's first repro
+        import must not be circular (core.blocks lazy-imports the kernel
+        dispatcher precisely to keep this order legal)."""
+        import os
+        import subprocess
+        import sys
+
+        env = dict(os.environ)
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env["PYTHONPATH"] = os.path.join(root, "src")
+        proc = subprocess.run(
+            [sys.executable, "-c",
+             "import repro.kernels.nitro_matmul as k; k.fused_matmul_fwd"],
+            env=env, capture_output=True, text=True,
+        )
+        assert proc.returncode == 0, proc.stderr
+
+    def test_dispatcher_resolves_auto_off_tpu(self):
+        assert resolve_backend("auto") in ("pallas", "reference")
+        assert resolve_backend("interpret") == "interpret"
+        with pytest.raises(ValueError, match="unknown backend"):
+            resolve_backend("cuda")
+
+    def test_dispatcher_backends_agree(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.integers(-127, 128, (17, 50)), jnp.int32)
+        w = jnp.asarray(rng.integers(-127, 128, (50, 9)), jnp.int32)
+        sf = linear_scale_factor(50)
+        a_ref, z_ref = fused_matmul_fwd(x, w, sf=sf, backend="reference")
+        a_int, z_int = fused_matmul_fwd(x, w, sf=sf, backend="interpret")
+        np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_int))
+        np.testing.assert_array_equal(np.asarray(z_ref), np.asarray(z_int))
+
+
+# ---------------------------------------------------------------------------
+# Block/model-level: fused forward_layers ≡ unfused on the paper configs
+# ---------------------------------------------------------------------------
+
+
+class TestForwardLayersParity:
+    @pytest.mark.parametrize("arch", ["vgg8b", "vgg11b"])
+    def test_fused_forward_bit_exact_on_paper_cnn(self, arch):
+        """Acceptance criterion: fused ≡ unfused forward (activations AND
+        the cached z_star) through every block of the paper CNN configs."""
+        cfg = paper.get(arch, scale=0.0625)
+        state = _state(cfg, seed=7)
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(
+            rng.integers(-127, 128, (4, *cfg.input_shape)), jnp.int32
+        )
+        y_f, acts_f, caches_f, _ = M.forward(
+            state.params, cfg, x, train=False, fused=True
+        )
+        y_u, acts_u, caches_u, _ = M.forward(
+            state.params, cfg, x, train=False, fused=False
+        )
+        np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+        for af, au, cf, cu in zip(acts_f, acts_u, caches_f, caches_u):
+            assert af.dtype == au.dtype
+            np.testing.assert_array_equal(np.asarray(af), np.asarray(au))
+            assert cf["z_star"].dtype == cu["z_star"].dtype
+            np.testing.assert_array_equal(
+                np.asarray(cf["z_star"]), np.asarray(cu["z_star"])
+            )
+
+    def test_fused_interpret_backend_matches_on_single_block(self):
+        """The Pallas kernel (interpret mode) slots into forward_layers."""
+        spec = BlockSpec("conv", 12, pool=True, d_lr=128)
+        cfg = NitroConfig(blocks=(spec,), input_shape=(6, 6, 3),
+                          num_classes=10)
+        p = M.init_params(jax.random.PRNGKey(0), cfg)["blocks"][0]
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.integers(-127, 128, (3, 6, 6, 3)), jnp.int32)
+        a_i, c_i = B.forward_layers(p, spec, x, train=False,
+                                    fused=True, backend="interpret")
+        a_u, c_u = B.forward_layers(p, spec, x, train=False, fused=False)
+        np.testing.assert_array_equal(np.asarray(a_i), np.asarray(a_u))
+        np.testing.assert_array_equal(
+            np.asarray(c_i["z_star"]), np.asarray(c_u["z_star"])
+        )
+
+    def test_cache_contract_identical(self):
+        """Backward consumes the same cache keys whichever forward ran."""
+        spec = BlockSpec("linear", 32)
+        cfg = NitroConfig(blocks=(spec,), input_shape=(20,), num_classes=10)
+        p = M.init_params(jax.random.PRNGKey(1), cfg)["blocks"][0]
+        x = jnp.asarray(
+            np.random.default_rng(0).integers(-127, 128, (5, 20)), jnp.int32
+        )
+        _, c_f = B.forward_layers(p, spec, x, train=False, fused=True)
+        _, c_u = B.forward_layers(p, spec, x, train=False, fused=False)
+        assert set(c_f) == set(c_u)
+        np.testing.assert_array_equal(
+            np.asarray(c_f["linear"]), np.asarray(c_u["linear"])
+        )
+
+
+# ---------------------------------------------------------------------------
+# Train-step-level: one fused step ≡ one unfused step, params and metrics
+# ---------------------------------------------------------------------------
+
+
+class TestTrainStepParity:
+    @pytest.mark.parametrize("cfg_fn", [
+        lambda: tiny_cnn_cfg(eta_fw=12000, eta_lr=3000),
+        lambda: paper.get("vgg8b", scale=0.0625),
+    ])
+    def test_fused_step_bit_exact(self, cfg_fn):
+        cfg = cfg_fn()
+        st = _state(cfg)
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(
+            rng.integers(-127, 128, (8, *cfg.input_shape)), jnp.int32
+        )
+        y = jnp.asarray(rng.integers(0, cfg.num_classes, 8), jnp.int32)
+        key = jax.random.PRNGKey(9)
+        st_f, m_f = jax.jit(functools.partial(
+            les.train_step, cfg=cfg, fused=True))(st, x=x, labels=y, key=key)
+        st_u, m_u = jax.jit(functools.partial(
+            les.train_step, cfg=cfg, fused=False))(st, x=x, labels=y, key=key)
+        for pf, pu in zip(jax.tree_util.tree_leaves(st_f.params),
+                          jax.tree_util.tree_leaves(st_u.params)):
+            np.testing.assert_array_equal(np.asarray(pf), np.asarray(pu))
+        assert int(m_f.loss) == int(m_u.loss)
+        np.testing.assert_array_equal(
+            np.asarray(m_f.local_losses), np.asarray(m_u.local_losses)
+        )
+
+    def test_fused_multi_step_training_stays_exact(self):
+        """Divergence can compound: run several steps and compare params."""
+        cfg = tiny_cnn_cfg(eta_fw=20000, eta_lr=5000)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.integers(-127, 128, (16, 8, 8, 3)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, 10, 16), jnp.int32)
+        st_f = st_u = _state(cfg)
+        step_f = jax.jit(functools.partial(les.train_step, cfg=cfg, fused=True))
+        step_u = jax.jit(functools.partial(les.train_step, cfg=cfg, fused=False))
+        for i in range(10):
+            k = jax.random.PRNGKey(i)
+            st_f, _ = step_f(st_f, x=x, labels=y, key=k)
+            st_u, _ = step_u(st_u, x=x, labels=y, key=k)
+        for pf, pu in zip(jax.tree_util.tree_leaves(st_f.params),
+                          jax.tree_util.tree_leaves(st_u.params)):
+            np.testing.assert_array_equal(np.asarray(pf), np.asarray(pu))

@@ -129,6 +129,63 @@ class TestFrozenExport:
                 load_frozen(d)
 
 
+class TestQuantizationReport:
+    """Satellite: per-layer bit-width/histogram report (paper §4.4)."""
+
+    def test_report_structure_and_counts(self):
+        import json
+
+        from repro.infer import quantization_report
+
+        cfg = paper.get("vgg8b", scale=0.0625)
+        fm = freeze(_trained_ish_state(cfg), cfg)
+        report = quantization_report(fm)
+        assert report["format"] == "nitro-quant-report-v1"
+        assert report["num_layers"] == len(fm.layers)
+        json.dumps(report)  # must be a pure-JSON artifact
+        for row, layer in zip(report["layers"], fm.layers):
+            w = np.asarray(layer.w, dtype=np.int64)
+            assert row["min"] == int(w.min()) and row["max"] == int(w.max())
+            # histogram covers every weight exactly once
+            assert sum(row["magnitude_histogram"].values()) == w.size
+            # declared bit-width actually holds the observed range...
+            lo, hi = -(2 ** (row["bit_width"] - 1)), 2 ** (row["bit_width"] - 1) - 1
+            assert lo <= row["min"] and row["max"] <= hi
+            # ...and fits inside the narrowed storage dtype
+            assert row["bit_width"] <= row["dtype_bits"]
+
+    def test_report_bit_width_is_tight(self):
+        from repro.infer.export import FrozenLayer, FrozenModel, quantization_report
+
+        w = jnp.asarray([[-5, 3], [7, 0]], jnp.int8)  # range needs 4 bits
+        fm = FrozenModel(
+            layers=(FrozenLayer("linear", w, sf=512, alpha_inv=10,
+                                apply_relu=True, pool=False),),
+            input_shape=(2,), num_classes=2, name="stub",
+        )
+        row = quantization_report(fm)["layers"][0]
+        assert row["bit_width"] == 4
+        assert row["magnitude_histogram"] == {"0": 1, "2": 1, "3": 2}
+        assert row["zero_fraction"] == 0.25
+
+    def test_save_frozen_writes_report(self):
+        import json
+        import os
+
+        cfg = paper.get("vgg8b", scale=0.0625)
+        fm = freeze(_trained_ish_state(cfg), cfg)
+        with tempfile.TemporaryDirectory() as d:
+            step_dir = save_frozen(d, fm)
+            report_path = os.path.join(step_dir, "QUANT_REPORT.json")
+            assert os.path.exists(report_path)
+            with open(report_path) as f:
+                report = json.load(f)
+            assert report["num_layers"] == len(fm.layers)
+            # the report rides along without breaking the load path
+            fm2 = load_frozen(d)
+            assert len(fm2.layers) == len(fm.layers)
+
+
 class TestPlanBitExactness:
     @pytest.mark.parametrize("arch", ["vgg8b", "vgg11b"])
     @pytest.mark.parametrize("backend", ["reference", "interpret"])

@@ -35,9 +35,36 @@ def toy_data():
     return jnp.asarray(x.astype(np.int32)), jnp.asarray(y)
 
 
+def _assert_jaxpr_integer_only(jaxpr):
+    """Recursively assert no float dtype appears anywhere in a jaxpr.
+
+    Descends into sub-jaxprs carried in eqn params (pjit, cond, and —
+    crucially — the Pallas kernel body inside ``pallas_call``), so the
+    fused-kernel path is actually inspected, not just the call wrapping it.
+    """
+    for eqn in jaxpr.eqns:
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None and hasattr(aval, "dtype"):
+                assert "float" not in str(aval.dtype), f"float op: {eqn}"
+        for param in eqn.params.values():
+            items = param if isinstance(param, (tuple, list)) else [param]
+            for item in items:
+                if isinstance(item, jax.core.ClosedJaxpr):
+                    _assert_jaxpr_integer_only(item.jaxpr)
+                elif isinstance(item, jax.core.Jaxpr):
+                    _assert_jaxpr_integer_only(item)
+
+
 class TestTrainStep:
-    def test_step_is_integer_only(self, toy_data):
-        """No float dtype anywhere in the jit-compiled training step."""
+    @pytest.mark.parametrize("fused,backend", [
+        (True, "auto"),        # the default train path
+        (True, "interpret"),   # the actual Pallas kernel body, off-TPU
+        (False, "auto"),       # unfused reference escape hatch
+    ])
+    def test_step_is_integer_only(self, toy_data, fused, backend):
+        """No float dtype anywhere in the jit-compiled training step —
+        fused (including inside the Pallas kernel jaxpr) and unfused."""
         cfg = NitroConfig(
             blocks=(BlockSpec("conv", 16, pool=True, d_lr=256, dropout=0.1),
                     BlockSpec("linear", 64, dropout=0.1)),
@@ -46,14 +73,11 @@ class TestTrainStep:
         )
         x, y = toy_data
         st = les.create_train_state(jax.random.PRNGKey(0), cfg)
-        jaxpr = jax.make_jaxpr(functools.partial(les.train_step, cfg=cfg))(
-            st, x=x[:8], labels=y[:8], key=jax.random.PRNGKey(1)
-        )
-        for eqn in jaxpr.jaxpr.eqns:
-            for v in list(eqn.invars) + list(eqn.outvars):
-                aval = getattr(v, "aval", None)
-                if aval is not None and hasattr(aval, "dtype"):
-                    assert "float" not in str(aval.dtype), f"float op: {eqn}"
+        jaxpr = jax.make_jaxpr(
+            functools.partial(les.train_step, cfg=cfg, fused=fused,
+                              backend=backend)
+        )(st, x=x[:8], labels=y[:8], key=jax.random.PRNGKey(1))
+        _assert_jaxpr_integer_only(jaxpr.jaxpr)
 
     def test_loss_decreases_on_learnable_task(self, toy_data):
         x, y = toy_data

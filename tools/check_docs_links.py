@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Docs link checker: fail on broken relative links in README.md and docs/.
+
+Scans markdown inline links ``[text](target)`` in README.md and every
+``docs/*.md``.  External schemes (http/https/mailto) are skipped;
+everything else is resolved relative to the file it appears in and must
+exist in the working tree.  Fragments are validated too: for a link into
+a markdown file (``page.md#section`` or in-page ``#section``), the
+fragment must match the GitHub-style slug of a heading in the target
+file.  Exit 0 = all links OK.
+
+    python tools/check_docs_links.py
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+SKIP_PREFIXES = ("http://", "https://", "mailto:")
+
+
+def _slugify(heading: str) -> str:
+    """GitHub anchor slug: lowercase, drop punctuation, spaces → hyphens."""
+    text = heading.strip().lower()
+    text = re.sub(r"[`*_]", "", text)         # inline markdown markers
+    text = re.sub(r"[^\w\- ]", "", text)      # punctuation (keeps unicode \w)
+    return text.replace(" ", "-")
+
+
+def _anchors(md: Path, cache: dict[Path, set[str]]) -> set[str]:
+    if md not in cache:
+        cache[md] = {
+            _slugify(m.group(1))
+            for line in md.read_text().splitlines()
+            if (m := HEADING_RE.match(line))
+        }
+    return cache[md]
+
+
+def check_file(md: Path, root: Path, anchor_cache: dict) -> list[str]:
+    errors = []
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path, _, fragment = target.partition("#")
+            dest = md if not path else (md.parent / path)
+            if not dest.exists():
+                errors.append(
+                    f"{md.relative_to(root)}:{lineno}: broken link -> {target}"
+                )
+                continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in _anchors(dest, anchor_cache):
+                    errors.append(
+                        f"{md.relative_to(root)}:{lineno}: "
+                        f"broken anchor -> {target}"
+                    )
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    files = [f for f in files if f.exists()]
+    anchor_cache: dict[Path, set[str]] = {}
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, root, anchor_cache))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[check_docs_links] {len(files)} files, "
+          f"{len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
 # Quick CI gate: the tier-1 test command (minus slow integration tests)
-# plus a kernel benchmark smoke.  Run from anywhere; ~a few minutes on CPU.
+# plus a kernel benchmark smoke, a fused-training benchmark smoke, and a
+# docs link check.  Run from anywhere; ~a few minutes on CPU.
 #
 #   tools/ci_check.sh          # quick gate
 #   FULL=1 tools/ci_check.sh   # include slow integration tests (tier-1 exact)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python tools/check_docs_links.py
 
 if [[ "${FULL:-0}" == "1" ]]; then
     python -m pytest -x -q
@@ -15,4 +18,5 @@ else
 fi
 
 python -m benchmarks.run --quick --only kernel
+python -m benchmarks.train_step --smoke
 echo "[ci_check] OK"
