@@ -1,10 +1,28 @@
-"""Shared benchmark utilities: timing + CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, the CI smoke config."""
 
 from __future__ import annotations
 
 import time
 
 import jax
+
+
+def tiny_smoke_cfg():
+    """The shared ``--smoke`` topology: one conv + one linear block at 8×8.
+
+    Used by the train-step and fleet-serving benchmark smokes so both CI
+    gates exercise the same model (a drifted copy would smoke different
+    models under one name).
+    """
+    from repro.core.blocks import BlockSpec
+    from repro.core.model import NitroConfig
+
+    return NitroConfig(
+        blocks=(BlockSpec("conv", 8, pool=True, d_lr=64),
+                BlockSpec("linear", 16)),
+        input_shape=(8, 8, 3), num_classes=10, gamma_inv=512,
+        name="tiny-smoke",
+    )
 
 
 def time_fn(fn, *args, iters: int = 10, warmup: int = 2, **kw) -> float:

@@ -24,6 +24,7 @@ def main() -> None:
         ablations,
         kernel_bench,
         roofline,
+        serve_fleet,
         serve_infer,
         table1_mlp,
         table2_cnn,
@@ -37,6 +38,7 @@ def main() -> None:
         ("kernel", lambda: kernel_bench.run()),
         ("train", lambda: train_step.run(quick=q)),
         ("infer", lambda: serve_infer.run(quick=q)),
+        ("serve", lambda: serve_fleet.run(quick=q)),
         ("table1", lambda: table1_mlp.run(steps=150 if q else 600)),
         ("table2", lambda: table2_cnn.run(steps=80 if q else 250)),
         ("table8", lambda: table8_lr.run(steps=60 if q else 150)),

@@ -1,0 +1,253 @@
+"""Fleet serving benchmark: continuous vs static batching, A/B routing.
+
+Head-to-head of the two vision schedulers on one frozen CNN at equal
+compiled batch size, **closed-loop load**: ``n_clients = batch/2``
+synchronous clients, each submitting its next request only after the
+previous answer arrives — the regime real serving traffic looks like
+(every user waits for their result), and the one where the schedulers
+structurally differ:
+
+  * ``static``     — ``VisionEngine``: with fewer concurrent clients
+                     than ``batch_size`` the queue never fills, so EVERY
+                     batch stalls for the full ``max_wait_ms`` before
+                     launching, then host and device serialise
+                     (stack → launch → block);
+  * ``continuous`` — ``FleetEngine``: the in-flight batch is the wait
+                     timer; from idle only the ~1 ms coalescing window
+                     applies, and host work overlaps device execution.
+
+Per batch the static engine pays ``max_wait_ms + compute`` against the
+continuous engine's ``coalesce_ms + compute`` — the measured speedup is
+that ratio, not scheduler noise.  (Fully-saturated offline load is the
+regime where the two converge for compute-bound models: with a full
+queue the static engine never waits either.)
+
+Before timing, the two paths are checked to produce bit-identical logits
+on a probe batch — the benchmark never compares two computations that
+disagree.  Each scheduler is run ``reps`` times and the best wall clock
+is kept (min-of-N: scheduling noise only ever slows a run down).
+
+A second section serves a two-model fleet through a 90/10 A/B split to
+record the router + weighted-round-robin overhead next to the
+single-model numbers.
+
+Emits the usual ``name,us_per_call,derived`` CSV rows on stdout *and*
+machine-readable ``BENCH_serve.json`` in the CWD.
+
+    PYTHONPATH=src python -m benchmarks.serve_fleet [--quick] [--smoke]
+
+``--smoke`` runs a tiny 8×8 config in seconds — the CI gate
+(tools/ci_check.sh) uses it to keep the fleet path exercised on every
+commit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, tiny_smoke_cfg
+
+JSON_PATH = "BENCH_serve.json"
+
+# (arch, scale, engine batch) — paper topology at a scale where one batch
+# computes in ~10 ms on CPU: big enough to be a real model, small enough
+# that the schedulers' structural per-batch difference (static's
+# max_wait_ms stall vs the ~1 ms coalescing window) is not drowned by
+# compute-time noise on a shared machine
+CONFIGS = [
+    ("vgg8b", 0.03125, 16),
+]
+
+
+def _freeze_random(cfg, seed: int):
+    from repro.core import les
+    from repro.infer import freeze
+
+    return freeze(les.create_train_state(jax.random.PRNGKey(seed), cfg), cfg)
+
+
+def _closed_loop(submit, images, n_clients: int):
+    """Drive ``submit(image, index) -> Future`` from n_clients synchronous
+    clients (each waits for its answer before sending the next request);
+    returns (wall_s, results)."""
+    results = [None] * len(images)
+
+    def client(w):
+        for i in range(w, len(images), n_clients):
+            results[i] = submit(images[i], i).result()
+
+    threads = [threading.Thread(target=client, args=(w,))
+               for w in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, results
+
+
+def _drain_static(plan, images, batch: int, max_wait_ms: float,
+                  n_clients: int):
+    from repro.serving import VisionEngine, snapshot_delta
+
+    with VisionEngine(plan, batch_size=batch,
+                      max_wait_ms=max_wait_ms) as engine:
+        engine.classify(images[:1])  # compile outside the clock
+        pre = engine.stats.snapshot()
+        wall, results = _closed_loop(
+            lambda img, i: engine.submit(img), images, n_clients)
+        snap = snapshot_delta(pre, engine.stats.snapshot())
+    return wall, results, snap
+
+
+def _drain_continuous(registry, target, router, images, batch: int,
+                      n_clients: int):
+    from repro.serving import FleetEngine, fleet_snapshot_delta
+
+    with FleetEngine(registry, batch_size=batch, router=router) as engine:
+        for mid in registry.ids():  # compile every arm outside the clock
+            engine.classify(images[:1], model=mid)
+        pre = engine.snapshot()  # warmup must not count in fill/arm stats
+        wall, results = _closed_loop(
+            lambda img, i: engine.submit(img, model=target,
+                                         request_id=f"req-{i}"),
+            images, n_clients)
+        snap = fleet_snapshot_delta(pre, engine.snapshot())
+    return wall, results, snap
+
+
+def _summary(name, wall, results, fill, n_requests):
+    from repro.serving import latency_summary_ms
+
+    return {
+        "scheduler": name,
+        "requests": n_requests,
+        "wall_s": wall,
+        "requests_per_s": n_requests / wall,
+        "batch_fill": fill,
+        "latency_ms": latency_summary_ms(r.latency_s for r in results),
+    }
+
+
+def _bench_config(cfg, batch: int, n_requests: int, reps: int,
+                  results: list) -> None:
+    from repro.infer import compile_plan
+    from repro.serving import ModelRegistry, Router
+
+    fm = _freeze_random(cfg, seed=0)
+    plan = compile_plan(fm)
+    registry = ModelRegistry()
+    registry.register("prod", fm)
+
+    rng = np.random.default_rng(1)
+    images = [rng.integers(-127, 128, cfg.input_shape).astype(np.int32)
+              for _ in range(n_requests)]
+    # closed loop at half the batch size: a partially-filled steady state,
+    # where the static engine's max_wait stall is on every batch's clock
+    n_clients = max(2, batch // 2)
+
+    # ---- parity gate: fleet-routed ≡ static ≡ raw plan ------------------
+    probe = images[: min(8, n_requests)]
+    _, static_res, _ = _drain_static(plan, probe, batch, max_wait_ms=2.0,
+                                     n_clients=2)
+    _, fleet_res, _ = _drain_continuous(registry, "prod", Router(), probe,
+                                        batch, n_clients=2)
+    direct = np.asarray(jax.device_get(plan.logits(np.stack(probe))))
+    for i, (s, f) in enumerate(zip(static_res, fleet_res)):
+        np.testing.assert_array_equal(s.logits, f.logits)
+        np.testing.assert_array_equal(f.logits, direct[i])
+
+    # ---- timed head-to-head (best of reps) ------------------------------
+    best = {}
+    for _ in range(reps):
+        wall, res, snap = _drain_static(plan, images, batch, max_wait_ms=5.0,
+                                        n_clients=n_clients)
+        if "static" not in best or wall < best["static"][0]:
+            best["static"] = (wall, res, snap["avg_batch_fill"])
+        wall, res, snap = _drain_continuous(registry, "prod", Router(),
+                                            images, batch,
+                                            n_clients=n_clients)
+        if "continuous" not in best or wall < best["continuous"][0]:
+            best["continuous"] = (wall, res,
+                                  snap["fleet"]["avg_batch_fill"])
+
+    runs = {
+        name: _summary(name, wall, res, fill, n_requests)
+        for name, (wall, res, fill) in best.items()
+    }
+    speedup = (runs["continuous"]["requests_per_s"]
+               / runs["static"]["requests_per_s"])
+    for name, run_ in runs.items():
+        emit(f"serve/{cfg.name}/{name}",
+             run_["wall_s"] / n_requests * 1e6,
+             f"{run_['requests_per_s']:.1f} req/s; "
+             f"fill {run_['batch_fill']:.2f}")
+    emit(f"serve/{cfg.name}/speedup", 0.0,
+         f"{speedup:.2f}x continuous/static")
+
+    # ---- two-model A/B fleet through the router -------------------------
+    # fresh registry: per-model stats live on registry entries, so reusing
+    # the drained one would fold the single-model runs into the arm counts
+    ab_registry = ModelRegistry()
+    ab_registry.register("prod", fm)
+    ab_registry.register("candidate", _freeze_random(cfg, seed=1))
+    router = Router({"split": {"prod": 0.9, "candidate": 0.1}})
+    wall, res, snap = _drain_continuous(ab_registry, "split", router, images,
+                                        batch, n_clients=n_clients)
+    arm_requests = {mid: m["requests"]
+                    for mid, m in snap["models"].items()}
+    ab = _summary("continuous-ab", wall, res,
+                  snap["fleet"]["avg_batch_fill"], n_requests)
+    ab["split"] = {"prod": 0.9, "candidate": 0.1}
+    ab["arm_requests"] = arm_requests
+    emit(f"serve/{cfg.name}/ab", wall / n_requests * 1e6,
+         f"{n_requests / wall:.1f} req/s; arms {arm_requests}")
+
+    results.append({
+        "arch": cfg.name,
+        "engine_batch": batch,
+        "closed_loop_clients": n_clients,
+        "backend": plan.backend,
+        "bit_exact": True,  # asserted above before timing
+        "speedup_continuous_over_static": speedup,
+        "runs": [runs["static"], runs["continuous"], ab],
+    })
+
+
+def run(quick: bool = False, smoke: bool = False) -> None:
+    from repro.configs import paper
+
+    n_requests = 64 if smoke else (160 if quick else 384)
+    reps = 1 if smoke else 5
+    results: list[dict] = []
+    if smoke:
+        _bench_config(tiny_smoke_cfg(), batch=8, n_requests=n_requests,
+                      reps=reps, results=results)
+    else:
+        for arch, scale, batch in CONFIGS:
+            _bench_config(paper.get(arch, scale=scale), batch=batch,
+                          n_requests=n_requests, reps=reps, results=results)
+    payload = {
+        "benchmark": "serve_fleet",
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("serve/json", 0.0, JSON_PATH)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer requests/reps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config only (CI import-and-run gate)")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

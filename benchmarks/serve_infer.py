@@ -24,6 +24,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro.serving.stats import latency_summary_ms
 
 JSON_PATH = "BENCH_infer.json"
 
@@ -32,12 +33,6 @@ CONFIGS = [
     ("vgg8b", 0.0625, 16),
     ("vgg11b", 0.0625, 16),
 ]
-
-
-def _percentile(sorted_vals, q):
-    if not sorted_vals:
-        return 0.0
-    return sorted_vals[min(int(q * len(sorted_vals)), len(sorted_vals) - 1)]
 
 
 def _bench_config(arch: str, scale: float, batch: int, n_requests: int,
@@ -69,9 +64,7 @@ def _bench_config(arch: str, scale: float, batch: int, n_requests: int,
     offline = {
         "mode": "offline", "requests": n_requests, "wall_s": wall,
         "requests_per_s": rps, "batch_fill": fill,
-        "latency_ms": {"p50": _percentile(lats, 0.5) * 1e3,
-                       "p90": _percentile(lats, 0.9) * 1e3,
-                       "p99": _percentile(lats, 0.99) * 1e3},
+        "latency_ms": latency_summary_ms(lats),
     }
 
     # ---- trickle: 4 sync clients ----------------------------------------
@@ -97,17 +90,14 @@ def _bench_config(arch: str, scale: float, batch: int, n_requests: int,
             t.join()
         wall = time.perf_counter() - t0
         fill = engine.stats.avg_batch_fill
-    lats = sorted(client_lats)
-    p50, p99 = _percentile(lats, 0.5) * 1e3, _percentile(lats, 0.99) * 1e3
+    summary = latency_summary_ms(client_lats)
     emit(f"infer/{arch}/trickle", wall / n_requests * 1e6,
-         f"p50 {p50:.1f}ms; p99 {p99:.1f}ms")
+         f"p50 {summary['p50']:.1f}ms; p99 {summary['p99']:.1f}ms")
     trickle = {
         "mode": "trickle", "clients": n_clients, "requests": n_requests,
         "wall_s": wall, "requests_per_s": n_requests / wall,
         "batch_fill": fill,
-        "latency_ms": {"p50": p50,
-                       "p90": _percentile(lats, 0.9) * 1e3,
-                       "p99": p99},
+        "latency_ms": summary,
     }
 
     results.append({

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, time_fn, tiny_smoke_cfg
 
 JSON_PATH = "BENCH_train.json"
 
@@ -38,18 +38,6 @@ CONFIGS = [
     ("vgg8b", 0.0625, 16),
     ("vgg11b", 0.0625, 8),
 ]
-
-
-def _tiny_cfg():
-    from repro.core.blocks import BlockSpec
-    from repro.core.model import NitroConfig
-
-    return NitroConfig(
-        blocks=(BlockSpec("conv", 8, pool=True, d_lr=64),
-                BlockSpec("linear", 16)),
-        input_shape=(8, 8, 3), num_classes=10, gamma_inv=512,
-        name="tiny-smoke",
-    )
 
 
 def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
@@ -102,7 +90,7 @@ def run(quick: bool = False, smoke: bool = False) -> None:
     iters = 3 if (quick or smoke) else 10
     results: list[dict] = []
     if smoke:
-        _bench_config(_tiny_cfg(), batch=8, iters=iters, results=results)
+        _bench_config(tiny_smoke_cfg(), batch=8, iters=iters, results=results)
     else:
         for arch, scale, batch in CONFIGS:
             cfg = paper.get(arch, scale=scale)

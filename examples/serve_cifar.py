@@ -1,16 +1,21 @@
-"""Train-then-serve: the full NITRO-D integer lifecycle on one CNN.
+"""Train-then-serve: the full NITRO-D integer lifecycle on one CNN fleet.
 
     PYTHONPATH=src python examples/serve_cifar.py [--steps 60] [--scale 0.125]
 
 1. trains a reduced VGG8B with the integer-only LES trainer on the
-   CIFAR-shaped synthetic set (tiles32);
-2. freezes the TrainState into a FrozenModel and round-trips it through
-   the on-disk manifest format;
-3. compiles the fused inference ExecutionPlan and serves the test set
-   through the batched VisionEngine from several concurrent client
-   threads;
-4. checks the engine's predictions are bit-identical to the training-time
-   ``model.predict`` on the same frozen params.
+   CIFAR-shaped synthetic set (tiles32), freezing a **mid-training
+   snapshot** on the way — two checkpoints of one architecture, the
+   canonical A/B pair (prod vs candidate);
+2. exports both through the on-disk manifest format and a ``FLEET.json``
+   fleet manifest, then loads everything back through ``ModelRegistry``;
+3. serves the test set through the continuous-batching ``FleetEngine``
+   behind a 90/10 A/B ``Router`` split from several concurrent client
+   threads — deterministic request-id hashing decides each request's arm;
+4. checks every served prediction is bit-identical to the training-time
+   ``model.predict`` *of the arm that answered it*, and reports per-arm
+   accuracy + stats;
+5. hot-swaps the candidate arm to the final checkpoint under its stable
+   model id and shows the swap taking effect on live traffic.
 """
 
 import argparse
@@ -27,8 +32,13 @@ from repro.configs import get_paper_config
 from repro.core import les
 from repro.core import model as M
 from repro.data import synthetic
-from repro.infer import compile_plan, freeze, load_frozen, save_frozen
-from repro.serving.vision import VisionEngine
+from repro.infer import freeze, load_frozen, save_fleet_manifest, save_frozen
+from repro.serving import (
+    FleetEngine,
+    ModelRegistry,
+    Router,
+    fleet_snapshot_delta,
+)
 
 
 def main():
@@ -41,13 +51,15 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    # ---- 1. integer-only training ----------------------------------------
+    # ---- 1. integer-only training, snapshotting the A/B candidate --------
     ds = synthetic.make_image_dataset("tiles32", n_train=2048, n_test=256,
                                       seed=args.seed)
     cfg = get_paper_config("vgg8b", scale=args.scale,
                            input_shape=ds.input_shape)
     state = les.create_train_state(jax.random.PRNGKey(args.seed), cfg)
     step_fn = jax.jit(functools.partial(les.train_step, cfg=cfg))
+    snapshot_at = max(1, args.steps // 2)
+    mid_state = state
     it = 0
     while it < args.steps:
         for x, y in synthetic.batches(ds.x_train, ds.y_train, args.batch,
@@ -62,27 +74,41 @@ def main():
                 print(f"[train] step {it:4d} loss={int(metrics.loss)} "
                       f"correct={int(metrics.correct)}/{args.batch}")
             it += 1
+            if it == snapshot_at:
+                mid_state = state  # the "candidate" arm: half-trained
+    print(f"[train] prod = step {args.steps}, candidate = step {snapshot_at}")
 
-    # ---- 2. freeze + manifest round-trip ---------------------------------
-    with tempfile.TemporaryDirectory() as export_dir:
-        save_frozen(export_dir, freeze(state, cfg))
-        fm = load_frozen(export_dir)
-    print(f"[export] frozen {fm.name}: {len(fm.layers)} layers, "
-          f"{fm.num_bytes()} weight bytes")
+    # ---- 2. export both arms + fleet manifest, reload via the registry ---
+    splits = {"split": {"prod": 0.9, "candidate": 0.1}}
+    with tempfile.TemporaryDirectory() as fleet_dir:
+        save_frozen(f"{fleet_dir}/prod", freeze(state, cfg))
+        save_frozen(f"{fleet_dir}/candidate", freeze(mid_state, cfg))
+        save_fleet_manifest(fleet_dir,
+                            {"prod": "prod", "candidate": "candidate"},
+                            splits=splits)
+        registry = ModelRegistry.from_manifest(fleet_dir)
+        fm_prod = load_frozen(f"{fleet_dir}/prod")
+    print(f"[export] fleet {registry.ids()}: {len(fm_prod.layers)} layers, "
+          f"{fm_prod.num_bytes()} weight bytes/arm")
 
-    # ---- 3. fused plan + batched engine, concurrent clients --------------
-    plan = compile_plan(fm)
+    # ---- 3. A/B serve through the router, concurrent clients -------------
+    router = Router(splits)
     images = list(ds.x_test)
     labels_true = ds.y_test
     predictions = np.full(len(images), -1, np.int64)
+    arms = [router.resolve("split", f"req-{i}") for i in range(len(images))]
 
-    with VisionEngine(plan, batch_size=args.serve_batch,
-                      max_wait_ms=3.0) as engine:
-        engine.classify(images[:1])  # compile outside the clock
+    with FleetEngine(registry, batch_size=args.serve_batch,
+                     router=router) as engine:
+        engine.classify(images[:1], model="prod")  # compile outside the clock
+        engine.classify(images[:1], model="candidate")
+        pre = engine.snapshot()
 
         def client(worker: int):
             for i in range(worker, len(images), args.clients):
-                predictions[i] = engine.submit(images[i]).result().label
+                predictions[i] = engine.submit(
+                    images[i], model="split", request_id=f"req-{i}",
+                ).result().label
 
         t0 = time.perf_counter()
         threads = [threading.Thread(target=client, args=(w,))
@@ -92,21 +118,43 @@ def main():
         for t in threads:
             t.join()
         wall = time.perf_counter() - t0
-        stats = engine.stats
+        # delta vs the post-warmup snapshot: report only the timed serving
+        snapshot = fleet_snapshot_delta(pre, engine.snapshot())
 
-    acc = float(np.mean(predictions == labels_true))
-    print(f"[serve] {len(images)} requests from {args.clients} clients in "
-          f"{wall:.3f}s ({len(images) / wall:.1f} req/s), "
-          f"{stats.batches} batches, fill {stats.avg_batch_fill:.2f}")
-    print(f"[serve] test accuracy {acc:.4f}")
+        # ---- 4. per-arm parity + accuracy --------------------------------
+        want = {
+            "prod": np.asarray(M.predict(
+                state.params, cfg, jnp.asarray(np.stack(images)))),
+            "candidate": np.asarray(M.predict(
+                mid_state.params, cfg, jnp.asarray(np.stack(images)))),
+        }
+        mismatches = sum(
+            int(predictions[i] != want[arm][i])
+            for i, arm in enumerate(arms)
+        )
+        assert mismatches == 0, \
+            f"{mismatches} fleet/model.predict prediction mismatches"
+        fleet = snapshot["fleet"]
+        print(f"[serve] {len(images)} requests from {args.clients} clients "
+              f"in {wall:.3f}s ({len(images) / wall:.1f} req/s), "
+              f"{fleet['batches']} batches, "
+              f"fill {fleet['avg_batch_fill']:.2f}")
+        for arm in ("prod", "candidate"):
+            idx = [i for i, a in enumerate(arms) if a == arm]
+            acc = float(np.mean(predictions[idx] == labels_true[idx]))
+            print(f"[serve]   {arm}: {len(idx)} requests "
+                  f"({len(idx) / len(images):.0%} of traffic), "
+                  f"accuracy {acc:.4f}")
+        print("[parity] every answer bit-identical to its arm's "
+              "model.predict ✓")
 
-    # ---- 4. parity: engine ≡ training-time predict -----------------------
-    want = np.asarray(M.predict(state.params, cfg,
-                                jnp.asarray(np.stack(images))))
-    mismatches = int(np.sum(predictions != want))
-    assert mismatches == 0, f"{mismatches} fused/unfused prediction mismatches"
-    print("[parity] fused engine predictions bit-identical to "
-          "model.predict ✓")
+        # ---- 5. hot-swap the candidate to the final checkpoint -----------
+        entry = registry.swap("candidate", freeze(state, cfg))
+        swapped = [engine.submit(img, model="candidate").result().label
+                   for img in images[:32]]
+        np.testing.assert_array_equal(swapped, want["prod"][:32])
+        print(f"[swap] candidate -> final checkpoint "
+              f"(version {entry.version}); live traffic now matches prod ✓")
 
 
 if __name__ == "__main__":

@@ -22,8 +22,11 @@ from repro.infer.export import (  # noqa: F401
     FrozenLayer,
     FrozenModel,
     freeze,
+    load_fleet_manifest,
     load_frozen,
+    prune_frozen,
     quantization_report,
+    save_fleet_manifest,
     save_frozen,
 )
 from repro.infer.plan import ExecutionPlan, compile_plan  # noqa: F401

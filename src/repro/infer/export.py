@@ -31,6 +31,8 @@ from __future__ import annotations
 
 import json
 import os
+import re
+import shutil
 from typing import NamedTuple
 
 import jax
@@ -216,23 +218,83 @@ def _topology(fm: FrozenModel) -> dict:
     }
 
 
-def save_frozen(path: str, fm: FrozenModel) -> str:
+def save_frozen(path: str, fm: FrozenModel, *, step: int | None = None,
+                keep_last: int | None = None) -> str:
     """Write the frozen model as a COMPLETE manifest checkpoint.
+
+    ``step=None`` auto-increments past the newest checkpoint already in
+    ``path`` (0 for a fresh directory), so re-exporting a retrained model
+    into the same directory *appends* a new version instead of clobbering
+    the one currently being served — the on-disk half of the registry's
+    hot-swap story: ``load_frozen(path)`` keeps returning the newest
+    COMPLETE version, and a crashed export never corrupts it.
+
+    Accumulated versions are kept until a save passes ``keep_last=N``,
+    which prunes all but the N newest step directories after the new
+    COMPLETE marker lands — a periodic re-export loop should pass it
+    (or clean up out of band) or the directory grows one full weight
+    copy per export.
 
     Also drops ``QUANT_REPORT.json`` (the per-layer bit-width/histogram
     report) next to the manifest — informational only, written after the
     COMPLETE marker so it never gates checkpoint validity.
     """
+    if step is None:
+        # scan the directories, not the LATEST marker: after a rollback
+        # re-export (explicit lower step rewrote LATEST) incrementing
+        # from LATEST would target — and ckpt.save would clobber — an
+        # existing retained version
+        existing = _step_numbers(path)
+        step = max(existing) + 1 if existing else 0
     tree = [{"w": l.w} for l in fm.layers]
-    step_dir = ckpt.save(path, 0, tree, extra=_topology(fm))
+    step_dir = ckpt.save(path, step, tree, extra=_topology(fm))
     with open(os.path.join(step_dir, REPORT_FILENAME), "w") as f:
         json.dump(quantization_report(fm), f, indent=2)
+    if keep_last is not None:
+        prune_frozen(path, keep_last=keep_last)
     return step_dir
 
 
-def load_frozen(path: str) -> FrozenModel:
-    """Load a frozen model; validates format and restores exact weights."""
-    step = ckpt.latest_step(path)
+def prune_frozen(path: str, *, keep_last: int) -> list[int]:
+    """Delete all but the ``keep_last`` newest checkpoint versions.
+
+    The step the ``LATEST`` marker names is always kept even when it is
+    not numerically newest (a rollback re-export with an explicit lower
+    ``step`` rewrites ``LATEST``; pruning it would make the directory
+    unloadable).  Returns the pruned step numbers.  Safe against a
+    concurrent ``load_frozen(path)`` of the *latest* version; a reader
+    pinning an old ``step`` races with its deletion, so prune from the
+    single writer that owns the directory.
+    """
+    if keep_last < 1:
+        raise ValueError("keep_last must be >= 1")
+    latest = ckpt.latest_step(path)
+    steps = _step_numbers(path)
+    pruned = [s for s in steps[:-keep_last] if s != latest]
+    for s in pruned:
+        shutil.rmtree(os.path.join(path, f"step_{s:08d}"))
+    return pruned
+
+
+def _step_numbers(path: str) -> list[int]:
+    """Ascending step numbers of every ``step_NNNNNNNN`` dir in ``path``."""
+    if not os.path.isdir(path):
+        return []
+    return sorted(
+        int(m.group(1))
+        for name in os.listdir(path)
+        if (m := re.fullmatch(r"step_(\d{8})", name))
+    )
+
+
+def load_frozen(path: str, *, step: int | None = None) -> FrozenModel:
+    """Load a frozen model; validates format and restores exact weights.
+
+    ``step=None`` loads the newest COMPLETE version; an explicit ``step``
+    pins one (e.g. the registry rolling back a bad hot-swap).
+    """
+    if step is None:
+        step = ckpt.latest_step(path)
     if step is None:
         raise FileNotFoundError(f"no COMPLETE frozen model in {path}")
     with open(os.path.join(path, f"step_{step:08d}", "MANIFEST.json")) as f:
@@ -259,3 +321,81 @@ def load_frozen(path: str) -> FrozenModel:
         num_classes=int(meta["num_classes"]),
         name=meta["name"],
     )
+
+
+# ---------------------------------------------------------------------------
+# Fleet manifest — a directory of frozen models served as one unit
+# ---------------------------------------------------------------------------
+
+FLEET_FORMAT = "nitro-fleet-v1"
+FLEET_FILENAME = "FLEET.json"
+
+
+def save_fleet_manifest(
+    root: str,
+    models: dict[str, str],
+    *,
+    splits: dict[str, dict[str, float]] | None = None,
+) -> str:
+    """Write ``FLEET.json`` describing a multi-model serving fleet.
+
+    ``models`` maps model-id → frozen-model directory (absolute, or
+    relative to ``root`` — relative keeps the fleet relocatable).
+    ``splits`` maps a routing alias → {model-id: weight} for A/B traffic
+    splits; every arm must reference a model in ``models``.  The manifest
+    is data only — ``serving.registry.ModelRegistry.from_manifest`` turns
+    it into compiled plans, ``serving.fleet.Router.from_splits`` into
+    routing arms.
+    """
+    _validate_fleet(models, splits or {})
+    os.makedirs(root, exist_ok=True)
+    payload = {
+        "format": FLEET_FORMAT,
+        "models": dict(models),
+        "splits": {a: dict(w) for a, w in (splits or {}).items()},
+    }
+    path = os.path.join(root, FLEET_FILENAME)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)  # atomic: readers never see a torn manifest
+    return path
+
+
+def _validate_fleet(models: dict, splits: dict) -> None:
+    """Shared manifest invariants — enforced on write AND read, so a
+    hand-edited FLEET.json fails once at load, not per-request at serve
+    time when traffic first hashes onto a broken arm."""
+    if not models:
+        raise ValueError("fleet manifest needs at least one model")
+    for alias, arms in splits.items():
+        missing = sorted(set(arms) - set(models))
+        if missing:
+            raise ValueError(
+                f"split {alias!r} references unknown models: {missing}"
+            )
+        if alias in models:
+            raise ValueError(f"split alias {alias!r} shadows a model id")
+
+
+def load_fleet_manifest(root: str) -> dict:
+    """Read and validate ``FLEET.json``; model paths resolved under root."""
+    path = os.path.join(root, FLEET_FILENAME)
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"no {FLEET_FILENAME} in {root}")
+    with open(path) as f:
+        meta = json.load(f)
+    if meta.get("format") != FLEET_FORMAT:
+        raise ValueError(
+            f"{path} is not a fleet manifest "
+            f"(format={meta.get('format')!r}, expected {FLEET_FORMAT!r})"
+        )
+    splits = meta.get("splits", {})
+    _validate_fleet(meta["models"], splits)
+    models = {
+        mid: d if os.path.isabs(d) else os.path.join(root, d)
+        for mid, d in meta["models"].items()
+    }
+    return {"models": models, "splits": splits}

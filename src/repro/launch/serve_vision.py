@@ -1,20 +1,35 @@
-"""Vision serving launcher: freeze → fused plan → batched engine.
+"""Vision serving launcher: freeze → registry → fleet engine.
 
     # train briefly, export, then serve synthetic requests:
     PYTHONPATH=src python -m repro.launch.serve_vision --arch vgg8b \
         --scale 0.125 --train-steps 50 --requests 200
 
-    # serve an existing exported model:
+    # serve one exported model:
     PYTHONPATH=src python -m repro.launch.serve_vision \
         --model-dir /tmp/nitro_frozen --requests 200
 
-With ``--train-steps 0`` the model is random-init (throughput smoke).
-Prints per-request latency percentiles and the fused-plan summary.
+    # A/B-serve two checkpoints, 90/10:
+    PYTHONPATH=src python -m repro.launch.serve_vision \
+        --model-dir a=/ckpts/prod --model-dir b=/ckpts/candidate \
+        --split a=0.9,b=0.1 --requests 500
+
+    # load a whole fleet from a FLEET.json directory:
+    PYTHONPATH=src python -m repro.launch.serve_vision \
+        --fleet-dir /ckpts/fleet --requests 500
+
+Every ``--model-dir`` is ``NAME=PATH`` (bare ``PATH`` gets the model id
+``default``).  Requests route through the continuous-batching
+``FleetEngine``; ``--scheduler static`` falls back to the single-model
+``VisionEngine`` (requires exactly one model) for A/B-ing the schedulers
+themselves.  With ``--train-steps 0`` the model is random-init
+(throughput smoke).  Prints per-request latency percentiles and the
+per-model stats snapshot.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -52,67 +67,198 @@ def _train_and_freeze(arch: str, scale: float, steps: int, batch: int,
     return freeze(state, cfg), ds
 
 
+def _parse_model_dir(spec: str) -> tuple[str, str]:
+    """``NAME=PATH`` → (name, path); bare ``PATH`` → ("default", path)."""
+    name, sep, path = spec.partition("=")
+    if not sep:
+        return "default", spec
+    if not name or not path:
+        raise SystemExit(f"bad --model-dir {spec!r} (want NAME=PATH)")
+    return name, path
+
+
+def _build_registry(args):
+    """Resolve --fleet-dir / --model-dir / train-and-freeze into a registry."""
+    from repro.infer import load_fleet_manifest, save_frozen
+    from repro.serving import ModelRegistry
+
+    if args.export_dir and (args.fleet_dir or args.model_dir):
+        raise SystemExit("--export-dir only applies to the train-and-freeze "
+                         "path (no --model-dir / --fleet-dir)")
+    if args.fleet_dir and args.model_dir:
+        raise SystemExit("--fleet-dir and --model-dir are mutually "
+                         "exclusive — add extra models to FLEET.json")
+    registry = ModelRegistry(backend=args.backend)
+    if args.fleet_dir:
+        # read FLEET.json exactly once: registering from the parsed dict
+        # keeps the printed paths, the splits, and the loaded models all
+        # from the same (atomically-replaced) manifest version
+        manifest = load_fleet_manifest(args.fleet_dir)
+        for mid, path in sorted(manifest["models"].items()):
+            registry.load(mid, path)
+            print(f"[load] {mid} <- {path}")
+        return registry, manifest.get("splits", {})
+
+    if args.model_dir:
+        for spec in args.model_dir:
+            mid, path = _parse_model_dir(spec)
+            entry = registry.load(mid, path)
+            print(f"[load] {mid} ({entry.plan.name}) <- {path}")
+    else:
+        fm, _ = _train_and_freeze(args.arch, args.scale, args.train_steps,
+                                  args.train_batch, args.seed)
+        if args.export_dir:
+            path = save_frozen(args.export_dir, fm)
+            print(f"[export] frozen model -> {path} "
+                  f"({fm.num_bytes()} weight bytes)")
+        registry.register("default", fm)
+    return registry, {}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="vgg8b")
     ap.add_argument("--scale", type=float, default=0.125)
     ap.add_argument("--train-steps", type=int, default=0)
     ap.add_argument("--train-batch", type=int, default=64)
-    ap.add_argument("--model-dir", default=None,
-                    help="load a frozen model instead of training")
+    ap.add_argument("--model-dir", action="append", default=None,
+                    metavar="NAME=PATH",
+                    help="serve a frozen model under NAME (repeatable; "
+                         "bare PATH serves as 'default')")
+    ap.add_argument("--fleet-dir", default=None,
+                    help="serve every model in a FLEET.json directory")
     ap.add_argument("--export-dir", default=None,
-                    help="also save the frozen model here")
+                    help="also save the trained frozen model here")
+    ap.add_argument("--split", default=None, metavar="a=0.9,b=0.1",
+                    help="route traffic through a weighted A/B split "
+                         "over the loaded model ids")
+    ap.add_argument("--route", default=None,
+                    help="routing target: a model id or a split alias "
+                         "(needed when a fleet defines several aliases)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "pallas", "interpret", "reference"])
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=["continuous", "static"],
+                    help="continuous = FleetEngine (double-buffered); "
+                         "static = single-model VisionEngine baseline")
     ap.add_argument("--batch", type=int, default=32,
                     help="engine compiled batch size")
-    ap.add_argument("--max-wait-ms", type=float, default=3.0)
+    ap.add_argument("--max-wait-ms", type=float, default=3.0,
+                    help="static scheduler only")
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    from repro.infer import compile_plan, load_frozen, save_frozen
-    from repro.serving.vision import VisionEngine
+    from repro.serving import (
+        FleetEngine,
+        Router,
+        VisionEngine,
+        fleet_snapshot_delta,
+        latency_summary_ms,
+        parse_split,
+        snapshot_delta,
+    )
 
-    if args.model_dir:
-        fm = load_frozen(args.model_dir)
-        print(f"[load] {fm.name} from {args.model_dir}")
+    registry, manifest_splits = _build_registry(args)
+
+    splits = dict(manifest_splits)
+    if args.split:
+        splits["split"] = parse_split(args.split)
+    router = Router(splits)
+    for alias in router.aliases:  # fail at startup, not mid-traffic
+        missing = sorted(mid for mid, _ in router.arms(alias)
+                         if mid not in registry)
+        if missing:
+            raise SystemExit(
+                f"split {alias!r} routes to unknown models {missing}; "
+                f"loaded: {registry.ids()}")
+    # routing target: explicit --route, else the CLI --split alias, else
+    # the unambiguous option (the sole alias / the sole model) — never a
+    # silent guess among several configured aliases
+    if args.route:
+        if args.route not in registry and args.route not in router.aliases:
+            raise SystemExit(
+                f"--route {args.route!r} is neither a model id "
+                f"{registry.ids()} nor a split alias {router.aliases}")
+        target = args.route
+    elif args.split:
+        target = "split"
+    elif len(router.aliases) == 1:
+        target = router.aliases[0]
+    elif router.aliases:
+        raise SystemExit(
+            f"fleet defines several split aliases {router.aliases}; "
+            f"pick one with --route")
+    elif len(registry.ids()) == 1:
+        target = registry.ids()[0]
     else:
-        fm, _ = _train_and_freeze(args.arch, args.scale, args.train_steps,
-                                  args.train_batch, args.seed)
-    if args.export_dir:
-        path = save_frozen(args.export_dir, fm)
-        print(f"[export] frozen model → {path} ({fm.num_bytes()} weight bytes)")
+        raise SystemExit("several models loaded but no --split/--route "
+                         "to route by")
 
-    plan = compile_plan(fm, backend=args.backend)
-    print(f"[plan] backend={plan.backend}")
-    for row in plan.summary():
+    first = registry.get(registry.ids()[0])
+    print(f"[plan] backend={first.plan.backend} models={registry.ids()} "
+          f"route={target!r}")
+    for row in first.plan.summary():
         hbm = row["hbm_bytes_per_out_elem"]
         print(f"  {row['kind']:<7} w={row['weight_shape']} "
               f"({row['weight_dtype']}) sf={row['sf']} "
               f"act={row['activation_dtype']} pool={row['pool']} "
               f"hbm/elem {hbm['unfused']}B→{hbm['fused']}B")
 
+    # each request's image is shaped for the arm it will land on, so a
+    # fleet of heterogeneous input shapes serves without special-casing
     rng = np.random.default_rng(args.seed)
-    images = [rng.integers(-127, 128, fm.input_shape).astype(np.int32)
-              for _ in range(args.requests)]
-    with VisionEngine(plan, batch_size=args.batch,
-                      max_wait_ms=args.max_wait_ms) as engine:
-        engine.classify(images[:1])  # warmup compile outside the clock
-        t0 = time.perf_counter()
-        futs = [engine.submit(img) for img in images]
-        results = [f.result() for f in futs]
-        wall = time.perf_counter() - t0
-        stats = engine.stats
 
-    lats = sorted(r.latency_s for r in results)
-    p = lambda q: lats[min(int(q * len(lats)), len(lats) - 1)] * 1e3
-    print(f"[serve] {len(results)} requests in {wall:.3f}s "
-          f"({len(results) / wall:.1f} req/s)")
-    print(f"[serve] latency ms p50={p(0.50):.1f} p90={p(0.90):.1f} "
-          f"p99={p(0.99):.1f}")
-    print(f"[serve] {stats.batches} batches, "
-          f"avg fill {stats.avg_batch_fill:.2f}")
+    def make_image(mid):
+        return rng.integers(-127, 128,
+                            registry.get(mid).input_shape).astype(np.int32)
+
+    request_ids = [f"req-{i}" for i in range(args.requests)]
+    images = [make_image(router.resolve(target, rid)) for rid in request_ids]
+
+    if args.scheduler == "static":
+        if len(registry.ids()) != 1 or args.split:
+            raise SystemExit("--scheduler static serves exactly one model")
+        with VisionEngine(first.plan, batch_size=args.batch,
+                          max_wait_ms=args.max_wait_ms) as engine:
+            engine.classify(images[:1])  # warmup compile outside the clock
+            pre = engine.stats.snapshot()
+            t0 = time.perf_counter()
+            futs = [engine.submit(img) for img in images]
+            results = [f.result() for f in futs]
+            wall = time.perf_counter() - t0
+            snapshot = {
+                "fleet": snapshot_delta(pre, engine.stats.snapshot()),
+                "models": {},
+            }
+    else:
+        with FleetEngine(registry, batch_size=args.batch,
+                         router=router) as engine:
+            for mid in registry.ids():  # warmup compiles outside the clock
+                engine.classify([make_image(mid)], model=mid)
+            pre = engine.snapshot()
+            t0 = time.perf_counter()
+            futs = [engine.submit(img, model=target, request_id=rid)
+                    for rid, img in zip(request_ids, images)]
+            results = [f.result() for f in futs]
+            wall = time.perf_counter() - t0
+            post = engine.snapshot()
+            # report only the timed work: the cumulative snapshot would
+            # fold the warmup compile into the batch counters
+            snapshot = fleet_snapshot_delta(pre, post)
+            for mid, mstats in snapshot["models"].items():
+                mstats["version"] = post["models"][mid]["version"]
+
+    pct = latency_summary_ms(r.latency_s for r in results)
+    fleet = snapshot["fleet"]
+    print(f"[serve] scheduler={args.scheduler} {len(results)} requests in "
+          f"{wall:.3f}s ({len(results) / wall:.1f} req/s)")
+    print(f"[serve] latency ms p50={pct['p50']:.1f} p90={pct['p90']:.1f} "
+          f"p99={pct['p99']:.1f}")
+    print(f"[serve] {fleet['batches']} batches, "
+          f"avg fill {fleet['avg_batch_fill']:.2f}")
+    for mid, mstats in snapshot["models"].items():
+        print(f"[serve]   {mid}: {json.dumps(mstats, sort_keys=True)}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,48 @@
 """Serving substrate.
 
-engine.py  batched prefill/decode LM engine over the model zoo
-vision.py  dynamic-batching integer CNN engine over a fused
-           repro.infer ExecutionPlan (the NITRO-D deploy path)
+engine.py    batched prefill/decode LM engine over the model zoo
+vision.py    static dynamic-batching integer CNN engine over a fused
+             repro.infer ExecutionPlan (the NITRO-D deploy path)
+stats.py     shared latency percentiles + thread-safe EngineStats
+registry.py  ModelRegistry: many FrozenModels compiled + hot-swapped
+             under stable model ids, shared padding buffers
+fleet.py     FleetEngine: continuous (double-buffered) batching over
+             every registered model — per-model queues, weighted
+             round-robin, deterministic A/B Router
+
+One model, simplest path:  compile_plan → VisionEngine.
+A fleet of models:         ModelRegistry → FleetEngine (+ Router splits).
+Data flow in docs/SERVING.md.
 """
+
+# Lazy re-exports: the LM path (`repro.serving.engine`) deliberately
+# imports light, and an eager package init would drag the whole
+# fleet -> registry -> infer -> kernels chain into it.
+_EXPORTS = {
+    "FleetEngine": "repro.serving.fleet",
+    "Router": "repro.serving.fleet",
+    "parse_split": "repro.serving.fleet",
+    "ModelEntry": "repro.serving.registry",
+    "ModelRegistry": "repro.serving.registry",
+    "EngineStats": "repro.serving.stats",
+    "fleet_snapshot_delta": "repro.serving.stats",
+    "latency_summary_ms": "repro.serving.stats",
+    "percentile": "repro.serving.stats",
+    "snapshot_delta": "repro.serving.stats",
+    "VisionEngine": "repro.serving.vision",
+    "VisionResult": "repro.serving.vision",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module 'repro.serving' has no attribute {name!r}"
+        ) from None
+    import importlib
+
+    return getattr(importlib.import_module(module), name)

@@ -1,0 +1,113 @@
+"""Shared serving statistics: latency percentiles + thread-safe counters.
+
+One home for the percentile math that was previously duplicated across
+``benchmarks/serve_infer.py`` and the ``serve_vision`` CLI, plus the
+``EngineStats`` record shared by the static ``VisionEngine`` and the
+continuous-batching ``FleetEngine``.
+
+``EngineStats`` is written from an engine's worker thread while clients
+read it concurrently, so every mutation goes through ``record_batch``
+(one lock acquisition per *batch*, not per request — negligible next to
+a device launch) and readers take a consistent copy via ``snapshot()``.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+# Percentiles every serving surface reports, as (label, quantile).
+PERCENTILES = (("p50", 0.50), ("p90", 0.90), ("p95", 0.95), ("p99", 0.99))
+
+
+def percentile(sorted_vals, q: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted sequence (0 if empty)."""
+    if not sorted_vals:
+        return 0.0
+    return sorted_vals[min(int(q * len(sorted_vals)), len(sorted_vals) - 1)]
+
+
+def latency_summary_ms(latencies_s) -> dict[str, float]:
+    """Unsorted per-request latencies in seconds → {p50,p90,p95,p99} in ms."""
+    lats = sorted(latencies_s)
+    return {label: percentile(lats, q) * 1e3 for label, q in PERCENTILES}
+
+
+def snapshot_delta(pre: dict, post: dict) -> dict:
+    """Counter difference of two ``EngineStats.snapshot()`` views.
+
+    The standard way to exclude warmup work (compile batches) from
+    reported serving stats: snapshot after warmup, snapshot after the
+    timed run, report the delta.  The windowed batch-latency percentiles
+    are not diffable and are omitted.
+    """
+    requests = post["requests"] - pre["requests"]
+    padded = post["padded_slots"] - pre["padded_slots"]
+    total = requests + padded
+    return {
+        "requests": requests,
+        "batches": post["batches"] - pre["batches"],
+        "padded_slots": padded,
+        "avg_batch_fill": requests / total if total else 0.0,
+    }
+
+
+def fleet_snapshot_delta(pre: dict, post: dict) -> dict:
+    """Delta of two ``FleetEngine.snapshot()`` views (fleet + per-model).
+
+    A model registered after ``pre`` was taken is deltaed against zero.
+    """
+    zero = {"requests": 0, "batches": 0, "padded_slots": 0}
+    return {
+        "fleet": snapshot_delta(pre["fleet"], post["fleet"]),
+        "models": {
+            mid: snapshot_delta(pre["models"].get(mid, zero), m)
+            for mid, m in post["models"].items()
+        },
+    }
+
+
+class EngineStats:
+    """Thread-safe per-engine (or per-model) serving counters.
+
+    The public counter attributes (``requests``, ``batches``,
+    ``padded_slots``) stay plain ints for cheap reads; ``snapshot()``
+    is the consistent view — it holds the same lock ``record_batch``
+    writes under, so a snapshot never observes a half-applied batch.
+    """
+
+    def __init__(self, *, latency_window: int = 1024):
+        self._lock = threading.Lock()
+        self.requests = 0
+        self.batches = 0
+        self.padded_slots = 0
+        # bounded: a long-lived engine must not grow host memory per batch
+        self.batch_latency_s: deque = deque(maxlen=latency_window)
+
+    def record_batch(self, n: int, padded: int, latency_s: float) -> None:
+        with self._lock:
+            self.requests += n
+            self.batches += 1
+            self.padded_slots += padded
+            self.batch_latency_s.append(latency_s)
+
+    @property
+    def avg_batch_fill(self) -> float:
+        total = self.requests + self.padded_slots
+        return self.requests / total if total else 0.0
+
+    def snapshot(self) -> dict:
+        """Consistent JSON-ready view: counters + batch-latency percentiles."""
+        with self._lock:
+            requests = self.requests
+            batches = self.batches
+            padded = self.padded_slots
+            lats = list(self.batch_latency_s)
+        total = requests + padded
+        return {
+            "requests": requests,
+            "batches": batches,
+            "padded_slots": padded,
+            "avg_batch_fill": requests / total if total else 0.0,
+            "batch_latency_ms": latency_summary_ms(lats),
+        }

@@ -11,6 +11,12 @@ Dynamic request batching with a fixed compiled batch shape:
     Padding to one static shape means the plan jit-compiles exactly once;
     at high load batches arrive full and the padding cost vanishes.
 
+This is the *static* scheduler: batch N+1 is not assembled until batch
+N's results are on the host.  The continuous-batching scheduler in
+``serving.fleet`` overlaps the two and serves several models from one
+worker; it reuses this module's batch assembly/resolution helpers, so
+the two schedulers are numerically interchangeable.
+
 The same bounded-queue + daemon-thread structure as ``data.loader``'s
 prefetch — the serve-side mirror of the train-side input pipeline.
 """
@@ -20,14 +26,14 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import numpy as np
 
 from repro.infer.plan import ExecutionPlan
+from repro.serving.stats import EngineStats  # noqa: F401 — re-export (historical home)
 
 
 @dataclass
@@ -40,17 +46,45 @@ class VisionResult:
 
 
 @dataclass
-class EngineStats:
-    requests: int = 0
-    batches: int = 0
-    padded_slots: int = 0
-    # bounded: a long-lived engine must not grow host memory per batch
-    batch_latency_s: deque = field(default_factory=lambda: deque(maxlen=1024))
+class Request:
+    """One queued classification request (engine-internal)."""
 
-    @property
-    def avg_batch_fill(self) -> float:
-        total = self.requests + self.padded_slots
-        return self.requests / total if total else 0.0
+    image: np.ndarray
+    future: "Future[VisionResult]"
+    t_submit: float
+
+
+def assemble_batch(items: list[Request], pad: np.ndarray,
+                   batch_size: int) -> np.ndarray:
+    """Stack ≤ batch_size requests and zero-pad to exactly batch_size."""
+    return np.stack([r.image for r in items]
+                    + [pad] * (batch_size - len(items)))
+
+
+def resolve_batch(items: list[Request], logits: np.ndarray,
+                  t_done: float) -> None:
+    """Deliver one device result to every waiter in the batch.
+
+    ``set_running_or_notify_cancel`` guards every delivery: a client may
+    have ``cancel()``-ed a still-queued future (client-side timeout), and
+    an unguarded ``set_result`` would raise InvalidStateError and kill
+    the engine's only worker thread.
+    """
+    labels = np.argmax(logits[:len(items)], axis=-1)
+    for i, req in enumerate(items):
+        if req.future.set_running_or_notify_cancel():
+            req.future.set_result(VisionResult(
+                label=int(labels[i]),
+                logits=logits[i],
+                latency_s=t_done - req.t_submit,
+            ))
+
+
+def fail_batch(items: list[Request], exc: BaseException) -> None:
+    """Surface a plan failure on every waiter (skipping cancelled ones)."""
+    for req in items:
+        if req.future.set_running_or_notify_cancel():
+            req.future.set_exception(exc)
 
 
 class VisionEngine:
@@ -95,8 +129,8 @@ class VisionEngine:
         with self._lifecycle:
             if self._closed:
                 raise RuntimeError("engine is closed")
-            self._q.put((np.asarray(image, np.int32), fut,
-                         time.perf_counter()))
+            self._q.put(Request(np.asarray(image, np.int32), fut,
+                                time.perf_counter()))
         return fut
 
     def classify(self, images) -> list[int]:
@@ -146,28 +180,17 @@ class VisionEngine:
     def _run_batch(self, items):
         t0 = time.perf_counter()
         n = len(items)
-        batch = np.stack(
-            [img for img, _, _ in items]
-            + [self._pad] * (self.batch_size - n)
-        )
+        batch = assemble_batch(items, self._pad, self.batch_size)
         try:
             logits = np.asarray(jax.device_get(self.plan.logits(batch)))
         except Exception as e:  # surface plan failures on every waiter
-            for _, fut, _ in items:
-                fut.set_exception(e)
+            fail_batch(items, e)
             return
         t1 = time.perf_counter()
-        labels = np.argmax(logits[:n], axis=-1)
-        for i, (_, fut, t_submit) in enumerate(items):
-            fut.set_result(VisionResult(
-                label=int(labels[i]),
-                logits=logits[i],
-                latency_s=t1 - t_submit,
-            ))
-        self.stats.requests += n
-        self.stats.batches += 1
-        self.stats.padded_slots += self.batch_size - n
-        self.stats.batch_latency_s.append(t1 - t0)
+        # stats before futures: a client unblocking on its result and
+        # immediately snapshotting must already see this batch counted
+        self.stats.record_batch(n, self.batch_size - n, t1 - t0)
+        resolve_batch(items, logits, t1)
 
     def __enter__(self):
         return self

@@ -1,0 +1,717 @@
+"""repro.serving.fleet: registry, router, continuous-batching scheduler.
+
+The serving control plane's contracts, on handcrafted tiny FrozenModels
+(reference backend — compiles in milliseconds, so the concurrency tests
+can afford many submissions):
+
+  * bit-exactness — fleet-routed logits ≡ standalone VisionEngine ≡ the
+    raw ExecutionPlan (the acceptance bar: routing must be a pure
+    traffic-control layer, never a numerics layer);
+  * registry — hot-swap atomicity under concurrent submission (every
+    future resolves; every answer is the old or the new checkpoint's,
+    never a blend), shared pad buffers, eviction;
+  * scheduler — per-model FIFO ordering, bounded-queue backpressure,
+    weighted round-robin fairness, drain-on-close;
+  * router — deterministic request-id hashing, split fractions;
+  * manifest — FLEET.json round-trip + frozen checkpoint versioning.
+"""
+
+import os
+import tempfile
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scaling import linear_scale_factor
+from repro.infer import (
+    compile_plan,
+    load_fleet_manifest,
+    load_frozen,
+    prune_frozen,
+    save_fleet_manifest,
+    save_frozen,
+)
+from repro.infer.export import FrozenLayer, FrozenModel
+from repro.serving import (
+    EngineStats,
+    FleetEngine,
+    ModelRegistry,
+    Router,
+    VisionEngine,
+    latency_summary_ms,
+    parse_split,
+    percentile,
+)
+
+IN_DIM, HIDDEN, CLASSES = 8, 16, 10
+
+
+def tiny_model(seed: int, in_dim: int = IN_DIM, name: str | None = None):
+    """Two-layer integer MLP FrozenModel — small enough to compile in ms."""
+    rng = np.random.default_rng(seed)
+    w1 = jnp.asarray(rng.integers(-20, 21, (in_dim, HIDDEN)), jnp.int8)
+    w2 = jnp.asarray(rng.integers(-20, 21, (HIDDEN, CLASSES)), jnp.int8)
+    return FrozenModel(
+        layers=(
+            FrozenLayer("linear", w1, linear_scale_factor(in_dim),
+                        alpha_inv=2, apply_relu=True, pool=False),
+            FrozenLayer("output", w2, linear_scale_factor(HIDDEN),
+                        alpha_inv=0, apply_relu=False, pool=False),
+        ),
+        input_shape=(in_dim,),
+        num_classes=CLASSES,
+        name=name or f"tiny-{seed}",
+    )
+
+
+def images(n: int, seed: int = 7, in_dim: int = IN_DIM):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(-127, 128, (in_dim,)).astype(np.int32)
+            for _ in range(n)]
+
+
+def reference_registry(**models) -> ModelRegistry:
+    reg = ModelRegistry(backend="reference")
+    for mid, fm in models.items():
+        reg.register(mid, fm)
+    return reg
+
+
+class GatedPlan:
+    """Plan wrapper whose logits block until released — makes queue state
+    deterministic in the scheduler tests (the worker parks inside the
+    launch while the test arranges queues)."""
+
+    def __init__(self, plan):
+        self._plan = plan
+        self.gate = threading.Event()
+        self.calls = []  # batches seen, in launch order
+        self.input_shape = plan.input_shape
+        self.num_classes = plan.num_classes
+        self.name = plan.name
+        self.backend = plan.backend
+
+    def logits(self, x):
+        self.gate.wait()
+        self.calls.append(np.asarray(x))
+        return self._plan.logits(x)
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+
+
+class TestStats:
+    def test_percentile_nearest_rank(self):
+        vals = [1.0, 2.0, 3.0, 4.0]
+        assert percentile([], 0.5) == 0.0
+        assert percentile(vals, 0.0) == 1.0
+        assert percentile(vals, 0.5) == 3.0
+        assert percentile(vals, 0.99) == 4.0
+
+    def test_latency_summary_keys_and_units(self):
+        out = latency_summary_ms([0.001, 0.002, 0.003])
+        assert set(out) == {"p50", "p90", "p95", "p99"}
+        assert out["p99"] == pytest.approx(3.0)
+
+    def test_snapshot_consistent_under_concurrent_writes(self):
+        stats = EngineStats()
+        n_threads, n_batches = 4, 200
+
+        def writer():
+            for _ in range(n_batches):
+                stats.record_batch(3, 1, 0.01)
+
+        threads = [threading.Thread(target=writer) for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        while any(t.is_alive() for t in threads):
+            snap = stats.snapshot()
+            # a snapshot never observes a half-applied batch
+            assert snap["requests"] == 3 * snap["batches"]
+            assert snap["padded_slots"] == snap["batches"]
+        for t in threads:
+            t.join()
+        snap = stats.snapshot()
+        assert snap["batches"] == n_threads * n_batches
+        assert snap["avg_batch_fill"] == pytest.approx(0.75)
+        assert "p99" in snap["batch_latency_ms"]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+class TestModelRegistry:
+    def test_register_get_evict(self):
+        reg = reference_registry(a=tiny_model(0), b=tiny_model(1))
+        assert reg.ids() == ["a", "b"]
+        assert "a" in reg and len(reg) == 2
+        assert reg.get("a").plan.name == "tiny-0"
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register("a", tiny_model(2))
+        reg.evict("a")
+        assert "a" not in reg
+        with pytest.raises(KeyError, match="unknown model id"):
+            reg.get("a")
+        with pytest.raises(KeyError):
+            reg.evict("a")
+
+    def test_shared_pad_buffer_per_input_shape(self):
+        reg = reference_registry(a=tiny_model(0), b=tiny_model(1))
+        reg.register("c", tiny_model(2, in_dim=4))
+        pad_ab = reg.pad_buffer(reg.get("a").input_shape)
+        assert pad_ab is reg.pad_buffer(reg.get("b").input_shape)
+        assert pad_ab is not reg.pad_buffer(reg.get("c").input_shape)
+        assert not pad_ab.flags.writeable  # shared: must stay zero
+        assert pad_ab.shape == (IN_DIM,)
+
+    def test_swap_bumps_version_keeps_stats_rejects_shape_change(self):
+        reg = reference_registry(a=tiny_model(0))
+        entry = reg.get("a")
+        entry.stats.record_batch(4, 0, 0.01)
+        old_plan = entry.plan
+        swapped = reg.swap("a", tiny_model(5))
+        assert swapped is entry  # stable identity
+        assert entry.version == 1 and entry.plan is not old_plan
+        assert entry.stats.snapshot()["requests"] == 4  # stats survive
+        with pytest.raises(ValueError, match="input shape"):
+            reg.swap("a", tiny_model(6, in_dim=4))
+        with pytest.raises(KeyError):
+            reg.swap("nope", tiny_model(7))
+
+    def test_snapshot_shape(self):
+        reg = reference_registry(a=tiny_model(0))
+        snap = reg.snapshot()
+        assert snap["a"]["version"] == 0
+        assert snap["a"]["model"] == "tiny-0"
+        assert snap["a"]["requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+
+class TestRouter:
+    def test_concrete_id_passthrough(self):
+        assert Router().resolve("prod", "r1") == "prod"
+
+    def test_deterministic_assignment(self):
+        router = Router({"split": {"a": 0.5, "b": 0.5}})
+        arms = [router.resolve("split", f"req-{i}") for i in range(64)]
+        again = [router.resolve("split", f"req-{i}") for i in range(64)]
+        assert arms == again
+        assert set(arms) == {"a", "b"}
+
+    def test_split_fractions_converge(self):
+        router = Router({"split": {"a": 0.9, "b": 0.1}})
+        n = 4000
+        hits = sum(router.resolve("split", f"id-{i}") == "b"
+                   for i in range(n))
+        assert 0.07 < hits / n < 0.13
+
+    def test_weights_normalised(self):
+        r1 = Router({"s": {"a": 9.0, "b": 1.0}})
+        r2 = Router({"s": {"a": 0.9, "b": 0.1}})
+        ids = [f"x{i}" for i in range(256)]
+        assert [r1.resolve("s", i) for i in ids] == \
+            [r2.resolve("s", i) for i in ids]
+
+    def test_parse_split(self):
+        assert parse_split("a=0.9,b=0.1") == {"a": 0.9, "b": 0.1}
+        with pytest.raises(ValueError):
+            parse_split("a0.9")
+
+    def test_invalid_splits_rejected(self):
+        with pytest.raises(ValueError, match="no arms"):
+            Router({"s": {}})
+        with pytest.raises(ValueError, match="sum > 0"):
+            Router({"s": {"a": 0.0}})
+        with pytest.raises(ValueError, match="negative"):
+            Router({"s": {"a": 2.0, "b": -1.0}})
+
+
+# ---------------------------------------------------------------------------
+# fleet engine — numerics
+# ---------------------------------------------------------------------------
+
+
+class TestFleetNumerics:
+    def test_fleet_bit_exact_with_vision_engine_and_plan(self):
+        """Acceptance: routing is traffic control, never numerics."""
+        fm = tiny_model(0)
+        reg = reference_registry(m=fm)
+        plan = compile_plan(fm, backend="reference")
+        imgs = images(37)
+
+        with FleetEngine(reg, batch_size=8) as eng:
+            fleet = np.stack([eng.submit(i, model="m").result().logits
+                              for i in [np.asarray(x) for x in imgs]])
+        with VisionEngine(plan, batch_size=8) as ve:
+            vision = np.stack([f.result().logits
+                               for f in [ve.submit(i) for i in imgs]])
+        direct = np.asarray(jax.device_get(plan.logits(np.stack(imgs))))
+
+        np.testing.assert_array_equal(fleet, vision)
+        np.testing.assert_array_equal(fleet, direct)
+
+    def test_no_cross_model_answer_leakage(self):
+        """Interleaved traffic to two models: each answer comes from the
+        model the request was submitted to."""
+        fm_a, fm_b = tiny_model(0), tiny_model(1)
+        reg = reference_registry(a=fm_a, b=fm_b)
+        imgs = images(48)
+        want = {
+            mid: np.asarray(jax.device_get(
+                compile_plan(fm, backend="reference").logits(np.stack(imgs))))
+            for mid, fm in (("a", fm_a), ("b", fm_b))
+        }
+        with FleetEngine(reg, batch_size=4) as eng:
+            futs = [(i, mid, eng.submit(imgs[i], model=mid))
+                    for i in range(len(imgs))
+                    for mid in ("a", "b")]
+            for i, mid, fut in futs:
+                np.testing.assert_array_equal(fut.result().logits,
+                                              want[mid][i])
+
+    def test_split_routes_and_labels(self):
+        fm_a, fm_b = tiny_model(0), tiny_model(1)
+        reg = reference_registry(a=fm_a, b=fm_b)
+        router = Router({"split": {"a": 0.5, "b": 0.5}})
+        imgs = images(32)
+        want = {
+            mid: np.asarray(jax.device_get(
+                compile_plan(fm, backend="reference").logits(np.stack(imgs))))
+            for mid, fm in (("a", fm_a), ("b", fm_b))
+        }
+        with FleetEngine(reg, batch_size=8, router=router) as eng:
+            for i, img in enumerate(imgs):
+                rid = f"req-{i}"
+                arm = router.resolve("split", rid)
+                got = eng.submit(img, model="split", request_id=rid).result()
+                np.testing.assert_array_equal(got.logits, want[arm][i])
+        # both arms actually saw traffic
+        snap = reg.snapshot()
+        assert snap["a"]["requests"] > 0 and snap["b"]["requests"] > 0
+        assert snap["a"]["requests"] + snap["b"]["requests"] == len(imgs)
+
+
+# ---------------------------------------------------------------------------
+# fleet engine — scheduler behaviour
+# ---------------------------------------------------------------------------
+
+
+class TestFleetScheduler:
+    def test_per_model_fifo_ordering(self):
+        """Results resolve in submit order within each model (single worker,
+        FIFO queues, batches finish in launch order)."""
+        reg = reference_registry(a=tiny_model(0), b=tiny_model(1))
+        order = {"a": [], "b": []}
+        with FleetEngine(reg, batch_size=4) as eng:
+            futs = []
+            for i in range(40):
+                mid = "a" if i % 2 == 0 else "b"
+                fut = eng.submit(images(1, seed=i)[0], model=mid)
+                fut.add_done_callback(
+                    lambda f, mid=mid, i=i: order[mid].append(i))
+                futs.append(fut)
+            for f in futs:
+                f.result()
+        assert order["a"] == sorted(order["a"])
+        assert order["b"] == sorted(order["b"])
+
+    def test_backpressure_blocks_submit_until_drain(self):
+        fm = tiny_model(0)
+        reg = reference_registry(m=fm)
+        gated = GatedPlan(reg.get("m").plan)
+        reg.get("m").plan = gated
+        depth = 2
+        with FleetEngine(reg, batch_size=1, queue_depth=depth) as eng:
+            imgs = images(depth + 3)
+            # first submit is popped into flight; next `depth` fill the queue
+            futs = [eng.submit(i, model="m") for i in imgs[:depth + 1]]
+            blocked_fut = []
+            blocker = threading.Thread(
+                target=lambda: blocked_fut.append(
+                    eng.submit(imgs[depth + 1], model="m")))
+            blocker.start()
+            blocker.join(timeout=0.3)
+            assert blocker.is_alive(), "submit should block on a full queue"
+            gated.gate.set()  # release the device; queue drains
+            blocker.join(timeout=10)
+            assert not blocker.is_alive()
+            for f in futs + blocked_fut:
+                assert f.result().logits.shape == (CLASSES,)
+
+    def test_weighted_round_robin_shares_the_worker(self):
+        fm_a, fm_b = tiny_model(0), tiny_model(1)
+        reg = reference_registry(a=fm_a, b=fm_b)
+        gated = GatedPlan(reg.get("a").plan)
+        reg.get("a").plan = gated
+        resolved = []
+        with FleetEngine(reg, batch_size=1,
+                         weights={"a": 3.0, "b": 1.0}) as eng:
+            imgs = images(1)
+            futs = []
+
+            def track(mid):
+                fut = eng.submit(imgs[0], model=mid)
+                fut.add_done_callback(lambda f, mid=mid: resolved.append(mid))
+                futs.append(fut)
+
+            track("a")  # parked in flight behind the gate
+            time.sleep(0.05)  # let the worker pick it up
+            for _ in range(8):
+                track("a")
+            for _ in range(8):
+                track("b")
+            gated.gate.set()
+            for f in futs:
+                f.result()
+        # smooth WRR at 3:1 — the first post-release picks go a,a,b,a
+        assert resolved[1:5].count("b") == 1, resolved
+        assert resolved.count("a") == 9 and resolved.count("b") == 8
+
+    def test_idle_coalescing_merges_co_arriving_requests(self):
+        """From idle, near-simultaneous submits share one padded launch
+        instead of the first arrival triggering a one-item batch."""
+        reg = reference_registry(m=tiny_model(0))
+        with FleetEngine(reg, batch_size=8, coalesce_ms=200.0) as eng:
+            eng.classify(images(1), model="m")  # compile outside the window
+            imgs = images(4)
+            futs = []
+            barrier = threading.Barrier(len(imgs))
+
+            def submitter(img):
+                barrier.wait()
+                futs.append(eng.submit(img, model="m"))
+
+            threads = [threading.Thread(target=submitter, args=(i,))
+                       for i in imgs]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            for f in list(futs):
+                f.result()
+            snap = eng.stats.snapshot()
+        assert snap["batches"] == 2  # warmup + ONE coalesced batch
+        assert snap["requests"] == 5
+
+    def test_sustained_full_batches_do_not_starve_a_sparse_model(self):
+        """Anti-starvation: while one model sustains full batches, a
+        partial queue on another model is served within ~two flights (a
+        head older than the in-flight dispatch becomes eligible)."""
+        reg = reference_registry(hot=tiny_model(0), cold=tiny_model(1))
+
+        class SlowPlan(GatedPlan):
+            def logits(self, x):
+                time.sleep(0.02)  # stretch each hot flight
+                return self._plan.logits(x)
+
+        hot_plan = SlowPlan(reg.get("hot").plan)
+        hot_plan.gate.set()
+        reg.get("hot").plan = hot_plan
+        n_hot = 40
+        with FleetEngine(reg, batch_size=2, queue_depth=n_hot) as eng:
+            # compile both plans outside the measurement — a cold jit
+            # compile (~0.5 s) would swamp the scheduling latency
+            eng.classify(images(1, seed=9), model="hot")
+            eng.classify(images(1, seed=9), model="cold")
+            hot_futs = [eng.submit(i, model="hot")
+                        for i in images(n_hot, seed=3)]
+            time.sleep(0.05)  # let the hot pipeline get into flight
+            t0 = time.perf_counter()
+            cold = eng.submit(images(1, seed=4)[0], model="cold")
+            cold.result(timeout=30)
+            cold_latency = time.perf_counter() - t0
+            for f in hot_futs:
+                f.result(timeout=30)
+        # without the aging valve, cold waits out the whole hot backlog
+        # (~20 batches x 20 ms); with it, ~two flights
+        assert cold_latency < 0.2, f"cold starved for {cold_latency:.3f}s"
+
+    def test_close_drains_queued_work(self):
+        reg = reference_registry(m=tiny_model(0))
+        gated = GatedPlan(reg.get("m").plan)
+        reg.get("m").plan = gated
+        eng = FleetEngine(reg, batch_size=4)
+        futs = [eng.submit(i, model="m") for i in images(10)]
+        gated.gate.set()
+        eng.close()  # must resolve everything queued before returning
+        assert all(f.done() for f in futs)
+        with pytest.raises(RuntimeError, match="closed"):
+            eng.submit(images(1)[0], model="m")
+
+    def test_submit_validation(self):
+        reg = reference_registry(m=tiny_model(0))
+        with FleetEngine(reg, batch_size=4) as eng:
+            with pytest.raises(KeyError, match="unknown model id"):
+                eng.submit(images(1)[0], model="ghost")
+            with pytest.raises(ValueError, match="input shape"):
+                eng.submit(np.zeros((3,), np.int32), model="m")
+
+    def test_evicted_model_fails_queued_futures(self):
+        reg = reference_registry(busy=tiny_model(0), victim=tiny_model(1))
+        gated = GatedPlan(reg.get("busy").plan)
+        reg.get("busy").plan = gated
+        with FleetEngine(reg, batch_size=1) as eng:
+            hold = eng.submit(images(1)[0], model="busy")  # parks the worker
+            time.sleep(0.05)
+            doomed = [eng.submit(i, model="victim") for i in images(3)]
+            reg.evict("victim")
+            gated.gate.set()
+            hold.result()
+            for f in doomed:
+                with pytest.raises(RuntimeError, match="evicted"):
+                    f.result(timeout=10)
+            # scheduler state of the evicted model is garbage-collected
+            # once its queue drains and the worker next goes idle
+            eng.submit(images(1)[0], model="busy").result(timeout=10)
+            deadline = time.perf_counter() + 5
+            while ("victim" in eng._queues
+                   and time.perf_counter() < deadline):
+                time.sleep(0.01)
+                eng.submit(images(1)[0], model="busy").result(timeout=10)
+            assert "victim" not in eng._queues
+
+    def test_cancelled_future_does_not_kill_the_worker(self):
+        """A client cancelling a queued future (client-side timeout) must
+        not wedge the engine: delivering to a cancelled future would raise
+        InvalidStateError in the only worker thread."""
+        reg = reference_registry(m=tiny_model(0))
+        gated = GatedPlan(reg.get("m").plan)
+        reg.get("m").plan = gated
+        with FleetEngine(reg, batch_size=2) as eng:
+            hold = eng.submit(images(1)[0], model="m")  # parks the worker
+            time.sleep(0.05)
+            queued = [eng.submit(i, model="m") for i in images(4, seed=1)]
+            assert queued[1].cancel() and queued[2].cancel()
+            gated.gate.set()
+            hold.result(timeout=10)
+            for f in (queued[0], queued[3]):  # engine still serves
+                assert f.result(timeout=10).logits.shape == (CLASSES,)
+            assert queued[1].cancelled() and queued[2].cancelled()
+            late = eng.submit(images(1, seed=2)[0], model="m")
+            assert late.result(timeout=10).logits.shape == (CLASSES,)
+
+    def test_plan_failure_surfaces_on_futures_and_engine_survives(self):
+        reg = reference_registry(m=tiny_model(0))
+
+        class BoomPlan(GatedPlan):
+            def logits(self, x):
+                raise RuntimeError("boom")
+
+        good_plan = reg.get("m").plan
+        reg.get("m").plan = BoomPlan(good_plan)
+        with FleetEngine(reg, batch_size=2) as eng:
+            bad = eng.submit(images(1)[0], model="m")
+            with pytest.raises(RuntimeError, match="boom"):
+                bad.result(timeout=10)
+            reg.get("m").plan = good_plan  # "hot-swap" back to a good plan
+            ok = eng.submit(images(1)[0], model="m")
+            assert ok.result(timeout=10).logits.shape == (CLASSES,)
+
+
+# ---------------------------------------------------------------------------
+# hot-swap under fire
+# ---------------------------------------------------------------------------
+
+
+class TestHotSwapConcurrency:
+    def test_swap_under_concurrent_submit_resolves_everything(self):
+        """Clients hammer one model id while checkpoints hot-swap beneath
+        them: every future must resolve, and every answer must equal the
+        old or the new checkpoint's logits for that image — never a torn
+        mixture."""
+        fm_v0, fm_v1 = tiny_model(0), tiny_model(1)
+        reg = reference_registry(prod=fm_v0)
+        imgs = images(24)
+        want = {
+            v: np.asarray(jax.device_get(
+                compile_plan(fm, backend="reference").logits(np.stack(imgs))))
+            for v, fm in ((0, fm_v0), (1, fm_v1))
+        }
+        n_clients, per_client = 3, 40
+        results = [[] for _ in range(n_clients)]
+        stop_swapping = threading.Event()
+
+        def swapper():
+            version = 0
+            while not stop_swapping.is_set():
+                version ^= 1
+                reg.swap("prod", (fm_v0, fm_v1)[version])
+                time.sleep(0.002)
+
+        def client(w):
+            for k in range(per_client):
+                i = (w * per_client + k) % len(imgs)
+                logits = engine.submit(
+                    imgs[i], model="prod").result(timeout=30).logits
+                results[w].append((i, logits))
+
+        with FleetEngine(reg, batch_size=4) as engine:
+            sw = threading.Thread(target=swapper)
+            clients = [threading.Thread(target=client, args=(w,))
+                       for w in range(n_clients)]
+            sw.start()
+            for t in clients:
+                t.start()
+            for t in clients:
+                t.join()
+            stop_swapping.set()
+            sw.join()
+
+        checked = 0
+        for w in range(n_clients):
+            assert len(results[w]) == per_client  # every future resolved
+            for i, logits in results[w]:
+                ok = (np.array_equal(logits, want[0][i])
+                      or np.array_equal(logits, want[1][i]))
+                assert ok, f"torn logits for image {i}"
+                checked += 1
+        assert checked == n_clients * per_client
+        assert reg.get("prod").version > 0  # swaps actually happened
+
+
+# ---------------------------------------------------------------------------
+# manifests + checkpoint versioning
+# ---------------------------------------------------------------------------
+
+
+class TestFleetManifest:
+    def test_round_trip_and_relative_paths(self):
+        with tempfile.TemporaryDirectory() as root:
+            save_frozen(f"{root}/a", tiny_model(0))
+            save_frozen(f"{root}/b", tiny_model(1))
+            save_fleet_manifest(root, {"a": "a", "b": "b"},
+                                splits={"s": {"a": 0.5, "b": 0.5}})
+            manifest = load_fleet_manifest(root)
+            assert manifest["splits"] == {"s": {"a": 0.5, "b": 0.5}}
+            reg = ModelRegistry.from_manifest(root, backend="reference")
+            assert reg.ids() == ["a", "b"]
+            assert reg.get("a").plan.name == "tiny-0"
+
+    def test_manifest_validation(self):
+        with tempfile.TemporaryDirectory() as root:
+            with pytest.raises(ValueError, match="at least one model"):
+                save_fleet_manifest(root, {})
+            with pytest.raises(ValueError, match="unknown models"):
+                save_fleet_manifest(root, {"a": "a"},
+                                    splits={"s": {"ghost": 1.0}})
+            with pytest.raises(ValueError, match="shadows"):
+                save_fleet_manifest(root, {"a": "a"},
+                                    splits={"a": {"a": 1.0}})
+            with pytest.raises(FileNotFoundError):
+                load_fleet_manifest(root)
+
+    def test_hand_edited_manifest_rejected_at_load(self):
+        """The invariants hold on READ too — a hand-edited FLEET.json
+        with a broken split fails at load, not per-request at serve."""
+        import json as _json
+
+        with tempfile.TemporaryDirectory() as root:
+            save_frozen(f"{root}/a", tiny_model(0))
+            save_fleet_manifest(root, {"a": "a"})
+            path = f"{root}/FLEET.json"
+            with open(path) as f:
+                meta = _json.load(f)
+            meta["splits"] = {"s": {"ghost": 1.0}}
+            with open(path, "w") as f:
+                _json.dump(meta, f)
+            with pytest.raises(ValueError, match="unknown models"):
+                load_fleet_manifest(root)
+
+    def test_save_frozen_appends_versions_and_pins_steps(self):
+        fm0, fm1 = tiny_model(0), tiny_model(1)
+        with tempfile.TemporaryDirectory() as d:
+            save_frozen(d, fm0)
+            save_frozen(d, fm1)  # auto-increments: does not clobber v0
+            latest = load_frozen(d)
+            pinned0 = load_frozen(d, step=0)
+            np.testing.assert_array_equal(
+                np.asarray(latest.layers[0].w), np.asarray(fm1.layers[0].w))
+            np.testing.assert_array_equal(
+                np.asarray(pinned0.layers[0].w), np.asarray(fm0.layers[0].w))
+
+    def test_prune_keeps_newest_versions(self):
+        with tempfile.TemporaryDirectory() as d:
+            for seed in range(4):
+                save_frozen(d, tiny_model(seed))
+            save_frozen(d, tiny_model(4), keep_last=2)  # prunes 0..2
+            assert sorted(
+                n for n in os.listdir(d) if n.startswith("step_")
+            ) == ["step_00000003", "step_00000004"]
+            latest = load_frozen(d)  # newest survives and still loads
+            np.testing.assert_array_equal(
+                np.asarray(latest.layers[0].w),
+                np.asarray(tiny_model(4).layers[0].w))
+            with pytest.raises(ValueError, match="keep_last"):
+                prune_frozen(d, keep_last=0)
+
+    def test_auto_save_after_rollback_does_not_clobber(self):
+        """Auto-increment must step past the numerically newest directory,
+        not past LATEST — after a rollback re-export those differ, and
+        incrementing from LATEST would overwrite a retained version."""
+        with tempfile.TemporaryDirectory() as d:
+            for seed in range(3):
+                save_frozen(d, tiny_model(seed))   # steps 0, 1, 2
+            save_frozen(d, tiny_model(9), step=1)  # rollback: LATEST -> 1
+            save_frozen(d, tiny_model(3))          # auto: 3, NOT 2
+            np.testing.assert_array_equal(  # step 2 survived the auto save
+                np.asarray(load_frozen(d, step=2).layers[0].w),
+                np.asarray(tiny_model(2).layers[0].w))
+            np.testing.assert_array_equal(  # and LATEST now names step 3
+                np.asarray(load_frozen(d).layers[0].w),
+                np.asarray(tiny_model(3).layers[0].w))
+
+    def test_prune_never_deletes_the_step_latest_names(self):
+        """A rollback re-export rewrites LATEST to a lower step; pruning
+        must keep that step even though it is not numerically newest."""
+        with tempfile.TemporaryDirectory() as d:
+            save_frozen(d, tiny_model(0), step=5)
+            save_frozen(d, tiny_model(1), step=3)  # rollback: LATEST -> 3
+            pruned = prune_frozen(d, keep_last=1)
+            assert pruned == []  # 5 is newest, 3 is LATEST: both kept
+            rolled_back = load_frozen(d)
+            np.testing.assert_array_equal(
+                np.asarray(rolled_back.layers[0].w),
+                np.asarray(tiny_model(1).layers[0].w))
+
+
+# ---------------------------------------------------------------------------
+# registry-routed serving on a real paper config (slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+class TestFleetPaperConfig:
+    def test_registry_routed_bit_exact_on_vgg8b(self):
+        from repro.configs import paper
+        from repro.core import les
+        from repro.infer import freeze
+
+        cfg = paper.get("vgg8b", scale=0.0625)
+        state = les.create_train_state(jax.random.PRNGKey(3), cfg)
+        fm = freeze(state, cfg)
+        plan = compile_plan(fm, backend="reference")
+        reg = ModelRegistry(backend="reference")
+        reg.register("prod", fm)
+        rng = np.random.default_rng(11)
+        imgs = [rng.integers(-127, 128, cfg.input_shape).astype(np.int32)
+                for _ in range(24)]
+
+        with FleetEngine(reg, batch_size=8) as eng:
+            fleet = np.stack([eng.submit(i, model="prod").result().logits
+                              for i in imgs])
+        with VisionEngine(plan, batch_size=8) as ve:
+            vision = np.stack([f.result().logits
+                               for f in [ve.submit(i) for i in imgs]])
+        np.testing.assert_array_equal(fleet, vision)

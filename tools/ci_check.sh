@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Quick CI gate: the tier-1 test command (minus slow integration tests)
-# plus a kernel benchmark smoke, a fused-training benchmark smoke, and a
-# docs link check.  Run from anywhere; ~a few minutes on CPU.
+# plus kernel / fused-training / fleet-serving benchmark smokes, a
+# serve-CLI smoke, and a docs link check.  Run from anywhere; ~a few
+# minutes on CPU.
 #
 #   tools/ci_check.sh          # quick gate
 #   FULL=1 tools/ci_check.sh   # include slow integration tests (tier-1 exact)
@@ -19,4 +20,7 @@ fi
 
 python -m benchmarks.run --quick --only kernel
 python -m benchmarks.train_step --smoke
+python -m benchmarks.serve_fleet --smoke
+python -m repro.launch.serve_vision --train-steps 0 --scale 0.0625 \
+    --backend reference --requests 24 --batch 8
 echo "[ci_check] OK"
