@@ -1,0 +1,189 @@
+"""Streaming vs materialised conv benchmark: train forward + infer plan.
+
+Times the two conv data paths the ``kernels.nitro_conv`` dispatcher
+offers — ``conv_mode='stream'`` (implicit im2col: patch blocks formed
+band-by-band, the (N·H·W, K²·C) HBM patch matrix never exists) against
+``conv_mode='materialise'`` (explicit im2col + fused ``nitro_matmul``) —
+through both consumers:
+
+  * the fused *training forward* (``model.forward(fused=True)``);
+  * the compiled *inference plan* (``infer.plan.ExecutionPlan``).
+
+Before timing, both paths are checked bit-identical (activations, cached
+z*, and plan logits vs the independent ``frozen_forward`` oracle) — the
+benchmark never compares two computations that disagree.  The per-layer
+HBM-traffic estimates from ``plan.summary()`` are aggregated into the
+JSON so the ~K² conv-input saving is machine-checkable next to the wall
+times.
+
+Emits ``name,us_per_call,derived`` CSV rows on stdout *and*
+``BENCH_conv.json`` in the CWD.
+
+    PYTHONPATH=src python -m benchmarks.conv_stream [--quick] [--smoke]
+
+``--smoke`` runs the shared tiny 8×8 config in seconds — the CI gate
+(tools/ci_check.sh) uses it to keep this path exercised on every commit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, tiny_smoke_cfg
+
+JSON_PATH = "BENCH_conv.json"
+
+# (arch, scale, batch) — paper CNN topologies at CPU-feasible width
+CONFIGS = [
+    ("vgg8b", 0.5, 8),
+    ("vgg11b", 0.5, 4),
+]
+
+MODES = ("stream", "materialise")
+
+
+def _assert_trees_equal(a, b) -> None:
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _time_paired(fns: dict, *args, iters: int, **kw) -> dict:
+    """Contention-robust paired timing: interleaved min-of-N per variant.
+
+    This container's CPU swings ~2× with co-tenant load; timing each
+    variant in its own block lets that drift masquerade as a speedup (or
+    a regression).  Every round therefore times each variant once,
+    back-to-back, alternating the order between rounds (ABBA) to cancel
+    first-mover cache effects.  Per variant the *minimum* over rounds is
+    reported — the timeit rationale: the minimum bounds the intrinsic
+    cost, while co-tenant interference only ever inflates a sample.
+    """
+    for fn in fns.values():  # jit warm-up
+        jax.block_until_ready(fn(*args, **kw))
+    names = list(fns)
+    best = {m: float("inf") for m in names}
+    for i in range(iters):
+        for m in names if i % 2 == 0 else reversed(names):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[m](*args, **kw))
+            best[m] = min(best[m], (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
+    from repro.core import les, model as M
+    from repro.infer.export import freeze
+    from repro.infer.plan import compile_plan
+
+    state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-127, 128, (batch, *cfg.input_shape)),
+                    jnp.int32)
+
+    # ---- training forward -------------------------------------------------
+    fwds = {
+        mode: jax.jit(functools.partial(
+            M.forward, cfg=cfg, train=False, fused=True, conv_mode=mode))
+        for mode in MODES
+    }
+    out = {m: fn(state.params, x=x) for m, fn in fwds.items()}
+    # parity gate: logits, activations AND the cached z* bit-identical
+    _assert_trees_equal(out["stream"][:3], out["materialise"][:3])
+    del out  # both modes' full caches would otherwise sit on the heap
+    # (hundreds of MB at scale 0.5) and distort the timing below
+
+    fwd_us = _time_paired(fwds, state.params, x=x, iters=iters)
+    fwd_speedup = fwd_us["materialise"] / fwd_us["stream"]
+
+    # ---- inference plan ---------------------------------------------------
+    fm = freeze(state, cfg)
+    plans = {m: compile_plan(fm, conv_mode=m) for m in MODES}
+    oracle = M.frozen_forward(state.params, cfg, x)
+    for m, plan in plans.items():
+        np.testing.assert_array_equal(
+            np.asarray(plan.logits(x)), np.asarray(oracle))
+    plan_us = _time_paired(
+        {m: plans[m].logits for m in MODES}, x, iters=iters
+    )
+    plan_speedup = plan_us["materialise"] / plan_us["stream"]
+
+    # ---- HBM-traffic estimate (per sample, conv steps) --------------------
+    hbm = {"stream": 0, "materialise": 0}
+    conv_ratios = []
+    for row in plans["stream"].summary():
+        per_sample = row["hbm_per_sample_bytes"]
+        hbm["stream"] += per_sample["stream"]
+        hbm["materialise"] += per_sample["materialise"]
+        if row["kind"] == "conv":
+            conv_ratios.append(row["stream_saving_ratio"])
+
+    for part, us, speedup in (("train_fwd", fwd_us, fwd_speedup),
+                              ("plan", plan_us, plan_speedup)):
+        for m in MODES:
+            emit(f"conv/{cfg.name}/{part}/{m}", us[m],
+                 f"batch {batch}; {us[m] / batch:.1f} us/sample")
+        emit(f"conv/{cfg.name}/{part}/speedup", 0.0,
+             f"{speedup:.2f}x stream/materialise (interleaved min-of-N)")
+    emit(f"conv/{cfg.name}/hbm", 0.0,
+         f"{hbm['materialise']}B->{hbm['stream']}B per sample; "
+         f"conv-layer ratios {conv_ratios}")
+
+    results.append({
+        "arch": cfg.name,
+        "batch": batch,
+        "train_fwd_us": fwd_us,
+        "train_fwd_speedup_stream_over_materialise": fwd_speedup,
+        "plan_us": plan_us,
+        "plan_speedup_stream_over_materialise": plan_speedup,
+        "hbm_per_sample_bytes": hbm,
+        "hbm_saving_ratio": hbm["materialise"] / max(hbm["stream"], 1),
+        "conv_layer_saving_ratios": conv_ratios,
+        "bit_exact": True,  # asserted above before timing
+    })
+
+
+def run(quick: bool = False, smoke: bool = False) -> None:
+    from repro.configs import paper
+    from repro.kernels.nitro_matmul.ops import resolve_backend
+
+    iters = 3 if (quick or smoke) else 30
+    results: list[dict] = []
+    if smoke:
+        _bench_config(tiny_smoke_cfg(), batch=8, iters=iters, results=results)
+    else:
+        for arch, scale, batch in CONFIGS:
+            cfg = paper.get(arch, scale=scale)
+            _bench_config(cfg, batch=batch, iters=iters, results=results)
+    payload = {
+        "benchmark": "conv_stream",
+        "backend": jax.default_backend(),
+        "kernel_backend_auto": resolve_backend("auto"),
+        "speedup_estimator": (
+            "interleaved min-of-N, ABBA order — this container's CPU "
+            "swings ~2x with co-tenant load, and the minimum bounds the "
+            "intrinsic cost (interference only inflates samples); on CPU "
+            "the two conv modes run the same GEMMs and land at parity, "
+            "while the hbm_per_sample_bytes column is the structural ~K^2 "
+            "input-traffic cut the TPU kernel path realises"
+        ),
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("conv/json", 0.0, JSON_PATH)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer timing iters")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config only (CI import-and-run gate)")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

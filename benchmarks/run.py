@@ -22,6 +22,7 @@ def main() -> None:
 
     from benchmarks import (
         ablations,
+        conv_stream,
         kernel_bench,
         roofline,
         serve_fleet,
@@ -37,6 +38,7 @@ def main() -> None:
     suites = [
         ("kernel", lambda: kernel_bench.run()),
         ("train", lambda: train_step.run(quick=q)),
+        ("conv", lambda: conv_stream.run(quick=q)),
         ("infer", lambda: serve_infer.run(quick=q)),
         ("serve", lambda: serve_fleet.run(quick=q)),
         ("table1", lambda: table1_mlp.run(steps=150 if q else 600)),

@@ -34,7 +34,7 @@ from repro.core.numerics import INT_DTYPE
 
 
 def _nitro_ops():
-    """Lazy import of the fused-kernel dispatcher.
+    """Lazy import of the fused-matmul dispatcher.
 
     ``repro.core.__init__`` imports this module, and the kernel package
     imports ``repro.core`` leaf modules — a module-level import here would
@@ -43,6 +43,13 @@ def _nitro_ops():
     cost is one sys.modules lookup per traced layer.
     """
     from repro.kernels.nitro_matmul import ops
+
+    return ops
+
+
+def _conv_ops():
+    """Lazy import of the conv dispatcher (same cycle-breaking rationale)."""
+    from repro.kernels.nitro_conv import ops
 
     return ops
 
@@ -109,18 +116,23 @@ def forward_layers(
     train: bool = True,
     fused: bool = True,
     backend: str = "auto",
+    conv_mode: str = "stream",
 ) -> tuple[jax.Array, dict]:
     """Run a block's forward layers; cache everything backward needs.
 
     ``fused=True`` (default) routes the matmul → NITRO Scaling → NITRO-ReLU
-    pipeline through the fused ``nitro_matmul`` kernel entry point the
-    inference plan already uses: one VMEM pass emitting both the activation
-    ``a`` and the pre-ReLU ``z_star`` the backward needs, instead of three
-    HBM round-trips of the int32 pre-activation.  ``fused=False`` is the
-    unfused reference composition — bit-exact with the fused path (the
-    tests enforce it), kept as the escape hatch/oracle.
+    pipeline through the fused kernel entry points the inference plan
+    already uses: one VMEM pass emitting both the activation ``a`` and the
+    pre-ReLU ``z_star`` the backward needs, instead of three HBM
+    round-trips of the int32 pre-activation.  Conv blocks go through the
+    ``nitro_conv`` dispatcher; ``conv_mode='stream'`` (default) forms
+    im2col patches implicitly from row bands so the ``(N·H·W, K²·C)``
+    patch matrix never touches HBM, ``'materialise'`` is the historical
+    explicit-im2col route.  ``fused=False`` is the unfused reference
+    composition — bit-exact with every fused variant (the tests enforce
+    it), kept as the escape hatch/oracle.
 
-    The cache contract is identical in both modes (``z_star`` + the
+    The cache contract is identical in all modes (``z_star`` + the
     layer input), so ``forward_layers_backward`` is unchanged.
     """
     cache: dict[str, Any] = {}
@@ -129,15 +141,10 @@ def forward_layers(
         sf = scaling.conv_scale_factor(spec.kernel_size, c_in)
         if fused:
             numerics.assert_int(x, "conv input")
-            n, h, w_sp, _ = x.shape
-            patches, w_flat = layers.conv_im2col_operands(params["fw"]["w"], x)
-            a2, z2 = _nitro_ops().fused_matmul_fwd(
-                patches, w_flat, sf=sf, alpha_inv=spec.alpha_inv,
-                backend=backend,
+            a, cache["z_star"] = _conv_ops().fused_conv_fwd(
+                x, params["fw"]["w"], sf=sf, alpha_inv=spec.alpha_inv,
+                backend=backend, conv_mode=conv_mode,
             )
-            f = w_flat.shape[-1]
-            a = a2.reshape(n, h, w_sp, f)
-            cache["z_star"] = z2.reshape(n, h, w_sp, f)
             cache["conv"] = layers.ConvCache(x=x)
         else:
             z, cache["conv"] = layers.conv_forward(params["fw"], x)
@@ -166,12 +173,20 @@ def forward_layers(
 
 
 def forward_layers_backward(
-    params: dict, spec: BlockSpec, cache: dict, delta_fw: jax.Array
+    params: dict,
+    spec: BlockSpec,
+    cache: dict,
+    delta_fw: jax.Array,
+    *,
+    conv_mode: str = "stream",
+    backend: str = "auto",
 ) -> dict:
     """Backward through the forward layers from δ_l^fw; returns weight grads.
 
     The input-gradient of the first layer is *not* propagated further —
-    LES confines gradients to the block.
+    LES confines gradients to the block.  ``conv_mode`` selects how the
+    conv gradients source their patches (streamed row bands vs explicit
+    im2col) — bit-identical, see ``layers.conv_backward``.
     """
     g = delta_fw
     if "dropout" in cache:
@@ -181,7 +196,10 @@ def forward_layers_backward(
     g = activations.nitro_relu_backward(cache["z_star"], g, spec.alpha_inv)
     g = scaling.scale_backward(g)  # STE
     if spec.kind == "conv":
-        _, grads = layers.conv_backward(params["fw"], cache["conv"], g)
+        _, grads = layers.conv_backward(
+            params["fw"], cache["conv"], g,
+            conv_mode=conv_mode, backend=backend,
+        )
     else:
         _, grads = layers.linear_backward(params["fw"], cache["linear"], g)
     return grads

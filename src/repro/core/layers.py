@@ -110,28 +110,34 @@ def conv_forward(params: dict, x: jax.Array) -> tuple[jax.Array, ConvCache]:
 
 
 def conv_backward(
-    params: dict, cache: ConvCache, grad_out: jax.Array
+    params: dict,
+    cache: ConvCache,
+    grad_out: jax.Array,
+    *,
+    conv_mode: str = "stream",
+    backend: str = "auto",
 ) -> tuple[jax.Array, dict]:
-    """Integer conv backward.
+    """Integer conv backward, routed through the shared conv dispatcher.
 
     grad_W : correlation of input patches with grad_out (im2colᵀ · g).
     grad_x : 'full' correlation of grad_out with the spatially-flipped,
-             channel-transposed kernel — expressed as a second im2col matmul
-             so the whole backward runs on the MXU integer path.
+             channel-transposed kernel — one more conv on the MXU path.
+
+    ``conv_mode='stream'`` (default) feeds both matmuls with patches formed
+    on the fly from row bands — the ``(N·H·W, K²·C)`` patch matrix is never
+    materialised; ``'materialise'`` is the historical im2col formulation.
+    Integer accumulation is order-exact, so the two agree bit-for-bit.
     """
+    from repro.kernels.nitro_conv import ops as conv_ops  # lazy: cycle-free
+
     w = params["w"]
-    k, _, c_in, c_out = w.shape
-    x = cache.x
-    n, h, ww, _ = x.shape
-
-    patches, _ = conv_im2col_operands(w, x)
-    g_flat = grad_out.reshape(n * h * ww, c_out)
-    grad_w = int_matmul(patches.T, g_flat).reshape(k, k, c_in, c_out)
-
-    # grad_x: conv of g with W rotated 180° and (c_in, c_out) swapped.
-    w_rot = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2)  # (K,K,F,C)
-    g_patches, w_rot_flat = conv_im2col_operands(w_rot, grad_out)
-    grad_x = int_matmul(g_patches, w_rot_flat).reshape(n, h, ww, c_in)
+    grad_w = conv_ops.conv_grad_w(
+        cache.x, grad_out, kernel_size=w.shape[0],
+        backend=backend, conv_mode=conv_mode,
+    )
+    grad_x = conv_ops.conv_grad_x(
+        grad_out, w, backend=backend, conv_mode=conv_mode
+    )
     return grad_x, {"w": grad_w}
 
 
@@ -145,9 +151,15 @@ class PoolCache(NamedTuple):
     in_shape: tuple[int, int, int, int]
 
 
-def _window_view(x: jax.Array) -> jax.Array:
+def window_view_2x2(x: jax.Array) -> jax.Array:
     """(N,H,W,C) → (N,H//2,W//2,4,C), cropping odd trailing rows/cols
-    (floor pooling, matching framework semantics for odd sizes)."""
+    (floor pooling, matching framework semantics for odd sizes).
+
+    The shared definition of 2×2/stride-2 window extraction: ``maxpool``
+    here, the inference plan's cacheless pool, and the streaming-conv
+    oracle's pool epilogue all reduce over axis 3 of this view, so pooling
+    semantics (including odd-edge cropping) are defined exactly once.
+    """
     n, h, w, c = x.shape
     h2, w2 = h // 2, w // 2
     x = x[:, : h2 * 2, : w2 * 2, :]
@@ -157,7 +169,7 @@ def _window_view(x: jax.Array) -> jax.Array:
 
 def maxpool_forward(x: jax.Array) -> tuple[jax.Array, PoolCache]:
     numerics.assert_int(x, "maxpool input")
-    win = _window_view(x)
+    win = window_view_2x2(x)
     idx = jnp.argmax(win, axis=3)
     onehot = (idx[:, :, :, None, :] == jnp.arange(4)[None, None, None, :, None])
     out = jnp.max(win, axis=3)

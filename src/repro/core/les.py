@@ -63,19 +63,24 @@ def train_step(
     *,
     fused: bool = True,
     backend: str = "auto",
+    conv_mode: str = "stream",
 ) -> tuple[TrainState, StepMetrics]:
     """One integer-only NITRO-D step over a batch. jit-able (cfg static).
 
-    The forward pass runs on the fused ``nitro_matmul`` kernel by default
-    (the same entry point the inference plan compiles to); ``fused=False``
-    is the unfused reference escape hatch, bit-exact with the fused step.
+    The forward pass runs on the fused kernels by default (the same entry
+    points the inference plan compiles to); ``fused=False`` is the unfused
+    reference escape hatch, bit-exact with the fused step.  ``conv_mode``
+    selects the conv data path for the fused forward *and* the conv
+    gradients: ``'stream'`` (implicit im2col — default) or
+    ``'materialise'`` (explicit HBM patch matrices, the historical route).
     """
     params = state.params
     y = one_hot_int(labels, cfg.num_classes)
 
     # ---- forward ----------------------------------------------------------
     y_hat, acts, fw_caches, out_cache = M.forward(
-        params, cfg, x, train=True, key=key, fused=fused, backend=backend
+        params, cfg, x, train=True, key=key, fused=fused, backend=backend,
+        conv_mode=conv_mode,
     )
 
     # ---- output layers ----------------------------------------------------
@@ -93,7 +98,9 @@ def train_step(
         grad_l = B.local_gradient(y_hat_l, y)
         local_losses.append(rss_loss(y_hat_l, y))
         delta_fw, lr_grads = B.learning_layers_backward(p, spec, lr_cache, grad_l)
-        fw_grads = B.forward_layers_backward(p, spec, fw_cache, delta_fw)
+        fw_grads = B.forward_layers_backward(
+            p, spec, fw_cache, delta_fw, conv_mode=conv_mode, backend=backend
+        )
         new_blocks.append(
             {
                 "fw": opt.apply_tree(p["fw"], fw_grads, state.opt_fw),

@@ -58,16 +58,19 @@ def forward(
     key: jax.Array | None = None,
     fused: bool = True,
     backend: str = "auto",
+    conv_mode: str = "stream",
 ) -> tuple[jax.Array, list[jax.Array], list[dict], dict]:
     """Full forward pass.
 
     Returns (ŷ, block activations a_1..a_L, forward caches, output cache).
     Inference callers only use ŷ; the LES trainer consumes the rest.
 
-    ``fused`` selects the block-layer implementation: the fused
-    ``nitro_matmul`` entry point shared with the inference plan (default),
-    or the unfused matmul → scale → relu reference composition — bit-exact
-    with each other, test-enforced.
+    ``fused`` selects the block-layer implementation: the fused kernel
+    entry points shared with the inference plan (default), or the unfused
+    matmul → scale → relu reference composition.  ``conv_mode`` picks the
+    fused conv route: ``'stream'`` (implicit im2col, no HBM patch matrix)
+    or ``'materialise'`` (explicit im2col escape hatch).  All combinations
+    are bit-exact with each other, test-enforced.
     """
     a = jnp.asarray(x, INT_DTYPE)
     acts: list[jax.Array] = []
@@ -79,7 +82,7 @@ def forward(
     for spec, p, dk in zip(cfg.blocks, params["blocks"], drop_keys):
         a, cache = B.forward_layers(
             p, spec, a, dropout_key=dk, train=train,
-            fused=fused, backend=backend,
+            fused=fused, backend=backend, conv_mode=conv_mode,
         )
         acts.append(a)
         caches.append(cache)

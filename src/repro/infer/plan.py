@@ -1,30 +1,37 @@
 """Compile a FrozenModel into a fused integer execution plan.
 
-The plan lowers every layer onto the fused ``nitro_matmul`` Pallas kernel:
-``z`` lives in a VMEM scratch accumulator and only the final activation is
-written back, narrowed to int8 whenever the NITRO-ReLU output range fits
-(it always does for α_inv ≥ 2 — the range is [⌊-127/α_inv⌋-μ, 127-μ]).
-Training shares the same kernel entry point (``kernels.nitro_matmul.ops``)
-via ``core.blocks.forward_layers``; inference differs only in dropping the
-``z_star`` cache and narrowing inter-layer activations
-(see ``docs/ARCHITECTURE.md``).
+The plan lowers every layer onto the fused Pallas kernels: ``z`` lives in a
+VMEM scratch accumulator and only the final activation is written back,
+narrowed to int8 whenever the NITRO-ReLU output range fits (it always does
+for α_inv ≥ 2 — the range is [⌊-127/α_inv⌋-μ, 127-μ]).  Training shares
+the same kernel entry points (``kernels.nitro_matmul.ops`` /
+``kernels.nitro_conv.ops``) via ``core.blocks.forward_layers``; inference
+differs only in dropping the ``z_star`` cache and narrowing inter-layer
+activations (see ``docs/ARCHITECTURE.md``).
 
     HBM traffic per layer:  unfused  M·N·(4+4+4) bytes  →  fused  M·N·1
 
-Conv layers go through the same kernel via im2col (pad + static slices —
-layout work XLA folds into the kernel prologue); 2×2 max-pool and flatten
-run as cheap jnp ops between fused matmuls.
+Conv layers stream: the default ``conv_mode='stream'`` runs the implicit
+im2col kernel — input rows are staged through VMEM and the
+``(N·H·W, K²·C)`` patch matrix is never materialised (~K²× less conv-input
+traffic) — with the 2×2 max-pool folded into the kernel epilogue for
+``pool=True`` layers, so pooled convs write H/2·W/2 activations straight
+away.  ``conv_mode='materialise'`` is the explicit-im2col escape hatch
+(patch matrix + ``nitro_matmul`` + separate jnp pool), bit-exact with the
+streaming path.
 
 Backends (static at compile time):
 
   * ``'pallas'``     — the real TPU kernel;
   * ``'interpret'``  — the same kernel through the Pallas interpreter
                        (bit-exact off-TPU, used by the parity tests);
-  * ``'reference'``  — pure-jnp composition from ``core`` (fast on CPU);
+  * ``'reference'``  — pure-jnp composition (fast on CPU; the streaming
+                       conv oracle runs the same row-band algorithm);
   * ``'auto'``       — pallas on TPU, reference elsewhere.
 
-Every backend is bit-exact with ``model.frozen_forward`` on the same
-frozen params — asserted by tests/test_infer.py over the paper configs.
+Every backend and conv mode is bit-exact with ``model.frozen_forward`` on
+the same frozen params — asserted by tests/test_infer.py and
+tests/test_conv_stream.py over the paper configs.
 """
 
 from __future__ import annotations
@@ -36,9 +43,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.activations import mu_int8
-from repro.core.layers import _window_view, conv_im2col_operands
 from repro.core.numerics import INT_DTYPE
 from repro.infer.export import FrozenModel
+from repro.kernels.nitro_conv import ops as conv_ops
 from repro.kernels.nitro_matmul import ops as nitro_ops
 from repro.kernels.nitro_matmul.ops import BACKENDS  # noqa: F401 — re-export (historical public name)
 
@@ -53,6 +60,8 @@ class StepMeta(NamedTuple):
     pool: bool
     kernel_size: int    # conv only (0 otherwise)
     out_dtype: str      # 'int8' | 'int32' — inter-layer activation dtype
+    conv_mode: str = "" # conv only: 'stream' | 'materialise'
+    fused_pool: bool = False  # pool folded into the conv kernel epilogue
 
 
 def _relu_fits_int8(alpha_inv: int) -> bool:
@@ -77,21 +86,19 @@ def _fused(x2, w2, meta: StepMeta, backend: str):
     )
 
 
-def _maxpool2x2(a: jax.Array) -> jax.Array:
-    """Inference max-pool: window max only, no argmax routing cache."""
-    return jnp.max(_window_view(a), axis=3)
-
-
 def _execute(weights, x, *, metas: tuple[StepMeta, ...], backend: str):
     a = jnp.asarray(x, INT_DTYPE)
     for w, meta in zip(weights, metas):
         if meta.kind == "conv":
-            n, h, ww, _ = a.shape
-            patches, w_flat = conv_im2col_operands(w, a)
-            out = _fused(patches, w_flat, meta, backend)
-            a = out.reshape(n, h, ww, w.shape[-1])
-            if meta.pool:
-                a = _maxpool2x2(a)
+            # 4-D in, 4-D out: the conv dispatcher owns patch formation
+            # (implicit on the streaming path) and the pool epilogue —
+            # no 2-D patch-matrix reshape at this level.
+            a = conv_ops.fused_conv(
+                a, w, sf=meta.sf, alpha_inv=meta.alpha_inv,
+                apply_relu=meta.apply_relu, pool=meta.pool,
+                out_dtype=jnp.dtype(meta.out_dtype),
+                backend=backend, conv_mode=meta.conv_mode,
+            )
         else:  # 'linear' | 'output' — flatten anything spatial entering
             if a.ndim > 2:
                 a = a.reshape(a.shape[0], -1)
@@ -103,8 +110,15 @@ class ExecutionPlan:
     """A FrozenModel lowered to fused kernel calls; jit-compiled per batch
     shape (serve with a fixed batch size to compile exactly once)."""
 
-    def __init__(self, fm: FrozenModel, *, backend: str = "auto"):
+    def __init__(
+        self,
+        fm: FrozenModel,
+        *,
+        backend: str = "auto",
+        conv_mode: str = "stream",
+    ):
         self.backend = nitro_ops.resolve_backend(backend)
+        self.conv_mode = conv_ops.resolve_conv_mode(conv_mode)
         self.input_shape = fm.input_shape
         self.num_classes = fm.num_classes
         self.name = fm.name
@@ -115,11 +129,16 @@ class ExecutionPlan:
                 if layer.apply_relu and _relu_fits_int8(layer.alpha_inv)
                 else "int32"
             )
+            is_conv = layer.kind == "conv"
             metas.append(StepMeta(
                 kind=layer.kind, sf=layer.sf, alpha_inv=layer.alpha_inv,
                 apply_relu=layer.apply_relu, pool=layer.pool,
-                kernel_size=layer.w.shape[0] if layer.kind == "conv" else 0,
+                kernel_size=layer.w.shape[0] if is_conv else 0,
                 out_dtype=out_dtype,
+                conv_mode=self.conv_mode if is_conv else "",
+                fused_pool=bool(
+                    is_conv and layer.pool and self.conv_mode == "stream"
+                ),
             ))
         self.metas = tuple(metas)
         self.weights = [layer.w for layer in fm.layers]
@@ -137,9 +156,47 @@ class ExecutionPlan:
         return jnp.argmax(self.logits(x), axis=-1)
 
     def summary(self) -> list[dict]:
-        """Per-step introspection incl. the fused-vs-unfused HBM estimate."""
+        """Per-step introspection incl. per-sample HBM-traffic estimates.
+
+        For conv steps both routes are estimated so the streaming delta is
+        visible whatever mode the plan compiled with:
+
+          * ``materialise`` — read the input, write *and* read back the
+            (H·W, K²·C) im2col patch matrix, write the full activation,
+            and (for pooled layers) round-trip it once more through the
+            separate pool pass;
+          * ``stream``      — read the input once, write the (pooled)
+            activation; patches only ever exist as VMEM row bands.
+
+        The ratio is ~K² on the conv-input term, which dominates wide
+        layers.  Linear steps are identical under both modes.
+        """
         rows = []
+        shape = tuple(int(d) for d in self.input_shape)
+        in_itemsize = 4  # _execute casts the network input to int32
         for w, meta in zip(self.weights, self.metas):
+            out_itemsize = jnp.dtype(meta.out_dtype).itemsize
+            if meta.kind == "conv":
+                h, w_sp, c = shape
+                k, f = meta.kernel_size, int(w.shape[-1])
+                in_bytes = h * w_sp * c * in_itemsize
+                patch_bytes = in_bytes * k * k
+                full_out = h * w_sp * f * out_itemsize
+                out_shape = (h // 2, w_sp // 2, f) if meta.pool else (h, w_sp, f)
+                final_out = out_shape[0] * out_shape[1] * f * out_itemsize
+                materialise = in_bytes + 2 * patch_bytes + full_out
+                if meta.pool:
+                    materialise += full_out + final_out
+                stream = in_bytes + final_out  # pool fused ⇒ one write
+                shape = out_shape
+            else:
+                feat = 1
+                for d in shape:
+                    feat *= d
+                in_bytes = feat * in_itemsize
+                out_bytes = int(w.shape[-1]) * out_itemsize
+                materialise = stream = in_bytes + out_bytes
+                shape = (int(w.shape[-1]),)
             rows.append({
                 "kind": meta.kind,
                 "weight_shape": tuple(int(d) for d in w.shape),
@@ -147,16 +204,28 @@ class ExecutionPlan:
                 "sf": meta.sf,
                 "activation_dtype": meta.out_dtype,
                 "pool": meta.pool,
+                "conv_mode": meta.conv_mode or None,
+                "fused_pool": meta.fused_pool,
                 # per output element: unfused writes z(int32) + z*(int32) +
                 # act(int32); fused writes only the narrowed activation
                 "hbm_bytes_per_out_elem": {
                     "unfused": 12,
-                    "fused": jnp.dtype(meta.out_dtype).itemsize,
+                    "fused": out_itemsize,
                 },
+                # per-sample traffic incl. im2col patches (conv): the
+                # streaming-vs-materialise delta this plan's mode realises
+                "hbm_per_sample_bytes": {
+                    "materialise": int(materialise),
+                    "stream": int(stream),
+                },
+                "stream_saving_ratio": round(materialise / stream, 2),
             })
+            in_itemsize = out_itemsize
         return rows
 
 
-def compile_plan(fm: FrozenModel, *, backend: str = "auto") -> ExecutionPlan:
+def compile_plan(
+    fm: FrozenModel, *, backend: str = "auto", conv_mode: str = "stream"
+) -> ExecutionPlan:
     """FrozenModel → jit-compiled fused ExecutionPlan."""
-    return ExecutionPlan(fm, backend=backend)
+    return ExecutionPlan(fm, backend=backend, conv_mode=conv_mode)

@@ -3,6 +3,11 @@
 nitro_matmul/  fused int8 x int8 -> int32 matmul + NITRO scaling +
                NITRO-ReLU (one MXU+VPU pass; 5x less HBM traffic on the
                pre-activation tensor than the unfused reference)
+nitro_conv/    streaming implicit-im2col conv: row bands DMA'd into a
+               VMEM ring, patch blocks formed in-kernel (never the
+               (N*H*W, K^2*C) HBM patch matrix; ~K^2 less input traffic),
+               same scale/ReLU epilogue + optional fused 2x2 maxpool;
+               conv fwd, training fwd (a, z*), and both conv gradients
 integer_sgd/   fused IntegerSGD update (Algorithm 1; 3 HBM streams vs 5)
 
 Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd

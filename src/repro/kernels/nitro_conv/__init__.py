@@ -1,0 +1,35 @@
+from repro.kernels.nitro_conv.nitro_conv import (
+    stream_conv,
+    stream_conv_fwd,
+    stream_conv_grad_w,
+)
+from repro.kernels.nitro_conv.ops import (
+    CONV_MODES,
+    conv_grad_w,
+    conv_grad_x,
+    fused_conv,
+    fused_conv_fwd,
+    resolve_conv_mode,
+)
+from repro.kernels.nitro_conv.ref import (
+    stream_conv_fwd_ref,
+    stream_conv_grad_w_ref,
+    stream_conv_grad_x_ref,
+    stream_conv_ref,
+)
+
+__all__ = [
+    "CONV_MODES",
+    "conv_grad_w",
+    "conv_grad_x",
+    "fused_conv",
+    "fused_conv_fwd",
+    "resolve_conv_mode",
+    "stream_conv",
+    "stream_conv_fwd",
+    "stream_conv_fwd_ref",
+    "stream_conv_grad_w",
+    "stream_conv_grad_w_ref",
+    "stream_conv_grad_x_ref",
+    "stream_conv_ref",
+]

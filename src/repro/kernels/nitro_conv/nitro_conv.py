@@ -1,0 +1,374 @@
+"""Streaming implicit-im2col conv Pallas TPU kernel.
+
+The materialised conv path (``layers.conv_im2col_operands`` + the fused
+``nitro_matmul``) pays a hidden ~K²× input-bandwidth tax: the full
+``(N·H·W, K²·C)`` patch matrix is written to HBM and read back before the
+matmul starts.  This kernel never forms that matrix.  Instead it
+
+  * grids over ``(image, output-row band, filter tile)``;
+  * DMAs only the ``bh + K − 1`` input rows the band needs from HBM into a
+    VMEM row ring (once per band — the halo rows shared by the K×K window
+    travel over HBM a single time, not K² times);
+  * builds the band's patch block *in VMEM* from K² overlapping row/column
+    slices of the ring — implicit im2col, layout identical to
+    ``core.layers.im2col`` so every path shares one flattened weight
+    ``w.reshape(K²·C, F)``;
+  * runs one MXU matmul per ``(band, filter-tile)`` with int32 accumulation
+    and the NITRO scale / NITRO-ReLU epilogue on the VPU;
+  * optionally folds a 2×2 max-pool into the epilogue, so pooled layers
+    write ``H/2·W/2`` activations instead of ``H·W`` plus a separate jnp
+    pool pass.
+
+HBM bytes on the conv input:  materialised  ~(1 + 2·K²)·H·W·C
+                              streaming     ~H·W·C   (each band's rows are
+                              DMA'd once, at filter-tile 0, and the VMEM
+                              ring is reused across the filter grid)
+
+Three kernel bodies share the scaffolding:
+
+  ``_stream_conv_kernel``       activation only (+ optional fused pool) —
+                                the inference plan step;
+  ``_stream_conv_fwd_kernel``   two outputs ``(a, z_star)`` — the training
+                                forward (z* is the LES backward's cache);
+  ``_stream_grad_w_kernel``     Σ patch_bandᵀ·g_band accumulated in a VMEM
+                                scratch — the conv weight gradient.
+
+Geometry (row-band size, H padding) is shared with the pure-jnp oracle via
+``ref.conv_geometry`` so the Pallas and reference backends stream the same
+bands.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.activations import mu_int8
+from repro.core.scaling import pow2_split
+from repro.kernels.nitro_conv.ref import DEFAULT_BH, conv_geometry
+from repro.kernels.nitro_matmul.nitro_matmul import (
+    _CompilerParams,
+    _relu_tile,
+    _scale_tile,
+)
+
+DEFAULT_BF = 128  # filter-tile width (MXU lane dimension)
+
+
+def _load_band(x_hbm, rows_ref, sem, n, band_idx, band_rows: int):
+    """DMA one image's input-row band HBM → VMEM row ring."""
+    copy = pltpu.make_async_copy(
+        x_hbm.at[n, pl.ds(band_idx, band_rows)], rows_ref, sem
+    )
+    copy.start()
+    copy.wait()
+
+
+def _form_patches(rows_ref, patches_ref, *, k: int, bh: int, w_out: int, c: int):
+    """Implicit im2col: K² overlapping slices of the row ring → patch block.
+
+    ``patches[(r·W + w), (ki·K + kj)·C + c] = rows[r + ki, w + kj, c]`` —
+    the ``core.layers.im2col`` layout, built from VMEM-resident rows.
+    """
+    for ki in range(k):
+        for kj in range(k):
+            seg = rows_ref[ki:ki + bh, kj:kj + w_out, :]
+            patches_ref[:, (ki * k + kj) * c:(ki * k + kj + 1) * c] = (
+                seg.reshape(bh * w_out, c).astype(jnp.int32)
+            )
+
+
+def _band_matmul(patches_ref, w_ref, *, bh: int, w_out: int, bf: int):
+    """One MXU pass: (bh·W, K²C) @ (K²C, bf) → int32 (bh, W, bf)."""
+    z = jax.lax.dot_general(
+        patches_ref[...], w_ref[...].astype(jnp.int32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return z.reshape(bh, w_out, bf)
+
+
+def _maxpool_tile(a, *, bh: int, w_out: int):
+    """Fused 2×2 stride-2 max-pool epilogue on a (bh, W, bf) VMEM tile."""
+    w2 = w_out // 2
+    a = a[:, : w2 * 2, :].reshape(bh, w2, 2, -1).max(axis=2)
+    return a.reshape(bh // 2, 2, w2, -1).max(axis=1)
+
+
+def _stream_conv_kernel(
+    x_hbm, w_ref, out_ref, rows, patches, sem, *,
+    k, bh, w_out, c, bf,
+    sf_shift, sf_residual, alpha_inv, mu, apply_relu, pool, out_dtype,
+):
+    """Activation-only streaming conv step (the inference plan's layer)."""
+    n, band, f = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(f == 0)  # rows + patches are reused across filter tiles
+    def _stage_band():
+        _load_band(x_hbm, rows, sem, n, band * bh, bh + k - 1)
+        _form_patches(rows, patches, k=k, bh=bh, w_out=w_out, c=c)
+
+    z = _band_matmul(patches, w_ref, bh=bh, w_out=w_out, bf=bf)
+    z = _scale_tile(z, sf_shift, sf_residual)
+    if apply_relu:
+        z = _relu_tile(z, alpha_inv, mu)
+    if pool:
+        z = _maxpool_tile(z, bh=bh, w_out=w_out)
+    out_ref[0] = z.astype(out_dtype)
+
+
+def _stream_conv_fwd_kernel(
+    x_hbm, w_ref, a_ref, zstar_ref, rows, patches, sem, *,
+    k, bh, w_out, c, bf,
+    sf_shift, sf_residual, alpha_inv, mu, out_dtype,
+):
+    """Training-forward variant: ``(a, z_star)`` from one accumulation.
+
+    Mirrors ``nitro_matmul_fwd``: the raw pre-activation ``z`` never leaves
+    VMEM; the scaled ``z*`` (int32, the NITRO-ReLU/STE backward cache) and
+    the activation are the only HBM writes.
+    """
+    n, band, f = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(f == 0)
+    def _stage_band():
+        _load_band(x_hbm, rows, sem, n, band * bh, bh + k - 1)
+        _form_patches(rows, patches, k=k, bh=bh, w_out=w_out, c=c)
+
+    z = _band_matmul(patches, w_ref, bh=bh, w_out=w_out, bf=bf)
+    z_star = _scale_tile(z, sf_shift, sf_residual)
+    zstar_ref[0] = z_star
+    a_ref[0] = _relu_tile(z_star, alpha_inv, mu).astype(out_dtype)
+
+
+def _stream_grad_w_kernel(
+    x_hbm, g_ref, out_ref, rows, patches, acc, sem, *,
+    k, bh, w_out, c, bf, n_steps,
+):
+    """Conv weight gradient: acc += patch_bandᵀ @ g_band per (image, band).
+
+    Grid is ``(filter tile, image, band)`` — the filter tile is outermost so
+    the (K²C, bf) VMEM accumulator runs over every image/band before its
+    single HBM write.
+    """
+    f, n, band = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    step = n * pl.num_programs(2) + band
+
+    @pl.when(step == 0)
+    def _zero():
+        acc[...] = jnp.zeros_like(acc)
+
+    _load_band(x_hbm, rows, sem, n, band * bh, bh + k - 1)
+    _form_patches(rows, patches, k=k, bh=bh, w_out=w_out, c=c)
+    acc[...] += jax.lax.dot_general(
+        patches[...], g_ref[0].reshape(bh * w_out, bf).astype(jnp.int32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(step == n_steps - 1)
+    def _flush():
+        out_ref[...] = acc[...]
+
+
+def _pad_operands(x, w, bf, h_pad, p):
+    """Zero-pad input (halo + band multiple) and the filter dim — exact for
+    integer conv; garbage rows/filters are sliced away by the wrappers."""
+    n, h, w_sp, c = x.shape
+    k, f = w.shape[0], w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (p, p + h_pad - h), (p, p), (0, 0)))
+    f_pad = (-f) % bf
+    w_flat = w.reshape(k * k * c, f)
+    if f_pad:
+        w_flat = jnp.pad(w_flat, ((0, 0), (0, f_pad)))
+    return xp, w_flat, f + f_pad
+
+
+def _conv_scratches(x, k, bh, w_sp, c):
+    """The kernel's VMEM working set: row ring, patch block, DMA semaphore."""
+    return [
+        pltpu.VMEM((bh + k - 1, w_sp + k - 1, c), x.dtype),
+        pltpu.VMEM((bh * w_sp, k * k * c), jnp.int32),
+        pltpu.SemaphoreType.DMA,
+    ]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "sf", "alpha_inv", "apply_relu", "pool", "out_dtype",
+        "bh", "bf", "interpret",
+    ),
+)
+def stream_conv(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    apply_relu: bool = True,
+    pool: bool = False,
+    out_dtype=jnp.int32,
+    bh: int = DEFAULT_BH,
+    bf: int = DEFAULT_BF,
+    interpret: bool = False,
+) -> jax.Array:
+    """Streaming fused 'same' conv: ``relu(⌊conv(x, w)/sf⌋)`` (+2×2 pool).
+
+    x: (N,H,W,C) int, w: (K,K,C,F) int, K odd → (N,H,W,F) activations, or
+    (N,H//2,W//2,F) with ``pool=True``.  Bit-exact with the materialised
+    im2col + ``nitro_matmul`` path (+ separate pool) on every shape.
+    """
+    n, h, w_sp, c = x.shape
+    k, f = w.shape[0], w.shape[-1]
+    if pool and (h < 2 or w_sp < 2):
+        raise ValueError(f"2x2 pool epilogue needs H,W >= 2, got {h}x{w_sp}")
+    bh_, h_pad, p = conv_geometry(h, k, bh, pool=pool)
+    bf_ = min(bf, f)
+    xp, w_flat, f_pad = _pad_operands(x, w, bf_, h_pad, p)
+
+    shift, residual = pow2_split(sf)
+    kernel = functools.partial(
+        _stream_conv_kernel,
+        k=k, bh=bh_, w_out=w_sp, c=c, bf=bf_,
+        sf_shift=shift, sf_residual=residual, alpha_inv=alpha_inv,
+        mu=mu_int8(alpha_inv) if apply_relu else 0,
+        apply_relu=apply_relu, pool=pool, out_dtype=out_dtype,
+    )
+    oh, ow = (bh_ // 2, w_sp // 2) if pool else (bh_, w_sp)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, h_pad // bh_, f_pad // bf_),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),  # rows DMA'd by the kernel
+            pl.BlockSpec((k * k * c, bf_), lambda ni, bi, fi: (0, fi)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, oh, ow, bf_), lambda ni, bi, fi: (ni, bi, 0, fi)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, (h_pad // bh_) * oh, ow, f_pad), out_dtype
+        ),
+        scratch_shapes=_conv_scratches(x, k, bh_, w_sp, c),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, w_flat)
+    return out[:, : (h // 2 if pool else h), :, :f]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sf", "alpha_inv", "out_dtype", "bh", "bf", "interpret"),
+)
+def stream_conv_fwd(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    out_dtype=jnp.int32,
+    bh: int = DEFAULT_BH,
+    bf: int = DEFAULT_BF,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming *training* forward: ``(a, z_star)`` in one pass.
+
+    The conv analogue of ``nitro_matmul_fwd`` — same two-output contract,
+    minus the HBM patch matrix on the input side.
+    """
+    n, h, w_sp, c = x.shape
+    k, f = w.shape[0], w.shape[-1]
+    bh_, h_pad, p = conv_geometry(h, k, bh, pool=False)
+    bf_ = min(bf, f)
+    xp, w_flat, f_pad = _pad_operands(x, w, bf_, h_pad, p)
+
+    shift, residual = pow2_split(sf)
+    kernel = functools.partial(
+        _stream_conv_fwd_kernel,
+        k=k, bh=bh_, w_out=w_sp, c=c, bf=bf_,
+        sf_shift=shift, sf_residual=residual, alpha_inv=alpha_inv,
+        mu=mu_int8(alpha_inv), out_dtype=out_dtype,
+    )
+    out_spec = pl.BlockSpec(
+        (1, bh_, w_sp, bf_), lambda ni, bi, fi: (ni, bi, 0, fi)
+    )
+    a, z_star = pl.pallas_call(
+        kernel,
+        grid=(n, h_pad // bh_, f_pad // bf_),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((k * k * c, bf_), lambda ni, bi, fi: (0, fi)),
+        ],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, h_pad, w_sp, f_pad), out_dtype),
+            jax.ShapeDtypeStruct((n, h_pad, w_sp, f_pad), jnp.int32),
+        ],
+        scratch_shapes=_conv_scratches(x, k, bh_, w_sp, c),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, w_flat)
+    return a[:, :h, :, :f], z_star[:, :h, :, :f]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel_size", "bh", "bf", "interpret"),
+)
+def stream_conv_grad_w(
+    x: jax.Array,
+    grad_out: jax.Array,
+    *,
+    kernel_size: int,
+    bh: int = DEFAULT_BH,
+    bf: int = DEFAULT_BF,
+    interpret: bool = False,
+) -> jax.Array:
+    """Streaming conv weight gradient: (N,H,W,C) × (N,H,W,F) → (K,K,C,F).
+
+    Patch bands are formed in VMEM exactly as in the forward kernel and
+    contracted against the matching gradient rows; the (K²C, bf) partial
+    sums live in a VMEM accumulator until the last band.  int32 adds are
+    order-exact, so the result matches ``im2colᵀ @ g`` bit-for-bit.
+    """
+    n, h, w_sp, c = x.shape
+    k = kernel_size
+    f = grad_out.shape[-1]
+    bh_, h_pad, p = conv_geometry(h, k, bh, pool=False)
+    bf_ = min(bf, f)
+    xp = jnp.pad(x, ((0, 0), (p, p + h_pad - h), (p, p), (0, 0)))
+    f_pad = (-f) % bf_
+    gp = jnp.pad(grad_out, ((0, 0), (0, h_pad - h), (0, 0), (0, f_pad)))
+
+    n_bands = h_pad // bh_
+    kernel = functools.partial(
+        _stream_grad_w_kernel,
+        k=k, bh=bh_, w_out=w_sp, c=c, bf=bf_, n_steps=n * n_bands,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=((f + f_pad) // bf_, n, n_bands),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, bh_, w_sp, bf_), lambda fi, ni, bi: (ni, bi, 0, fi)),
+        ],
+        out_specs=pl.BlockSpec((k * k * c, bf_), lambda fi, ni, bi: (0, fi)),
+        out_shape=jax.ShapeDtypeStruct((k * k * c, f + f_pad), jnp.int32),
+        scratch_shapes=_conv_scratches(x, k, bh_, w_sp, c)[:2] + [
+            pltpu.VMEM((k * k * c, bf_), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xp, gp)
+    return out[:, :f].reshape(k, k, c, f)

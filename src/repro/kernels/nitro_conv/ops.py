@@ -1,0 +1,199 @@
+"""Public wrappers + mode/backend dispatch for the streaming conv kernel.
+
+This module is the **single conv entry point** every consumer shares:
+
+  * training forward — ``core.blocks.forward_layers`` calls
+    ``fused_conv_fwd`` (activation *and* the cached pre-ReLU ``z_star``);
+  * training backward — ``core.layers.conv_backward`` calls
+    ``conv_grad_w`` / ``conv_grad_x``;
+  * inference — ``infer.plan`` calls ``fused_conv`` (activation only,
+    optionally int8-narrowed, optionally with the fused 2×2 pool).
+
+Two orthogonal static knobs:
+
+``conv_mode``
+  * ``'stream'``      — implicit im2col: row bands are staged through
+                        VMEM (Pallas) or band-local patch blocks (jnp);
+                        the ``(N·H·W, K²·C)`` patch matrix never exists.
+  * ``'materialise'`` — the original path: ``conv_im2col_operands`` +
+                        the fused ``nitro_matmul`` (+ separate jnp pool).
+                        Kept as the bit-exact escape hatch/oracle,
+                        mirroring ``fused=False`` one level up.
+
+``backend`` (same vocabulary as ``nitro_matmul.ops``)
+  * ``'pallas'``     — the real TPU kernel;
+  * ``'interpret'``  — the same kernel through the Pallas interpreter;
+  * ``'reference'``  — the pure-jnp streaming oracle from ``ref.py``;
+  * ``'auto'``       — pallas on TPU, reference elsewhere.
+
+Every (mode, backend) combination is bit-identical — integer arithmetic
+makes the tiling/accumulation order irrelevant — and the tests sweep them
+all against each other.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layers import conv_im2col_operands, im2col, window_view_2x2
+from repro.core.numerics import int_matmul
+from repro.kernels.nitro_conv import ref as conv_ref
+from repro.kernels.nitro_conv.nitro_conv import (
+    stream_conv,
+    stream_conv_fwd,
+    stream_conv_grad_w,
+)
+from repro.kernels.nitro_matmul.ops import check_alpha_inv, resolve_backend
+
+CONV_MODES = ("stream", "materialise")
+
+
+def resolve_conv_mode(conv_mode: str) -> str:
+    if conv_mode not in CONV_MODES:
+        raise ValueError(
+            f"unknown conv_mode {conv_mode!r}; one of {CONV_MODES}"
+        )
+    return conv_mode
+
+
+# ---------------------------------------------------------------------------
+# Forward entry points
+# ---------------------------------------------------------------------------
+
+
+def fused_conv(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    apply_relu: bool = True,
+    pool: bool = False,
+    out_dtype=jnp.int32,
+    backend: str = "auto",
+    conv_mode: str = "stream",
+) -> jax.Array:
+    """One fused conv+scale(+relu)(+2×2 pool) — the inference plan step.
+
+    (N,H,W,C) int × (K,K,C,F) int → (N,H,W,F), or (N,H//2,W//2,F) when
+    ``pool=True``.  On the streaming path the pool runs in the kernel
+    epilogue; the materialised path pools with a separate jnp pass (its
+    historical behaviour) — bit-identical either way.
+    """
+    alpha_inv = check_alpha_inv(alpha_inv, apply_relu)
+    backend = resolve_backend(backend)
+    if resolve_conv_mode(conv_mode) == "materialise":
+        from repro.kernels.nitro_matmul.ops import fused_matmul
+
+        n, h, w_sp, _ = x.shape
+        patches, w_flat = conv_im2col_operands(w, x)
+        out = fused_matmul(
+            patches, w_flat, sf=sf, alpha_inv=alpha_inv,
+            apply_relu=apply_relu, out_dtype=out_dtype, backend=backend,
+        ).reshape(n, h, w_sp, w.shape[-1])
+        return jnp.max(window_view_2x2(out), axis=3) if pool else out
+    if backend == "reference":
+        return conv_ref.stream_conv_ref(
+            x, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
+            pool=pool, out_dtype=out_dtype,
+        )
+    return stream_conv(
+        x, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu, pool=pool,
+        out_dtype=out_dtype, interpret=(backend == "interpret"),
+    )
+
+
+def fused_conv_fwd(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    backend: str = "auto",
+    conv_mode: str = "stream",
+) -> tuple[jax.Array, jax.Array]:
+    """Fused conv *training* forward: ``(a, z_star)``, both (N,H,W,F).
+
+    ``a`` keeps int32 (matching the unfused reference pipeline's dtype);
+    ``z_star`` is the int32 pre-ReLU tensor ``forward_layers_backward``
+    consumes for the NITRO-ReLU/STE backward.
+    """
+    alpha_inv = check_alpha_inv(alpha_inv, True)
+    backend = resolve_backend(backend)
+    if resolve_conv_mode(conv_mode) == "materialise":
+        from repro.kernels.nitro_matmul.ops import fused_matmul_fwd
+
+        n, h, w_sp, _ = x.shape
+        f = w.shape[-1]
+        patches, w_flat = conv_im2col_operands(w, x)
+        a2, z2 = fused_matmul_fwd(
+            patches, w_flat, sf=sf, alpha_inv=alpha_inv, backend=backend
+        )
+        return a2.reshape(n, h, w_sp, f), z2.reshape(n, h, w_sp, f)
+    if backend == "reference":
+        return conv_ref.stream_conv_fwd_ref(x, w, sf=sf, alpha_inv=alpha_inv)
+    return stream_conv_fwd(
+        x, w, sf=sf, alpha_inv=alpha_inv,
+        interpret=(backend == "interpret"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Backward entry points (integer conv gradients)
+# ---------------------------------------------------------------------------
+
+
+def conv_grad_w(
+    x: jax.Array,
+    grad_out: jax.Array,
+    *,
+    kernel_size: int,
+    backend: str = "auto",
+    conv_mode: str = "stream",
+) -> jax.Array:
+    """Conv weight gradient: correlate input patches with ``grad_out``.
+
+    (N,H,W,C) × (N,H,W,F) → (K,K,C,F) int32.  Streaming forms patch bands
+    on the fly (VMEM accumulator in the kernel, band loop in the jnp
+    oracle); materialise is the historical ``im2colᵀ @ g`` matmul.
+    """
+    backend = resolve_backend(backend)
+    if resolve_conv_mode(conv_mode) == "materialise":
+        n, h, w_sp, c = x.shape
+        f = grad_out.shape[-1]
+        k = kernel_size
+        patches = im2col(x, k, k // 2).reshape(n * h * w_sp, k * k * c)
+        g_flat = grad_out.reshape(n * h * w_sp, f)
+        return int_matmul(patches.T, g_flat).reshape(k, k, c, f)
+    if backend == "reference":
+        return conv_ref.stream_conv_grad_w_ref(
+            x, grad_out, kernel_size=kernel_size
+        )
+    return stream_conv_grad_w(
+        x, grad_out, kernel_size=kernel_size,
+        interpret=(backend == "interpret"),
+    )
+
+
+def conv_grad_x(
+    grad_out: jax.Array,
+    w: jax.Array,
+    *,
+    backend: str = "auto",
+    conv_mode: str = "stream",
+) -> jax.Array:
+    """Conv input gradient: 'full' correlation of ``grad_out`` with the
+    rotated kernel — one more conv, streamed the same way (unit scale, no
+    activation).  (N,H,W,F) × (K,K,C,F) → (N,H,W,C) int32."""
+    backend = resolve_backend(backend)
+    if resolve_conv_mode(conv_mode) == "materialise":
+        n, h, w_sp, _ = grad_out.shape
+        g_patches, w_rot_flat = conv_im2col_operands(conv_ref.rot180_swap(w), grad_out)
+        return int_matmul(g_patches, w_rot_flat).reshape(n, h, w_sp, w.shape[2])
+    if backend == "reference":
+        return conv_ref.stream_conv_grad_x_ref(grad_out, w)
+    return stream_conv(
+        grad_out, conv_ref.rot180_swap(w), sf=1, apply_relu=False, pool=False,
+        interpret=(backend == "interpret"),
+    )

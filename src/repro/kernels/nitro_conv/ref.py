@@ -1,0 +1,200 @@
+"""Pure-jnp oracle for the streaming implicit-im2col conv kernel.
+
+Runs the *same algorithm* as the Pallas kernel — a loop over output-row
+bands that forms a band-local patch block from overlapping row slices and
+feeds one integer matmul — but in plain jnp, so the interpret/pallas
+backends have an exhaustively testable reference off-TPU and the
+``reference`` backend has a fast CPU implementation.
+
+The defining property mirrors the kernel's: the full ``(N·H·W, K²·C)``
+im2col patch matrix is **never materialised**.  Peak transient patch
+storage is one row band, ``(N·bh·W, K²·C)`` — a ``bh/H`` fraction — while
+every matmul keeps the exact shape of the materialised path's, so XLA CPU
+executes the same GEMMs it would unfused (integer accumulation is
+order-exact, so the results are bit-identical by construction, and the
+test-suite asserts it anyway).
+
+Patch layout matches ``core.layers.im2col`` — segment ``(ki, kj)`` at
+channels ``[(ki·K + kj)·C, …)`` — so all paths share one flattened weight
+operand: ``w.reshape(K²·C, F)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activations import nitro_relu
+from repro.core.layers import window_view_2x2
+from repro.core.numerics import int_matmul
+from repro.core.scaling import scale_forward
+
+DEFAULT_BH = 8       # Pallas row-band height (bounds the VMEM working set)
+_MAX_AUTO_BH = 16    # auto band cap for the jnp oracle (CPU-tuned)
+
+
+def conv_geometry(h: int, k: int, bh: int | None, *, pool: bool):
+    """Shared row-band geometry: clamp ``bh``, pad H up to a band multiple.
+
+    Returns ``(bh, h_pad, pad_lo=K//2)``.  ``bh=None`` auto-sizes the band
+    to ``min(H//2, 16)`` — at least two bands per image, so every layer
+    actually streams, with bands large enough that per-band overhead stays
+    amortised on CPU.  ``bh`` is forced even when a 2×2 pool epilogue is
+    fused so every band pools independently; padded rows beyond ``H`` only
+    ever produce output rows the caller slices away.
+    """
+    if k % 2 == 0:
+        raise ValueError(f"streaming conv requires an odd kernel, got K={k}")
+    if bh is None:
+        bh = min(h // 2, _MAX_AUTO_BH)
+    bh = max(min(bh, h), 1)
+    if pool and bh % 2:
+        bh += 1
+    h_pad = -(-h // bh) * bh
+    return bh, h_pad, k // 2
+
+
+def _band_patches(band: jax.Array, k: int, w_out: int) -> jax.Array:
+    """(N, bh+2p, W+2p, C) row band → (N·bh·W, K²·C) patch block.
+
+    The ``core.layers.im2col`` stack-of-shifts build, applied to one row
+    band instead of the whole image — K² static slices of the band,
+    stacked so the channel order is ``(ki·K + kj)·C + c``, identical to
+    the materialised path's (one flattened weight layout serves both).
+    """
+    n = band.shape[0]
+    c = band.shape[-1]
+    bh = band.shape[1] - (k - 1)
+    shifts = [
+        band[:, ki:ki + bh, kj:kj + w_out, :]
+        for ki in range(k) for kj in range(k)
+    ]
+    patches = jnp.stack(shifts, axis=3)  # (N, bh, W, K², C)
+    return patches.reshape(n * bh * w_out, k * k * c)
+
+
+def _stream_z_bands(x: jax.Array, w: jax.Array, bh: int, *, pool: bool):
+    """Yield raw int32 pre-activation bands ``z`` of shape (N, bh, W, F).
+
+    The shared core of every streaming oracle entry point: pad once
+    (input-sized, not K²×), then one band-local patch matmul per row band.
+    """
+    n, h, w_sp, c = x.shape
+    k, f = w.shape[0], w.shape[-1]
+    bh, h_pad, p = conv_geometry(h, k, bh, pool=pool)
+    xp = jnp.pad(x, ((0, 0), (p, p + h_pad - h), (p, p), (0, 0)))
+    w_flat = w.reshape(k * k * c, f).astype(jnp.int32)
+    for t in range(h_pad // bh):
+        band = xp[:, t * bh:t * bh + bh + 2 * p]
+        z = int_matmul(_band_patches(band, k, w_sp).astype(jnp.int32), w_flat)
+        yield z.reshape(n, bh, w_sp, f)
+
+
+def stream_conv_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    apply_relu: bool = True,
+    pool: bool = False,
+    out_dtype=jnp.int32,
+    bh: int | None = None,
+) -> jax.Array:
+    """Streaming fused conv: scale(+relu)(+2×2 maxpool), activation only.
+
+    (N,H,W,C) int × (K,K,C,F) int → (N,H,W,F) — or (N,H//2,W//2,F) with
+    the fused pool epilogue.  Bit-exact with im2col + ``nitro_matmul_ref``
+    (+ a separate pool pass) on every shape.
+
+    The epilogue runs *per band* — the kernel's behaviour — so what gets
+    joined at the end is only the final (pooled, narrowed) activation,
+    never the int32 pre-activations.
+    """
+    h = x.shape[1]
+    outs = []
+    for z in _stream_z_bands(x, w, bh, pool=pool):
+        a = scale_forward(z, sf)
+        if apply_relu:
+            a = nitro_relu(a, alpha_inv)
+        if pool:
+            a = jnp.max(window_view_2x2(a), axis=3)
+        outs.append(a.astype(out_dtype))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, : h // 2] if pool else out[:, :h]
+
+
+def stream_conv_fwd_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    sf: int,
+    alpha_inv: int = 10,
+    out_dtype=jnp.int32,
+    bh: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming training forward: ``(a, z_star)``, both full resolution.
+
+    ``z_star`` keeps int32 (the NITRO-ReLU/STE backward's cache dtype);
+    matches ``nitro_matmul_fwd_ref`` over materialised patches bit-for-bit.
+    """
+    h = x.shape[1]
+    # Backward needs z* at full resolution anyway, so join the raw bands
+    # once and run scale/ReLU as whole-tensor ops — elementwise chains XLA
+    # fuses with the consumer, instead of two per-band concats.
+    z = jnp.concatenate(list(_stream_z_bands(x, w, bh, pool=False)), axis=1)
+    z_star = scale_forward(z[:, :h], sf)
+    a = nitro_relu(z_star, alpha_inv).astype(out_dtype)
+    return a, z_star
+
+
+def stream_conv_grad_w_ref(
+    x: jax.Array,
+    grad_out: jax.Array,
+    *,
+    kernel_size: int,
+    bh: int | None = None,
+) -> jax.Array:
+    """Streaming weight gradient: Σ_bands patch_bandᵀ @ g_band.
+
+    (N,H,W,C) input × (N,H,W,F) grad → (K,K,C,F) int32.  Each band
+    contributes one (K²·C, N·bh·W)·(N·bh·W, F) matmul; int32 accumulation
+    across bands is order-exact, so this matches ``im2colᵀ @ g`` exactly.
+    """
+    n, h, w_sp, c = x.shape
+    k = kernel_size
+    f = grad_out.shape[-1]
+    bh, h_pad, p = conv_geometry(h, k, bh, pool=False)
+    xp = jnp.pad(x, ((0, 0), (p, p + h_pad - h), (p, p), (0, 0)))
+    gp = jnp.pad(grad_out, ((0, 0), (0, h_pad - h), (0, 0), (0, 0)))
+    grad_w = jnp.zeros((k * k * c, f), jnp.int32)
+    for t in range(h_pad // bh):
+        band = xp[:, t * bh:t * bh + bh + 2 * p]
+        patches = _band_patches(band, k, w_sp).astype(jnp.int32)
+        g_band = gp[:, t * bh:t * bh + bh].reshape(n * bh * w_sp, f)
+        grad_w = grad_w + jax.lax.dot_general(
+            patches, g_band.astype(jnp.int32),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    return grad_w.reshape(k, k, c, f)
+
+
+def rot180_swap(w: jax.Array) -> jax.Array:
+    """(K,K,C,F) → (K,K,F,C): kernel rotated 180° with channels swapped —
+    the weight of the 'full' correlation computing grad_x.  The single
+    definition of this layout; the dispatcher imports it too."""
+    return jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2)
+
+
+def stream_conv_grad_x_ref(
+    grad_out: jax.Array, w: jax.Array, *, bh: int | None = None
+) -> jax.Array:
+    """Streaming input gradient: 'full' correlation with the rotated kernel.
+
+    grad_x = conv(g, rot180(w) with in/out channels swapped) — the same
+    streaming conv with a unit scale factor and no activation.
+    """
+    return stream_conv_ref(
+        grad_out, rot180_swap(w), sf=1, apply_relu=False, pool=False, bh=bh
+    )

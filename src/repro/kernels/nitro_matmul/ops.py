@@ -46,6 +46,26 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
+def check_alpha_inv(alpha_inv: int, apply_relu: bool) -> int:
+    """Validate the NITRO-ReLU leak divisor ``α_inv = ⌊1/α⌋``.
+
+    ``alpha_inv`` divides the negative segment, so 0 would floor-divide by
+    zero inside the kernel — historically it was silently coerced to 1
+    (``alpha_inv or 1``); now it raises.  When ``apply_relu=False`` the
+    value is unused and normalised to 1, so frozen no-activation layers
+    (exported with ``alpha_inv=0``) neither fail nor fan out into
+    spurious kernel recompilations.
+    """
+    if not apply_relu:
+        return 1
+    if int(alpha_inv) < 1:
+        raise ValueError(
+            f"alpha_inv must be a positive integer when apply_relu=True, "
+            f"got {alpha_inv!r}"
+        )
+    return int(alpha_inv)
+
+
 def fused_matmul(
     x2: jax.Array,
     w2: jax.Array,
@@ -58,13 +78,14 @@ def fused_matmul(
 ) -> jax.Array:
     """One fused matmul+scale(+relu) on 2-D operands — the inference step."""
     backend = resolve_backend(backend)
+    alpha_inv = check_alpha_inv(alpha_inv, apply_relu)
     if backend == "reference":
         return nitro_matmul_ref(
-            x2, w2, sf=sf, alpha_inv=alpha_inv or 1, apply_relu=apply_relu,
+            x2, w2, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
             out_dtype=out_dtype,
         )
     return nitro_matmul(
-        x2, w2, sf=sf, alpha_inv=alpha_inv or 1, apply_relu=apply_relu,
+        x2, w2, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
         out_dtype=out_dtype, interpret=(backend == "interpret"),
     )
 
@@ -85,6 +106,7 @@ def fused_matmul_fwd(
     consumes for the NITRO-ReLU/STE backward.
     """
     backend = resolve_backend(backend)
+    alpha_inv = check_alpha_inv(alpha_inv, True)
     if backend == "reference":
         return nitro_matmul_fwd_ref(x2, w2, sf=sf, alpha_inv=alpha_inv)
     return nitro_matmul_fwd(

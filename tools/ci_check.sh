@@ -20,6 +20,7 @@ fi
 
 python -m benchmarks.run --quick --only kernel
 python -m benchmarks.train_step --smoke
+python -m benchmarks.conv_stream --smoke
 python -m benchmarks.serve_fleet --smoke
 python -m repro.launch.serve_vision --train-steps 0 --scale 0.0625 \
     --backend reference --requests 24 --batch 8
