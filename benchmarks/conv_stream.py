@@ -30,13 +30,12 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, tiny_smoke_cfg
+from benchmarks.common import emit, time_paired, tiny_smoke_cfg
 
 JSON_PATH = "BENCH_conv.json"
 
@@ -52,29 +51,6 @@ MODES = ("stream", "materialise")
 def _assert_trees_equal(a, b) -> None:
     for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
-
-
-def _time_paired(fns: dict, *args, iters: int, **kw) -> dict:
-    """Contention-robust paired timing: interleaved min-of-N per variant.
-
-    This container's CPU swings ~2× with co-tenant load; timing each
-    variant in its own block lets that drift masquerade as a speedup (or
-    a regression).  Every round therefore times each variant once,
-    back-to-back, alternating the order between rounds (ABBA) to cancel
-    first-mover cache effects.  Per variant the *minimum* over rounds is
-    reported — the timeit rationale: the minimum bounds the intrinsic
-    cost, while co-tenant interference only ever inflates a sample.
-    """
-    for fn in fns.values():  # jit warm-up
-        jax.block_until_ready(fn(*args, **kw))
-    names = list(fns)
-    best = {m: float("inf") for m in names}
-    for i in range(iters):
-        for m in names if i % 2 == 0 else reversed(names):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fns[m](*args, **kw))
-            best[m] = min(best[m], (time.perf_counter() - t0) * 1e6)
-    return best
 
 
 def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
@@ -99,7 +75,7 @@ def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
     del out  # both modes' full caches would otherwise sit on the heap
     # (hundreds of MB at scale 0.5) and distort the timing below
 
-    fwd_us = _time_paired(fwds, state.params, x=x, iters=iters)
+    fwd_us = time_paired(fwds, state.params, x=x, iters=iters)
     fwd_speedup = fwd_us["materialise"] / fwd_us["stream"]
 
     # ---- inference plan ---------------------------------------------------
@@ -109,7 +85,7 @@ def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
     for m, plan in plans.items():
         np.testing.assert_array_equal(
             np.asarray(plan.logits(x)), np.asarray(oracle))
-    plan_us = _time_paired(
+    plan_us = time_paired(
         {m: plans[m].logits for m in MODES}, x, iters=iters
     )
     plan_speedup = plan_us["materialise"] / plan_us["stream"]

@@ -180,28 +180,37 @@ def forward_layers_backward(
     *,
     conv_mode: str = "stream",
     backend: str = "auto",
+    fuse_bwd: bool = True,
 ) -> dict:
     """Backward through the forward layers from δ_l^fw; returns weight grads.
 
     The input-gradient of the first layer is *not* propagated further —
-    LES confines gradients to the block.  ``conv_mode`` selects how the
-    conv gradients source their patches (streamed row bands vs explicit
-    im2col) — bit-identical, see ``layers.conv_backward``.
+    LES confines gradients to the block.  The dropout/pool backwards stay
+    jnp; the NITRO-ReLU derivative + scaling STE that follow them are
+    handed to the ``kernels.grad_ops`` dispatcher together with the cached
+    ``z_star``: with ``fuse_bwd=True`` (default) they run as a prologue
+    inside the gradient kernels, so the post-ReLU-bwd δ never round-trips
+    through HBM; ``fuse_bwd=False`` is the unfused jnp escape hatch —
+    bit-identical, test-enforced.  ``conv_mode`` selects how the conv
+    gradients source their patches (streamed row bands vs explicit im2col).
     """
     g = delta_fw
     if "dropout" in cache:
         g = layers.dropout_backward(cache["dropout"], g)
     if "pool" in cache:
         g = layers.maxpool_backward(cache["pool"], g)
-    g = activations.nitro_relu_backward(cache["z_star"], g, spec.alpha_inv)
-    g = scaling.scale_backward(g)  # STE
     if spec.kind == "conv":
         _, grads = layers.conv_backward(
             params["fw"], cache["conv"], g,
-            conv_mode=conv_mode, backend=backend,
+            z_star=cache["z_star"], alpha_inv=spec.alpha_inv,
+            fuse_bwd=fuse_bwd, conv_mode=conv_mode, backend=backend,
         )
     else:
-        _, grads = layers.linear_backward(params["fw"], cache["linear"], g)
+        _, grads = layers.linear_backward(
+            params["fw"], cache["linear"], g,
+            z_star=cache["z_star"], alpha_inv=spec.alpha_inv,
+            fuse_bwd=fuse_bwd, backend=backend,
+        )
     return grads
 
 

@@ -42,12 +42,31 @@ def linear_forward(params: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 
 def linear_backward(
-    params: dict, cache: jax.Array, grad_out: jax.Array
+    params: dict,
+    cache: jax.Array,
+    grad_out: jax.Array,
+    *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
+    fuse_bwd: bool = True,
+    backend: str = "auto",
 ) -> tuple[jax.Array, dict]:
-    """grad_x = g @ Wᵀ, grad_W = xᵀ @ g — both integer matmuls."""
-    x = cache
-    grad_w = int_matmul(x.T, grad_out)
-    grad_x = int_matmul(grad_out, params["w"].T)
+    """grad_x = g @ Wᵀ, grad_W = xᵀ @ g — both integer matmuls.
+
+    Routed through the shared ``kernels.grad_ops`` dispatcher.  With
+    ``z_star`` (the cached pre-ReLU tensor) the NITRO-ReLU-bwd/STE step
+    runs as a prologue *inside* the gradient kernels (``fuse_bwd=True``,
+    default) or as the unfused jnp composition (``fuse_bwd=False``) —
+    bit-identical either way.  Learning/output layers pass no ``z_star``:
+    their scaling STE backward is the identity.
+    """
+    from repro.kernels import grad_ops  # lazy: cycle-free (see blocks.py)
+
+    grad_x, grad_w = grad_ops.linear_grads(
+        cache, params["w"], grad_out,
+        z_star=z_star, alpha_inv=alpha_inv, fuse_bwd=fuse_bwd,
+        backend=backend,
+    )
     return grad_x, {"w": grad_w}
 
 
@@ -114,10 +133,13 @@ def conv_backward(
     cache: ConvCache,
     grad_out: jax.Array,
     *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
+    fuse_bwd: bool = True,
     conv_mode: str = "stream",
     backend: str = "auto",
 ) -> tuple[jax.Array, dict]:
-    """Integer conv backward, routed through the shared conv dispatcher.
+    """Integer conv backward, routed through ``kernels.grad_ops``.
 
     grad_W : correlation of input patches with grad_out (im2colᵀ · g).
     grad_x : 'full' correlation of grad_out with the spatially-flipped,
@@ -126,17 +148,17 @@ def conv_backward(
     ``conv_mode='stream'`` (default) feeds both matmuls with patches formed
     on the fly from row bands — the ``(N·H·W, K²·C)`` patch matrix is never
     materialised; ``'materialise'`` is the historical im2col formulation.
-    Integer accumulation is order-exact, so the two agree bit-for-bit.
+    With ``z_star`` the NITRO-ReLU-bwd/STE step is fused into the kernels'
+    δ prologue (``fuse_bwd=True``) or applied as jnp pre-masking
+    (``fuse_bwd=False``).  Integer accumulation is order-exact, so every
+    combination agrees bit-for-bit.
     """
-    from repro.kernels.nitro_conv import ops as conv_ops  # lazy: cycle-free
+    from repro.kernels import grad_ops  # lazy: cycle-free
 
-    w = params["w"]
-    grad_w = conv_ops.conv_grad_w(
-        cache.x, grad_out, kernel_size=w.shape[0],
+    grad_x, grad_w = grad_ops.conv_grads(
+        cache.x, params["w"], grad_out,
+        z_star=z_star, alpha_inv=alpha_inv, fuse_bwd=fuse_bwd,
         backend=backend, conv_mode=conv_mode,
-    )
-    grad_x = conv_ops.conv_grad_x(
-        grad_out, w, backend=backend, conv_mode=conv_mode
     )
     return grad_x, {"w": grad_w}
 

@@ -62,6 +62,7 @@ def train_step(
     key: jax.Array,
     *,
     fused: bool = True,
+    fuse_bwd: bool = True,
     backend: str = "auto",
     conv_mode: str = "stream",
 ) -> tuple[TrainState, StepMetrics]:
@@ -69,10 +70,14 @@ def train_step(
 
     The forward pass runs on the fused kernels by default (the same entry
     points the inference plan compiles to); ``fused=False`` is the unfused
-    reference escape hatch, bit-exact with the fused step.  ``conv_mode``
-    selects the conv data path for the fused forward *and* the conv
-    gradients: ``'stream'`` (implicit im2col — default) or
-    ``'materialise'`` (explicit HBM patch matrices, the historical route).
+    reference escape hatch, bit-exact with the fused step.  The backward
+    is fused too: ``fuse_bwd=True`` (default) folds the NITRO-ReLU
+    derivative + scaling STE into the gradient kernels' δ prologue via
+    ``kernels.grad_ops``; ``fuse_bwd=False`` is the unfused jnp δ path —
+    both bit-exact with each other.  ``conv_mode`` selects the conv data
+    path for the fused forward *and* the conv gradients: ``'stream'``
+    (implicit im2col — default) or ``'materialise'`` (explicit HBM patch
+    matrices, the historical route).
     """
     params = state.params
     y = one_hot_int(labels, cfg.num_classes)
@@ -99,7 +104,8 @@ def train_step(
         local_losses.append(rss_loss(y_hat_l, y))
         delta_fw, lr_grads = B.learning_layers_backward(p, spec, lr_cache, grad_l)
         fw_grads = B.forward_layers_backward(
-            p, spec, fw_cache, delta_fw, conv_mode=conv_mode, backend=backend
+            p, spec, fw_cache, delta_fw,
+            conv_mode=conv_mode, backend=backend, fuse_bwd=fuse_bwd,
         )
         new_blocks.append(
             {

@@ -70,7 +70,10 @@ def forward(
     matmul → scale → relu reference composition.  ``conv_mode`` picks the
     fused conv route: ``'stream'`` (implicit im2col, no HBM patch matrix)
     or ``'materialise'`` (explicit im2col escape hatch).  All combinations
-    are bit-exact with each other, test-enforced.
+    are bit-exact with each other, test-enforced.  (The backward mirror —
+    the ``fuse_bwd`` δ-path knob — lives on ``les.train_step``, which
+    threads the same ``backend``/``conv_mode`` into the gradient
+    dispatcher ``kernels.grad_ops``.)
     """
     a = jnp.asarray(x, INT_DTYPE)
     acts: list[jax.Array] = []

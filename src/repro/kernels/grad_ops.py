@@ -1,0 +1,115 @@
+"""Unified backward dispatcher for the integer gradient paths.
+
+Every hand-derived backward in ``repro.core`` funnels through this module,
+the backward mirror of PR 2's forward dispatchers:
+
+  * ``linear_grads`` — the two gradient matmuls of an IntegerLinear layer;
+  * ``conv_grads``   — the two conv gradients (streamed or materialised).
+
+Both take the *raw* block gradient δ (after the jnp dropout/pool
+backwards, which stay outside the kernels) plus the cached pre-ReLU
+``z_star``, and own the NITRO-ReLU-derivative + scaling-STE step that
+precedes the gradient matmuls:
+
+``fuse_bwd=True`` (default)
+    the ReLU-bwd/STE runs as a *prologue inside* the gradient kernels —
+    each δ tile/band is masked in VMEM just before it enters the MXU, so
+    the full-size post-ReLU-bwd δ tensor never round-trips through HBM
+    (on the reference backend the oracle composes the same ops in jnp).
+
+``fuse_bwd=False``
+    the unfused escape hatch: ``activations.nitro_relu_backward`` +
+    ``scaling.scale_backward`` materialise the masked δ, then the plain
+    integer matmuls run — the historical composition, kept as the oracle.
+
+``z_star=None`` selects the no-activation backward (learning/output
+layers: scaling STE only, which is the identity) — plain integer matmuls
+on any backend.  All combinations are bit-identical; the test-suite's
+shared parity harness (``tests/_gradcheck.py``) sweeps them.
+
+Backend vocabulary is ``nitro_matmul.ops.resolve_backend``'s
+(``pallas | interpret | reference | auto``); ``conv_mode`` is
+``nitro_conv.ops``'s (``stream | materialise``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.numerics import int_matmul
+from repro.kernels.nitro_conv import ops as conv_ops
+from repro.kernels.nitro_matmul import ops as mm_ops
+from repro.kernels.nitro_matmul.ref import masked_delta
+
+
+def linear_grads(
+    x: jax.Array,
+    w: jax.Array,
+    delta: jax.Array,
+    *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
+    fuse_bwd: bool = True,
+    backend: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """IntegerLinear backward: returns ``(grad_x, grad_w)``.
+
+    ``grad_w = xᵀ @ f(δ)`` and ``grad_x = f(δ) @ wᵀ`` where ``f`` is the
+    NITRO-ReLU-bwd/STE when ``z_star`` is given (fused into the kernel
+    prologues by default) and the identity otherwise.
+    """
+    if z_star is not None and not fuse_bwd:
+        delta = masked_delta(delta, z_star, alpha_inv)
+        z_star = None
+    if z_star is None:
+        # No-activation backward (or the unfused escape hatch): two plain
+        # integer matmuls — already a single XLA op each, nothing to fuse.
+        return int_matmul(delta, w.T), int_matmul(x.T, delta)
+    grad_w = mm_ops.grad_w_matmul(
+        x, delta, z_star, alpha_inv=alpha_inv, backend=backend
+    )
+    grad_x = mm_ops.grad_x_matmul(
+        delta, z_star, w, alpha_inv=alpha_inv, backend=backend
+    )
+    return grad_x, grad_w
+
+
+def conv_grads(
+    x: jax.Array,
+    w: jax.Array,
+    delta: jax.Array,
+    *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
+    fuse_bwd: bool = True,
+    backend: str = "auto",
+    conv_mode: str = "stream",
+) -> tuple[jax.Array, jax.Array]:
+    """IntegerConv2D backward: returns ``(grad_x, grad_w)``.
+
+    Both gradients stream their patches (``conv_mode='stream'``) or fall
+    back to explicit im2col (``'materialise'``); with ``z_star`` the
+    ReLU-bwd/STE prologue masks the δ bands inside the streaming kernels,
+    so conv blocks never materialise the post-ReLU-bwd δ in HBM at all.
+    """
+    if z_star is not None and (
+        not fuse_bwd
+        or conv_ops.resolve_conv_mode(conv_mode) == "materialise"
+    ):
+        # Unfused escape hatch — or materialise mode, whose explicit
+        # im2col reads the full δ from HBM regardless (no fusion site):
+        # pre-mask ONCE here rather than letting both conv gradients
+        # repeat the jnp mask downstream.
+        delta = masked_delta(delta, z_star, alpha_inv)
+        z_star = None
+    grad_w = conv_ops.conv_grad_w(
+        x, delta, kernel_size=w.shape[0],
+        z_star=z_star, alpha_inv=alpha_inv,
+        backend=backend, conv_mode=conv_mode,
+    )
+    grad_x = conv_ops.conv_grad_x(
+        delta, w,
+        z_star=z_star, alpha_inv=alpha_inv,
+        backend=backend, conv_mode=conv_mode,
+    )
+    return grad_x, grad_w

@@ -2,6 +2,7 @@ from repro.kernels.nitro_conv.nitro_conv import (
     stream_conv,
     stream_conv_fwd,
     stream_conv_grad_w,
+    stream_conv_grad_x,
 )
 from repro.kernels.nitro_conv.ops import (
     CONV_MODES,
@@ -30,6 +31,7 @@ __all__ = [
     "stream_conv_fwd_ref",
     "stream_conv_grad_w",
     "stream_conv_grad_w_ref",
+    "stream_conv_grad_x",
     "stream_conv_grad_x_ref",
     "stream_conv_ref",
 ]

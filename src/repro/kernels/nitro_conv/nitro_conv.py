@@ -24,14 +24,20 @@ HBM bytes on the conv input:  materialised  ~(1 + 2·K²)·H·W·C
                               DMA'd once, at filter-tile 0, and the VMEM
                               ring is reused across the filter grid)
 
-Three kernel bodies share the scaffolding:
+The kernel bodies share the scaffolding:
 
-  ``_stream_conv_kernel``       activation only (+ optional fused pool) —
-                                the inference plan step;
-  ``_stream_conv_fwd_kernel``   two outputs ``(a, z_star)`` — the training
-                                forward (z* is the LES backward's cache);
-  ``_stream_grad_w_kernel``     Σ patch_bandᵀ·g_band accumulated in a VMEM
-                                scratch — the conv weight gradient.
+  ``_stream_conv_kernel``         activation only (+ optional fused pool) —
+                                  the inference plan step;
+  ``_stream_conv_fwd_kernel``     two outputs ``(a, z_star)`` — the training
+                                  forward (z* is the LES backward's cache);
+  ``_stream_grad_w_kernel``       Σ patch_bandᵀ·g_band accumulated in a VMEM
+                                  scratch — the conv weight gradient;
+  ``_stream_grad_w_fused_kernel`` the same with the NITRO-ReLU-bwd/STE
+                                  prologue masking each δ band in VMEM;
+  ``_stream_grad_x_kernel``       the conv input gradient as a streaming
+                                  'full' correlation over *masked* δ rows —
+                                  δ and z* rows are DMA'd per band and the
+                                  prologue rewrites the δ ring in place.
 
 Geometry (row-band size, H padding) is shared with the pure-jnp oracle via
 ``ref.conv_geometry`` so the Pallas and reference backends stream the same
@@ -49,9 +55,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.activations import mu_int8
 from repro.core.scaling import pow2_split
-from repro.kernels.nitro_conv.ref import DEFAULT_BH, conv_geometry
+from repro.kernels.nitro_conv.ref import DEFAULT_BH, conv_geometry, rot180_swap
 from repro.kernels.nitro_matmul.nitro_matmul import (
     _CompilerParams,
+    _relu_bwd_tile,
     _relu_tile,
     _scale_tile,
 )
@@ -145,17 +152,18 @@ def _stream_conv_fwd_kernel(
     a_ref[0] = _relu_tile(z_star, alpha_inv, mu).astype(out_dtype)
 
 
-def _stream_grad_w_kernel(
-    x_hbm, g_ref, out_ref, rows, patches, acc, sem, *,
-    k, bh, w_out, c, bf, n_steps,
+def _grad_w_accumulate(
+    x_hbm, g2d, out_ref, rows, patches, acc, sem, *,
+    k, bh, w_out, c, n_steps,
 ):
-    """Conv weight gradient: acc += patch_bandᵀ @ g_band per (image, band).
+    """Shared grad_w body: acc += patch_bandᵀ @ g2d per (image, band).
 
     Grid is ``(filter tile, image, band)`` — the filter tile is outermost so
     the (K²C, bf) VMEM accumulator runs over every image/band before its
-    single HBM write.
+    single HBM write.  ``g2d`` is the (bh·W, bf) gradient band, already in
+    VMEM registers (masked by the caller on the fused path).
     """
-    f, n, band = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    n, band = pl.program_id(1), pl.program_id(2)
     step = n * pl.num_programs(2) + band
 
     @pl.when(step == 0)
@@ -165,7 +173,7 @@ def _stream_grad_w_kernel(
     _load_band(x_hbm, rows, sem, n, band * bh, bh + k - 1)
     _form_patches(rows, patches, k=k, bh=bh, w_out=w_out, c=c)
     acc[...] += jax.lax.dot_general(
-        patches[...], g_ref[0].reshape(bh * w_out, bf).astype(jnp.int32),
+        patches[...], g2d,
         dimension_numbers=(((0,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
@@ -173,6 +181,66 @@ def _stream_grad_w_kernel(
     @pl.when(step == n_steps - 1)
     def _flush():
         out_ref[...] = acc[...]
+
+
+def _stream_grad_w_kernel(
+    x_hbm, g_ref, out_ref, rows, patches, acc, sem, *,
+    k, bh, w_out, c, bf, n_steps,
+):
+    """Conv weight gradient, plain δ (the ReLU backward already applied)."""
+    g2d = g_ref[0].reshape(bh * w_out, bf).astype(jnp.int32)
+    _grad_w_accumulate(
+        x_hbm, g2d, out_ref, rows, patches, acc, sem,
+        k=k, bh=bh, w_out=w_out, c=c, n_steps=n_steps,
+    )
+
+
+def _stream_grad_w_fused_kernel(
+    x_hbm, g_ref, z_ref, out_ref, rows, patches, acc, sem, *,
+    k, bh, w_out, c, bf, n_steps, alpha_inv,
+):
+    """Conv weight gradient with the fused NITRO-ReLU-bwd/STE prologue.
+
+    The δ band is masked against the matching ``z_star`` band in VMEM just
+    before the MXU contraction — the post-ReLU-bwd δ never exists outside
+    this (bh·W, bf) register tile.
+    """
+    g2d = _relu_bwd_tile(
+        g_ref[0].reshape(bh * w_out, bf).astype(jnp.int32),
+        z_ref[0].reshape(bh * w_out, bf),
+        alpha_inv,
+    )
+    _grad_w_accumulate(
+        x_hbm, g2d, out_ref, rows, patches, acc, sem,
+        k=k, bh=bh, w_out=w_out, c=c, n_steps=n_steps,
+    )
+
+
+def _stream_grad_x_kernel(
+    g_hbm, z_hbm, w_ref, out_ref, rows, zrows, patches, sem, zsem, *,
+    k, bh, w_out, c, bf, alpha_inv,
+):
+    """Conv input gradient: streaming 'full' correlation over masked δ.
+
+    Both the δ rows and the matching ``z_star`` rows are DMA'd into VMEM
+    rings at filter-tile 0; the ReLU-bwd prologue rewrites the δ ring in
+    place (the zero halo is preserved — relu_bwd(0, 0) = 0), patches are
+    formed from the *masked* rows, and the rot180-swapped weight closes
+    the correlation.  No scale/ReLU epilogue: sf = 1 for gradients.
+    """
+    n, band, f = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(f == 0)  # masked rows + patches are reused across filter tiles
+    def _stage_band():
+        _load_band(g_hbm, rows, sem, n, band * bh, bh + k - 1)
+        _load_band(z_hbm, zrows, zsem, n, band * bh, bh + k - 1)
+        rows[...] = _relu_bwd_tile(
+            rows[...].astype(jnp.int32), zrows[...], alpha_inv
+        )
+        _form_patches(rows, patches, k=k, bh=bh, w_out=w_out, c=c)
+
+    z = _band_matmul(patches, w_ref, bh=bh, w_out=w_out, bf=bf)
+    out_ref[0] = z.astype(jnp.int32)
 
 
 def _pad_operands(x, w, bf, h_pad, p):
@@ -321,13 +389,15 @@ def stream_conv_fwd(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kernel_size", "bh", "bf", "interpret"),
+    static_argnames=("kernel_size", "alpha_inv", "bh", "bf", "interpret"),
 )
 def stream_conv_grad_w(
     x: jax.Array,
     grad_out: jax.Array,
     *,
     kernel_size: int,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
     bh: int = DEFAULT_BH,
     bf: int = DEFAULT_BF,
     interpret: bool = False,
@@ -338,6 +408,11 @@ def stream_conv_grad_w(
     contracted against the matching gradient rows; the (K²C, bf) partial
     sums live in a VMEM accumulator until the last band.  int32 adds are
     order-exact, so the result matches ``im2colᵀ @ g`` bit-for-bit.
+
+    With ``z_star`` (same shape as ``grad_out``) the NITRO-ReLU-bwd/STE
+    prologue masks each δ band in VMEM before the contraction — the fused
+    backward path; without it the δ is consumed as-is (the caller already
+    applied the activation backward).
     """
     n, h, w_sp, c = x.shape
     k = kernel_size
@@ -346,20 +421,32 @@ def stream_conv_grad_w(
     bf_ = min(bf, f)
     xp = jnp.pad(x, ((0, 0), (p, p + h_pad - h), (p, p), (0, 0)))
     f_pad = (-f) % bf_
-    gp = jnp.pad(grad_out, ((0, 0), (0, h_pad - h), (0, 0), (0, f_pad)))
+    g_pad = ((0, 0), (0, h_pad - h), (0, 0), (0, f_pad))
+    gp = jnp.pad(grad_out, g_pad)
 
     n_bands = h_pad // bh_
-    kernel = functools.partial(
-        _stream_grad_w_kernel,
-        k=k, bh=bh_, w_out=w_sp, c=c, bf=bf_, n_steps=n * n_bands,
+    g_spec = pl.BlockSpec(
+        (1, bh_, w_sp, bf_), lambda fi, ni, bi: (ni, bi, 0, fi)
     )
+    operands = [xp, gp]
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY), g_spec]
+    if z_star is None:
+        kernel = functools.partial(
+            _stream_grad_w_kernel,
+            k=k, bh=bh_, w_out=w_sp, c=c, bf=bf_, n_steps=n * n_bands,
+        )
+    else:
+        kernel = functools.partial(
+            _stream_grad_w_fused_kernel,
+            k=k, bh=bh_, w_out=w_sp, c=c, bf=bf_, n_steps=n * n_bands,
+            alpha_inv=alpha_inv,
+        )
+        operands.append(jnp.pad(z_star.astype(jnp.int32), g_pad))
+        in_specs.append(g_spec)
     out = pl.pallas_call(
         kernel,
         grid=((f + f_pad) // bf_, n, n_bands),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec((1, bh_, w_sp, bf_), lambda fi, ni, bi: (ni, bi, 0, fi)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((k * k * c, bf_), lambda fi, ni, bi: (0, fi)),
         out_shape=jax.ShapeDtypeStruct((k * k * c, f + f_pad), jnp.int32),
         scratch_shapes=_conv_scratches(x, k, bh_, w_sp, c)[:2] + [
@@ -370,5 +457,75 @@ def stream_conv_grad_w(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
-    )(xp, gp)
+    )(*operands)
     return out[:, :f].reshape(k, k, c, f)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha_inv", "bh", "bf", "interpret"),
+)
+def stream_conv_grad_x(
+    delta: jax.Array,
+    z_star: jax.Array,
+    w: jax.Array,
+    *,
+    alpha_inv: int = 10,
+    bh: int = DEFAULT_BH,
+    bf: int = DEFAULT_BF,
+    interpret: bool = False,
+) -> jax.Array:
+    """Streaming conv input gradient with the fused ReLU-bwd prologue.
+
+    (N,H,W,F) δ × (N,H,W,F) z* × (K,K,C,F) weight → (N,H,W,C) int32: the
+    'full' correlation of ``relu_bwd(z*, δ)`` with the rot180-swapped
+    kernel, streamed exactly like the forward conv — δ *and* z* rows are
+    DMA'd per band, masked in the VMEM ring, and the patch block is built
+    from the masked rows.  The post-ReLU-bwd δ tensor never exists in HBM.
+
+    (The unfused input gradient stays ``stream_conv(δ_masked, rot180_swap(w),
+    sf=1, apply_relu=False)`` — this kernel is that conv plus the prologue.)
+    """
+    n, h, w_sp, f = delta.shape
+    k, c = w.shape[0], w.shape[2]
+    assert delta.shape == z_star.shape, "delta/z_star shape mismatch"
+    w_rot = rot180_swap(w)  # (K, K, F, C)
+    bh_, h_pad, p = conv_geometry(h, k, bh, pool=False)
+    bc = min(bf, c)
+    dp, w_flat, c_pad = _pad_operands(
+        delta.astype(jnp.int32), w_rot, bc, h_pad, p
+    )
+    zp = jnp.pad(
+        z_star.astype(jnp.int32),
+        ((0, 0), (p, p + h_pad - h), (p, p), (0, 0)),
+    )
+    kernel = functools.partial(
+        _stream_grad_x_kernel,
+        k=k, bh=bh_, w_out=w_sp, c=f, bf=bc, alpha_inv=alpha_inv,
+    )
+    ring = pltpu.VMEM((bh_ + k - 1, w_sp + k - 1, f), jnp.int32)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n, h_pad // bh_, c_pad // bc),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),  # δ rows, DMA'd in-kernel
+            pl.BlockSpec(memory_space=pltpu.ANY),  # z* rows, ditto
+            pl.BlockSpec((k * k * f, bc), lambda ni, bi, fi: (0, fi)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bh_, w_sp, bc), lambda ni, bi, fi: (ni, bi, 0, fi)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, h_pad, w_sp, c_pad), jnp.int32),
+        scratch_shapes=[
+            ring,                                       # masked δ row ring
+            ring,                                       # z* row ring
+            pltpu.VMEM((bh_ * w_sp, k * k * f), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(dp, zp, w_flat)
+    return out[:, :h, :, :c]

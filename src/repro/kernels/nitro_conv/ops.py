@@ -4,8 +4,10 @@ This module is the **single conv entry point** every consumer shares:
 
   * training forward — ``core.blocks.forward_layers`` calls
     ``fused_conv_fwd`` (activation *and* the cached pre-ReLU ``z_star``);
-  * training backward — ``core.layers.conv_backward`` calls
-    ``conv_grad_w`` / ``conv_grad_x``;
+  * training backward — ``kernels.grad_ops`` (behind
+    ``core.layers.conv_backward``) calls ``conv_grad_w`` / ``conv_grad_x``,
+    passing the cached ``z_star`` so the NITRO-ReLU-bwd/STE prologue runs
+    inside the gradient kernels;
   * inference — ``infer.plan`` calls ``fused_conv`` (activation only,
     optionally int8-narrowed, optionally with the fused 2×2 pool).
 
@@ -43,8 +45,10 @@ from repro.kernels.nitro_conv.nitro_conv import (
     stream_conv,
     stream_conv_fwd,
     stream_conv_grad_w,
+    stream_conv_grad_x,
 )
 from repro.kernels.nitro_matmul.ops import check_alpha_inv, resolve_backend
+from repro.kernels.nitro_matmul.ref import masked_delta
 
 CONV_MODES = ("stream", "materialise")
 
@@ -149,6 +153,8 @@ def conv_grad_w(
     grad_out: jax.Array,
     *,
     kernel_size: int,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
     backend: str = "auto",
     conv_mode: str = "stream",
 ) -> jax.Array:
@@ -157,9 +163,19 @@ def conv_grad_w(
     (N,H,W,C) × (N,H,W,F) → (K,K,C,F) int32.  Streaming forms patch bands
     on the fly (VMEM accumulator in the kernel, band loop in the jnp
     oracle); materialise is the historical ``im2colᵀ @ g`` matmul.
+
+    ``z_star`` (same shape as ``grad_out``) enables the fused backward:
+    the NITRO-ReLU-derivative/STE prologue is applied to the δ bands in
+    VMEM (stream) or as a jnp pre-mask (materialise — its patches live in
+    HBM anyway, so there is no fusion site).  Without it the caller has
+    already applied the activation backward.
     """
     backend = resolve_backend(backend)
+    if z_star is not None:
+        alpha_inv = check_alpha_inv(alpha_inv, True)
     if resolve_conv_mode(conv_mode) == "materialise":
+        if z_star is not None:
+            grad_out = masked_delta(grad_out, z_star, alpha_inv)
         n, h, w_sp, c = x.shape
         f = grad_out.shape[-1]
         k = kernel_size
@@ -168,10 +184,12 @@ def conv_grad_w(
         return int_matmul(patches.T, g_flat).reshape(k, k, c, f)
     if backend == "reference":
         return conv_ref.stream_conv_grad_w_ref(
-            x, grad_out, kernel_size=kernel_size
+            x, grad_out, kernel_size=kernel_size,
+            z_star=z_star, alpha_inv=alpha_inv,
         )
     return stream_conv_grad_w(
         x, grad_out, kernel_size=kernel_size,
+        z_star=z_star, alpha_inv=alpha_inv,
         interpret=(backend == "interpret"),
     )
 
@@ -180,19 +198,38 @@ def conv_grad_x(
     grad_out: jax.Array,
     w: jax.Array,
     *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
     backend: str = "auto",
     conv_mode: str = "stream",
 ) -> jax.Array:
     """Conv input gradient: 'full' correlation of ``grad_out`` with the
     rotated kernel — one more conv, streamed the same way (unit scale, no
-    activation).  (N,H,W,F) × (K,K,C,F) → (N,H,W,C) int32."""
+    activation).  (N,H,W,F) × (K,K,C,F) → (N,H,W,C) int32.
+
+    With ``z_star`` the streaming kernel/oracle masks each δ band by the
+    NITRO-ReLU derivative *before* patch formation (the fused backward);
+    the materialise escape hatch pre-masks with jnp, since its im2col
+    reads the full δ from HBM regardless.
+    """
     backend = resolve_backend(backend)
+    if z_star is not None:
+        alpha_inv = check_alpha_inv(alpha_inv, True)
     if resolve_conv_mode(conv_mode) == "materialise":
+        if z_star is not None:
+            grad_out = masked_delta(grad_out, z_star, alpha_inv)
         n, h, w_sp, _ = grad_out.shape
         g_patches, w_rot_flat = conv_im2col_operands(conv_ref.rot180_swap(w), grad_out)
         return int_matmul(g_patches, w_rot_flat).reshape(n, h, w_sp, w.shape[2])
     if backend == "reference":
-        return conv_ref.stream_conv_grad_x_ref(grad_out, w)
+        return conv_ref.stream_conv_grad_x_ref(
+            grad_out, w, z_star=z_star, alpha_inv=alpha_inv
+        )
+    if z_star is not None:
+        return stream_conv_grad_x(
+            grad_out, z_star, w, alpha_inv=alpha_inv,
+            interpret=(backend == "interpret"),
+        )
     return stream_conv(
         grad_out, conv_ref.rot180_swap(w), sf=1, apply_relu=False, pool=False,
         interpret=(backend == "interpret"),

@@ -24,7 +24,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.activations import nitro_relu
+from repro.core.activations import nitro_relu, nitro_relu_backward
 from repro.core.layers import window_view_2x2
 from repro.core.numerics import int_matmul
 from repro.core.scaling import scale_forward
@@ -73,19 +73,40 @@ def _band_patches(band: jax.Array, k: int, w_out: int) -> jax.Array:
     return patches.reshape(n * bh * w_out, k * k * c)
 
 
-def _stream_z_bands(x: jax.Array, w: jax.Array, bh: int, *, pool: bool):
+def _stream_z_bands(
+    x: jax.Array,
+    w: jax.Array,
+    bh: int,
+    *,
+    pool: bool,
+    relu_bwd_z: jax.Array | None = None,
+    relu_bwd_alpha_inv: int = 10,
+):
     """Yield raw int32 pre-activation bands ``z`` of shape (N, bh, W, F).
 
     The shared core of every streaming oracle entry point: pad once
     (input-sized, not K²×), then one band-local patch matmul per row band.
+
+    ``relu_bwd_z`` activates the fused-backward prologue: each streamed
+    row band of ``x`` (= the incoming δ in a grad_x computation) is masked
+    by the NITRO-ReLU derivative against the matching ``z_star`` band
+    *before* patch formation — like the kernel, the full-size
+    post-ReLU-bwd δ never exists, only one masked band at a time.  The
+    zero halo is preserved: ``relu_bwd(z*=0, δ=0) = 0``.
     """
     n, h, w_sp, c = x.shape
     k, f = w.shape[0], w.shape[-1]
     bh, h_pad, p = conv_geometry(h, k, bh, pool=pool)
-    xp = jnp.pad(x, ((0, 0), (p, p + h_pad - h), (p, p), (0, 0)))
+    pad = ((0, 0), (p, p + h_pad - h), (p, p), (0, 0))
+    xp = jnp.pad(x, pad)
+    zp = None if relu_bwd_z is None else jnp.pad(relu_bwd_z, pad)
     w_flat = w.reshape(k * k * c, f).astype(jnp.int32)
     for t in range(h_pad // bh):
         band = xp[:, t * bh:t * bh + bh + 2 * p]
+        if zp is not None:
+            band = nitro_relu_backward(
+                zp[:, t * bh:t * bh + bh + 2 * p], band, relu_bwd_alpha_inv
+            )
         z = int_matmul(_band_patches(band, k, w_sp).astype(jnp.int32), w_flat)
         yield z.reshape(n, bh, w_sp, f)
 
@@ -100,6 +121,8 @@ def stream_conv_ref(
     pool: bool = False,
     out_dtype=jnp.int32,
     bh: int | None = None,
+    relu_bwd_z: jax.Array | None = None,
+    relu_bwd_alpha_inv: int = 10,
 ) -> jax.Array:
     """Streaming fused conv: scale(+relu)(+2×2 maxpool), activation only.
 
@@ -109,11 +132,16 @@ def stream_conv_ref(
 
     The epilogue runs *per band* — the kernel's behaviour — so what gets
     joined at the end is only the final (pooled, narrowed) activation,
-    never the int32 pre-activations.
+    never the int32 pre-activations.  ``relu_bwd_z`` enables the fused
+    backward *prologue* instead (band-wise NITRO-ReLU-derivative masking
+    of ``x``; see ``_stream_z_bands``) — the grad_x path.
     """
     h = x.shape[1]
     outs = []
-    for z in _stream_z_bands(x, w, bh, pool=pool):
+    for z in _stream_z_bands(
+        x, w, bh, pool=pool,
+        relu_bwd_z=relu_bwd_z, relu_bwd_alpha_inv=relu_bwd_alpha_inv,
+    ):
         a = scale_forward(z, sf)
         if apply_relu:
             a = nitro_relu(a, alpha_inv)
@@ -153,25 +181,39 @@ def stream_conv_grad_w_ref(
     grad_out: jax.Array,
     *,
     kernel_size: int,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
     bh: int | None = None,
 ) -> jax.Array:
-    """Streaming weight gradient: Σ_bands patch_bandᵀ @ g_band.
+    """Streaming weight gradient: Σ_bands patch_bandᵀ @ relu_bwd(g_band).
 
     (N,H,W,C) input × (N,H,W,F) grad → (K,K,C,F) int32.  Each band
     contributes one (K²·C, N·bh·W)·(N·bh·W, F) matmul; int32 accumulation
     across bands is order-exact, so this matches ``im2colᵀ @ g`` exactly.
+
+    ``z_star`` enables the fused-backward prologue: each gradient band is
+    masked by the NITRO-ReLU derivative (+ the identity STE) against the
+    matching ``z_star`` band just before its matmul — band-local, like the
+    kernel, so the full-size post-ReLU-bwd δ is never formed.
     """
     n, h, w_sp, c = x.shape
     k = kernel_size
     f = grad_out.shape[-1]
     bh, h_pad, p = conv_geometry(h, k, bh, pool=False)
     xp = jnp.pad(x, ((0, 0), (p, p + h_pad - h), (p, p), (0, 0)))
-    gp = jnp.pad(grad_out, ((0, 0), (0, h_pad - h), (0, 0), (0, 0)))
+    g_pad = ((0, 0), (0, h_pad - h), (0, 0), (0, 0))
+    gp = jnp.pad(grad_out, g_pad)
+    zp = None if z_star is None else jnp.pad(z_star, g_pad)
     grad_w = jnp.zeros((k * k * c, f), jnp.int32)
     for t in range(h_pad // bh):
         band = xp[:, t * bh:t * bh + bh + 2 * p]
         patches = _band_patches(band, k, w_sp).astype(jnp.int32)
-        g_band = gp[:, t * bh:t * bh + bh].reshape(n * bh * w_sp, f)
+        g_band = gp[:, t * bh:t * bh + bh]
+        if zp is not None:
+            g_band = nitro_relu_backward(
+                zp[:, t * bh:t * bh + bh], g_band, alpha_inv
+            )
+        g_band = g_band.reshape(n * bh * w_sp, f)
         grad_w = grad_w + jax.lax.dot_general(
             patches, g_band.astype(jnp.int32),
             dimension_numbers=(((0,), (0,)), ((), ())),
@@ -188,13 +230,21 @@ def rot180_swap(w: jax.Array) -> jax.Array:
 
 
 def stream_conv_grad_x_ref(
-    grad_out: jax.Array, w: jax.Array, *, bh: int | None = None
+    grad_out: jax.Array,
+    w: jax.Array,
+    *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
+    bh: int | None = None,
 ) -> jax.Array:
     """Streaming input gradient: 'full' correlation with the rotated kernel.
 
     grad_x = conv(g, rot180(w) with in/out channels swapped) — the same
-    streaming conv with a unit scale factor and no activation.
+    streaming conv with a unit scale factor and no activation.  With
+    ``z_star`` the NITRO-ReLU-derivative prologue masks each streamed δ
+    band before patch formation (the fused backward path).
     """
     return stream_conv_ref(
-        grad_out, rot180_swap(w), sf=1, apply_relu=False, pool=False, bh=bh
+        grad_out, rot180_swap(w), sf=1, apply_relu=False, pool=False, bh=bh,
+        relu_bwd_z=z_star, relu_bwd_alpha_inv=alpha_inv,
     )

@@ -1,21 +1,39 @@
-from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul, nitro_matmul_fwd
+from repro.kernels.nitro_matmul.nitro_matmul import (
+    nitro_matmul,
+    nitro_matmul_fwd,
+    nitro_matmul_grad_w,
+    nitro_matmul_grad_x,
+)
 from repro.kernels.nitro_matmul.ops import (
     BACKENDS,
     fused_matmul,
     fused_matmul_fwd,
+    grad_w_matmul,
+    grad_x_matmul,
     nitro_conv2d,
     nitro_linear,
     resolve_backend,
 )
-from repro.kernels.nitro_matmul.ref import nitro_matmul_fwd_ref, nitro_matmul_ref
+from repro.kernels.nitro_matmul.ref import (
+    nitro_matmul_fwd_ref,
+    nitro_matmul_grad_w_ref,
+    nitro_matmul_grad_x_ref,
+    nitro_matmul_ref,
+)
 
 __all__ = [
     "BACKENDS",
     "fused_matmul",
     "fused_matmul_fwd",
+    "grad_w_matmul",
+    "grad_x_matmul",
     "nitro_matmul",
     "nitro_matmul_fwd",
     "nitro_matmul_fwd_ref",
+    "nitro_matmul_grad_w",
+    "nitro_matmul_grad_w_ref",
+    "nitro_matmul_grad_x",
+    "nitro_matmul_grad_x_ref",
     "nitro_matmul_ref",
     "nitro_conv2d",
     "nitro_linear",

@@ -22,6 +22,13 @@ TPU adaptation notes (DESIGN.md §2):
     the odd residual is one VPU integer divide;
   * grid is (M/bm, N/bn, K/bk) with K innermost ("arbitrary"), the
     canonical Pallas accumulation pattern.
+
+The backward pass gets the same treatment: ``nitro_matmul_grad_w`` /
+``nitro_matmul_grad_x`` are true backward kernels whose *prologue* applies
+the NITRO-ReLU derivative (+ the scaling STE, which is the identity) to
+each incoming δ tile in VMEM before the MXU gradient matmuls — the
+post-ReLU-bwd δ tensor, which the unfused composition round-trips through
+HBM once per local-loss block, never leaves VMEM.
 """
 
 from __future__ import annotations
@@ -33,7 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.activations import mu_int8
+from repro.core.activations import mu_int8, nitro_relu_backward
 from repro.core.scaling import pow2_split
 
 # jax renamed TPUCompilerParams → CompilerParams; support both.
@@ -66,6 +73,19 @@ def _relu_tile(z, alpha_inv: int, mu: int):
     neg = jnp.floor_divide(jnp.maximum(z, -127), alpha_inv)
     pos = jnp.minimum(z, 127)
     return jnp.where(z < 0, neg, pos) - mu
+
+
+def _relu_bwd_tile(g, z, alpha_inv: int):
+    """NITRO-ReLU derivative + STE on a VMEM δ tile (the backward prologue).
+
+    Delegates to ``core.activations.nitro_relu_backward`` — pure traceable
+    jnp (selects + one floor-div on the VPU), so the kernel prologue can
+    never drift from the reference derivative.  The NITRO Scaling Layer's
+    straight-through estimator is the identity, so fusing it adds no
+    arithmetic — folding this prologue into the gradient matmuls is what
+    keeps the post-ReLU-bwd δ tensor out of HBM entirely.
+    """
+    return nitro_relu_backward(z, g, alpha_inv)
 
 
 def _accumulate_tile(x_ref, w_ref, acc_ref):
@@ -282,3 +302,168 @@ def nitro_matmul_fwd(
         out_dtypes=[out_dtype, jnp.int32], interpret=interpret,
     )
     return a[:m, :n], z_star[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels: gradient matmuls with the NITRO-ReLU-bwd/STE prologue
+# ---------------------------------------------------------------------------
+
+
+def _nitro_grad_w_kernel(x_ref, g_ref, z_ref, out_ref, acc_ref, *, n_k, alpha_inv):
+    """One (bm, bn) grad_W tile: acc += x_tileᵀ @ relu_bwd(δ_tile).
+
+    The prologue masks the incoming δ tile against the matching ``z_star``
+    tile *in VMEM*, so the full-size post-ReLU-bwd δ never exists — each
+    (bk, bn) δ tile is masked just before it enters the MXU.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = _relu_bwd_tile(g_ref[...].astype(jnp.int32), z_ref[...], alpha_inv)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32), g,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+def _nitro_grad_x_kernel(g_ref, z_ref, w_ref, out_ref, acc_ref, *, n_k, alpha_inv):
+    """One (bm, bn) grad_x tile: acc += relu_bwd(δ_tile) @ w_tileᵀ.
+
+    ``w`` is indexed in its natural (fan_in, fan_out) layout and transposed
+    by the dot_general contraction dims — no wᵀ copy in HBM either.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = _relu_bwd_tile(g_ref[...].astype(jnp.int32), z_ref[...], alpha_inv)
+    acc_ref[...] += jax.lax.dot_general(
+        g, w_ref[...].astype(jnp.int32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha_inv", "bm", "bn", "bk", "interpret"),
+)
+def nitro_matmul_grad_w(
+    x: jax.Array,
+    delta: jax.Array,
+    z_star: jax.Array,
+    *,
+    alpha_inv: int = 10,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused weight gradient: ``xᵀ @ nitro_relu_backward(z_star, δ)``.
+
+    x: (B, M) layer input, delta/z_star: (B, N) → (M, N) int32.  The grid
+    is (M/bm, N/bn, B/bk) with the batch contraction innermost; the
+    ReLU-bwd/STE prologue runs on each (bk, bn) δ tile in VMEM.  Zero
+    padding is exact: padded δ and z* are both 0 and the prologue maps
+    (δ=0, z*=0) → 0 (identity segment), contributing nothing.
+    """
+    b, m = x.shape
+    b2, n = delta.shape
+    assert b == b2, f"batch mismatch {b} vs {b2}"
+    assert delta.shape == z_star.shape, "delta/z_star shape mismatch"
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, b)
+    pm, pn, pb = (-m) % bm_, (-n) % bn_, (-b) % bk_
+    if pb or pm:
+        x = jnp.pad(x, ((0, pb), (0, pm)))
+    if pb or pn:
+        delta = jnp.pad(delta, ((0, pb), (0, pn)))
+        z_star = jnp.pad(z_star, ((0, pb), (0, pn)))
+    gm, gn, gk = x.shape[1] // bm_, delta.shape[1] // bn_, x.shape[0] // bk_
+    kernel = functools.partial(
+        _nitro_grad_w_kernel, n_k=gk, alpha_inv=alpha_inv
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bk_, bm_), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[1], delta.shape[1]), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, delta, z_star)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha_inv", "bm", "bn", "bk", "interpret"),
+)
+def nitro_matmul_grad_x(
+    delta: jax.Array,
+    z_star: jax.Array,
+    w: jax.Array,
+    *,
+    alpha_inv: int = 10,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused input gradient: ``nitro_relu_backward(z_star, δ) @ wᵀ``.
+
+    delta/z_star: (B, N), w: (M, N) natural layout → (B, M) int32.  Grid is
+    (B/bm, M/bn, N/bk) contracting over the fan-out; the prologue masks
+    each (bm, bk) δ tile in VMEM.  Padded fan-out columns have δ = z* = 0
+    and w = 0, so the extra contraction terms vanish exactly.
+    """
+    b, n = delta.shape
+    m, n2 = w.shape
+    assert n == n2, f"fan-out mismatch {n} vs {n2}"
+    assert delta.shape == z_star.shape, "delta/z_star shape mismatch"
+    bm_, bn_, bk_ = min(bm, b), min(bn, m), min(bk, n)
+    pb, pm, pn = (-b) % bm_, (-m) % bn_, (-n) % bk_
+    if pb or pn:
+        delta = jnp.pad(delta, ((0, pb), (0, pn)))
+        z_star = jnp.pad(z_star, ((0, pb), (0, pn)))
+    if pm or pn:
+        w = jnp.pad(w, ((0, pm), (0, pn)))
+    gm, gn, gk = delta.shape[0] // bm_, w.shape[0] // bn_, delta.shape[1] // bk_
+    kernel = functools.partial(
+        _nitro_grad_x_kernel, n_k=gk, alpha_inv=alpha_inv
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn_, bk_), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((delta.shape[0], w.shape[0]), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(delta, z_star, w)
+    return out[:b, :m]

@@ -1,9 +1,13 @@
 """Public wrappers + backend dispatch for the fused NITRO matmul kernel.
 
-This module is the **single entry point** both forward paths share:
+This module is the **single entry point** every matmul path shares:
 
-  * training — ``core.blocks.forward_layers`` calls ``fused_matmul_fwd``
-    (returns the activation *and* the cached pre-ReLU ``z_star``);
+  * training forward — ``core.blocks.forward_layers`` calls
+    ``fused_matmul_fwd`` (returns the activation *and* the cached pre-ReLU
+    ``z_star``);
+  * training backward — ``kernels.grad_ops`` calls ``grad_w_matmul`` /
+    ``grad_x_matmul`` (gradient matmuls whose VMEM prologue applies the
+    NITRO-ReLU derivative + scaling STE to the δ tiles);
   * inference — ``infer.plan`` calls ``fused_matmul`` (activation only,
     optionally narrowed to int8 between layers).
 
@@ -22,13 +26,25 @@ Scaling → NITRO-ReLU) with the legacy ``use_kernel``/``interpret`` knobs.
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.layers import conv_im2col_operands
 from repro.core.scaling import conv_scale_factor, linear_scale_factor
-from repro.kernels.nitro_matmul.nitro_matmul import nitro_matmul, nitro_matmul_fwd
-from repro.kernels.nitro_matmul.ref import nitro_matmul_fwd_ref, nitro_matmul_ref
+from repro.kernels.nitro_matmul.nitro_matmul import (
+    nitro_matmul,
+    nitro_matmul_fwd,
+    nitro_matmul_grad_w,
+    nitro_matmul_grad_x,
+)
+from repro.kernels.nitro_matmul.ref import (
+    nitro_matmul_fwd_ref,
+    nitro_matmul_grad_w_ref,
+    nitro_matmul_grad_x_ref,
+    nitro_matmul_ref,
+)
 
 BACKENDS = ("auto", "pallas", "interpret", "reference")
 
@@ -115,10 +131,79 @@ def fused_matmul_fwd(
     )
 
 
+def grad_w_matmul(
+    x2: jax.Array,
+    delta2: jax.Array,
+    z_star2: jax.Array,
+    *,
+    alpha_inv: int = 10,
+    backend: str = "auto",
+) -> jax.Array:
+    """Fused backward weight matmul on 2-D operands.
+
+    ``x2ᵀ @ relu_bwd(z*, δ)`` with the NITRO-ReLU-derivative/STE prologue
+    applied to the δ tiles in VMEM (pallas/interpret) or composed from the
+    reference ops (reference) — bit-identical either way.
+    """
+    backend = resolve_backend(backend)
+    alpha_inv = check_alpha_inv(alpha_inv, True)
+    if backend == "reference":
+        return nitro_matmul_grad_w_ref(x2, delta2, z_star2, alpha_inv=alpha_inv)
+    return nitro_matmul_grad_w(
+        x2, delta2, z_star2, alpha_inv=alpha_inv,
+        interpret=(backend == "interpret"),
+    )
+
+
+def grad_x_matmul(
+    delta2: jax.Array,
+    z_star2: jax.Array,
+    w2: jax.Array,
+    *,
+    alpha_inv: int = 10,
+    backend: str = "auto",
+) -> jax.Array:
+    """Fused backward input matmul on 2-D operands.
+
+    ``relu_bwd(z*, δ) @ w2ᵀ`` — the transpose happens via the kernel's
+    contraction dims, and the prologue masks δ in VMEM exactly as
+    ``grad_w_matmul`` does.
+    """
+    backend = resolve_backend(backend)
+    alpha_inv = check_alpha_inv(alpha_inv, True)
+    if backend == "reference":
+        return nitro_matmul_grad_x_ref(delta2, z_star2, w2, alpha_inv=alpha_inv)
+    return nitro_matmul_grad_x(
+        delta2, z_star2, w2, alpha_inv=alpha_inv,
+        interpret=(backend == "interpret"),
+    )
+
+
 def _legacy_backend(use_kernel: bool | None, interpret: bool | None) -> str:
-    """Map the historical ``use_kernel``/``interpret`` knobs to a backend."""
+    """Map the historical ``use_kernel``/``interpret`` knobs to a backend.
+
+    Both knobs are deprecated in favour of ``backend=``; passing either
+    explicitly warns.  ``use_kernel=False`` with ``interpret=True`` is
+    contradictory (no kernel to interpret) and raises instead of the
+    historical behaviour of silently preferring ``use_kernel`` — and an
+    explicit ``interpret=True`` with ``use_kernel`` unset now selects the
+    interpreter instead of being silently dropped off-TPU.
+    """
+    if use_kernel is not None or interpret is not None:
+        warnings.warn(
+            "use_kernel/interpret are deprecated; use backend="
+            "'pallas'|'interpret'|'reference'|'auto' instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    if use_kernel is False and interpret:
+        raise ValueError(
+            "contradictory legacy knobs: use_kernel=False disables the "
+            "kernel but interpret=True requests the Pallas interpreter; "
+            "pass backend='reference' or backend='interpret' instead"
+        )
     if use_kernel is None:
-        use_kernel = _on_tpu()
+        use_kernel = _on_tpu() or bool(interpret)
     if not use_kernel:
         return "reference"
     if interpret is None:

@@ -10,9 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.activations import nitro_relu
+from repro.core.activations import nitro_relu, nitro_relu_backward
 from repro.core.numerics import int_matmul
-from repro.core.scaling import scale_forward
+from repro.core.scaling import scale_backward, scale_forward
 
 
 def nitro_matmul_ref(
@@ -48,3 +48,41 @@ def nitro_matmul_fwd_ref(
     z_star = scale_forward(z, sf)
     a = nitro_relu(z_star, alpha_inv)
     return a.astype(out_dtype), z_star
+
+
+def masked_delta(delta: jax.Array, z_star: jax.Array, alpha_inv: int) -> jax.Array:
+    """The backward prologue the grad kernels fuse, composed from the
+    reference ops: NITRO-ReLU derivative then the scaling STE (identity).
+
+    The single jnp definition of that composition — the grad oracles
+    below, the conv dispatcher's materialise pre-mask and ``grad_ops``'s
+    unfused escape hatch all share it, so the fused/unfused parity oracle
+    cannot drift apart across modules.
+    """
+    return scale_backward(nitro_relu_backward(z_star, delta, alpha_inv))
+
+
+def nitro_matmul_grad_w_ref(
+    x: jax.Array,
+    delta: jax.Array,
+    z_star: jax.Array,
+    *,
+    alpha_inv: int = 10,
+) -> jax.Array:
+    """Weight-gradient oracle: ``xᵀ @ relu_bwd(z*, δ)`` — matches
+    ``nitro_matmul_grad_w`` bit-for-bit (int32 accumulation is order-exact)."""
+    g = masked_delta(delta.astype(jnp.int32), z_star, alpha_inv)
+    return int_matmul(x.astype(jnp.int32).T, g)
+
+
+def nitro_matmul_grad_x_ref(
+    delta: jax.Array,
+    z_star: jax.Array,
+    w: jax.Array,
+    *,
+    alpha_inv: int = 10,
+) -> jax.Array:
+    """Input-gradient oracle: ``relu_bwd(z*, δ) @ wᵀ`` — matches
+    ``nitro_matmul_grad_x`` bit-for-bit."""
+    g = masked_delta(delta.astype(jnp.int32), z_star, alpha_inv)
+    return int_matmul(g, w.astype(jnp.int32).T)

@@ -18,6 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _gradcheck import (
+    assert_bitwise_equal,
+    assert_jaxpr_integer_only,
+    collect_aval_shapes,
+)
 from repro.configs import paper
 from repro.core import activations, layers, les, model as M, scaling
 from repro.core.blocks import BlockSpec
@@ -125,8 +130,8 @@ class TestStreamOracle:
         gx_want, grads_want = layers.conv_backward(
             {"w": w}, layers.ConvCache(x=x), g, conv_mode="materialise"
         )
-        np.testing.assert_array_equal(np.asarray(gw), np.asarray(grads_want["w"]))
-        np.testing.assert_array_equal(np.asarray(gx), np.asarray(gx_want))
+        assert_bitwise_equal(gw, grads_want["w"])
+        assert_bitwise_equal(gx, gx_want)
 
 
 class TestStreamKernel:
@@ -206,9 +211,7 @@ class TestDispatcher:
                 )
         first = next(iter(outs.values()))
         for key, out in outs.items():
-            np.testing.assert_array_equal(
-                np.asarray(out), np.asarray(first), err_msg=str(key)
-            )
+            assert_bitwise_equal(out, first, err_msg=str(key))
 
     def test_fwd_routes_agree(self):
         x, w = _rand_case(2, 7, 7, 3, 8, 3, seed=10)
@@ -218,8 +221,7 @@ class TestDispatcher:
         for mode, backend in [("stream", "interpret"),
                               ("materialise", "reference")]:
             got = fused_conv_fwd(x, w, sf=sf, backend=backend, conv_mode=mode)
-            for a, b in zip(got, ref):
-                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            assert_bitwise_equal(got, ref, err_msg=f"{mode}/{backend}")
 
     def test_grad_routes_agree(self):
         x, w = _rand_case(2, 6, 6, 3, 4, 3, seed=11)
@@ -229,13 +231,13 @@ class TestDispatcher:
                             conv_mode="materialise")
         ref_x = conv_grad_x(g, w, backend="reference", conv_mode="materialise")
         for mode, backend in [("stream", "reference"), ("stream", "interpret")]:
-            np.testing.assert_array_equal(
-                np.asarray(conv_grad_w(x, g, kernel_size=3, backend=backend,
-                                       conv_mode=mode)),
-                np.asarray(ref_w))
-            np.testing.assert_array_equal(
-                np.asarray(conv_grad_x(g, w, backend=backend, conv_mode=mode)),
-                np.asarray(ref_x))
+            assert_bitwise_equal(
+                conv_grad_w(x, g, kernel_size=3, backend=backend,
+                            conv_mode=mode),
+                ref_w, err_msg=f"{mode}/{backend}")
+            assert_bitwise_equal(
+                conv_grad_x(g, w, backend=backend, conv_mode=mode),
+                ref_x, err_msg=f"{mode}/{backend}")
 
     def test_unknown_conv_mode_raises(self):
         with pytest.raises(ValueError, match="unknown conv_mode"):
@@ -294,15 +296,11 @@ class TestTrainingParity:
         }
         unfused = M.forward(state.params, cfg, x, train=False, fused=False)
         for mode, (y, acts, caches, _) in outs.items():
-            np.testing.assert_array_equal(
-                np.asarray(y), np.asarray(unfused[0]), err_msg=mode
-            )
+            assert_bitwise_equal(y, unfused[0], err_msg=mode)
             for a_m, a_u, c_m, c_u in zip(acts, unfused[1], caches, unfused[2]):
-                assert a_m.dtype == a_u.dtype
-                np.testing.assert_array_equal(np.asarray(a_m), np.asarray(a_u))
-                np.testing.assert_array_equal(
-                    np.asarray(c_m["z_star"]), np.asarray(c_u["z_star"])
-                )
+                assert_bitwise_equal(a_m, a_u, err_msg=mode)
+                assert_bitwise_equal(c_m["z_star"], c_u["z_star"],
+                                     err_msg=mode)
 
     @pytest.mark.parametrize("kernel_size", [3, 5])
     def test_k5_block_and_odd_input(self, kernel_size):
@@ -341,11 +339,8 @@ class TestTrainingParity:
             ))(st, x=x, labels=y, key=key)
             for mode in ("stream", "materialise")
         }
-        for ps, pm in zip(
-            jax.tree_util.tree_leaves(stepped["stream"][0].params),
-            jax.tree_util.tree_leaves(stepped["materialise"][0].params),
-        ):
-            np.testing.assert_array_equal(np.asarray(ps), np.asarray(pm))
+        assert_bitwise_equal(stepped["stream"][0].params,
+                             stepped["materialise"][0].params)
         assert int(stepped["stream"][1].loss) == int(stepped["materialise"][1].loss)
 
     def test_conv_backward_modes_agree(self):
@@ -353,52 +348,16 @@ class TestTrainingParity:
         rng = np.random.default_rng(12)
         g = jnp.asarray(rng.integers(-63, 64, (2, 8, 6, 8)), jnp.int32)
         cache = layers.ConvCache(x=x)
-        gx_s, gr_s = layers.conv_backward({"w": w}, cache, g,
-                                          conv_mode="stream")
-        gx_m, gr_m = layers.conv_backward({"w": w}, cache, g,
-                                          conv_mode="materialise")
-        np.testing.assert_array_equal(np.asarray(gx_s), np.asarray(gx_m))
-        np.testing.assert_array_equal(
-            np.asarray(gr_s["w"]), np.asarray(gr_m["w"])
-        )
+        stream = layers.conv_backward({"w": w}, cache, g, conv_mode="stream")
+        materialise = layers.conv_backward({"w": w}, cache, g,
+                                           conv_mode="materialise")
+        assert_bitwise_equal(stream, materialise)
 
 
 # ---------------------------------------------------------------------------
 # Structural property: the streaming path has no HBM patch matrix
+# (jaxpr-walking helpers live in the shared harness, tests/_gradcheck.py)
 # ---------------------------------------------------------------------------
-
-
-def _collect_aval_shapes(jaxpr, shapes):
-    """Every intermediate aval shape, descending into sub-jaxprs (pjit,
-    scan, and the Pallas kernel body inside pallas_call)."""
-    for eqn in jaxpr.eqns:
-        for v in list(eqn.invars) + list(eqn.outvars):
-            aval = getattr(v, "aval", None)
-            if aval is not None and hasattr(aval, "shape"):
-                shapes.add(tuple(int(d) for d in aval.shape))
-        for param in eqn.params.values():
-            items = param if isinstance(param, (tuple, list)) else [param]
-            for item in items:
-                if isinstance(item, jax.core.ClosedJaxpr):
-                    _collect_aval_shapes(item.jaxpr, shapes)
-                elif isinstance(item, jax.core.Jaxpr):
-                    _collect_aval_shapes(item, shapes)
-
-
-def _assert_jaxpr_integer_only(jaxpr):
-    """No float dtype anywhere, descending into the Pallas kernel body."""
-    for eqn in jaxpr.eqns:
-        for v in list(eqn.invars) + list(eqn.outvars):
-            aval = getattr(v, "aval", None)
-            if aval is not None and hasattr(aval, "dtype"):
-                assert "float" not in str(aval.dtype), f"float op: {eqn}"
-        for param in eqn.params.values():
-            items = param if isinstance(param, (tuple, list)) else [param]
-            for item in items:
-                if isinstance(item, jax.core.ClosedJaxpr):
-                    _assert_jaxpr_integer_only(item.jaxpr)
-                elif isinstance(item, jax.core.Jaxpr):
-                    _assert_jaxpr_integer_only(item)
 
 
 class TestStructural:
@@ -423,9 +382,7 @@ class TestStructural:
             jaxpr = jax.make_jaxpr(functools.partial(
                 fused_conv, sf=sf, backend=backend, conv_mode=mode
             ))(x, w)
-            shapes = set()
-            _collect_aval_shapes(jaxpr.jaxpr, shapes)
-            return shapes
+            return collect_aval_shapes(jaxpr.jaxpr)
 
         assert not (patch_shapes & trace("stream")), (
             "streaming path materialised a full-size patch matrix"
@@ -466,8 +423,7 @@ class TestStructural:
             jaxpr = jax.make_jaxpr(functools.partial(
                 _execute, metas=plan.metas, backend=plan.backend
             ))(plan.weights, x)
-            shapes = set()
-            _collect_aval_shapes(jaxpr.jaxpr, shapes)
+            shapes = collect_aval_shapes(jaxpr.jaxpr)
             if expect_patch:
                 assert flat_patches <= shapes, "sanity: patches expected"
             else:
@@ -497,7 +453,7 @@ class TestStructural:
             functools.partial(les.train_step, cfg=cfg, fused=True,
                               backend=backend, conv_mode=conv_mode)
         )(st, x=x, labels=y, key=jax.random.PRNGKey(1))
-        _assert_jaxpr_integer_only(jaxpr.jaxpr)
+        assert_jaxpr_integer_only(jaxpr.jaxpr)
 
 
 class TestPlanStream:

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _gradcheck import assert_bitwise_equal
 from repro.configs import paper
 from repro.core import blocks as B
 from repro.core import les, model as M
@@ -68,11 +69,10 @@ class TestFusedForwardKernel:
             x, w, sf=sf, interpret=True, bm=32, bn=32, bk=32
         )
         a_r, z_r = nitro_matmul_fwd_ref(x, w, sf=sf)
-        np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
-        np.testing.assert_array_equal(np.asarray(z_k), np.asarray(z_r))
-        # z_star must keep the int32 dtype scale_forward produces — it is
-        # cached for the NITRO-ReLU/STE backward.
-        assert z_k.dtype == jnp.int32 and z_r.dtype == jnp.int32
+        # dtype equality included: z_star must keep the int32 dtype
+        # scale_forward produces — it is cached for the ReLU/STE backward.
+        assert_bitwise_equal((a_k, z_k), (a_r, z_r))
+        assert z_k.dtype == jnp.int32
 
     def test_kernels_first_import_order(self):
         """``import repro.kernels.nitro_matmul`` as a process's first repro
@@ -105,8 +105,7 @@ class TestFusedForwardKernel:
         sf = linear_scale_factor(50)
         a_ref, z_ref = fused_matmul_fwd(x, w, sf=sf, backend="reference")
         a_int, z_int = fused_matmul_fwd(x, w, sf=sf, backend="interpret")
-        np.testing.assert_array_equal(np.asarray(a_ref), np.asarray(a_int))
-        np.testing.assert_array_equal(np.asarray(z_ref), np.asarray(z_int))
+        assert_bitwise_equal((a_ref, z_ref), (a_int, z_int))
 
 
 # ---------------------------------------------------------------------------
@@ -131,14 +130,10 @@ class TestForwardLayersParity:
         y_u, acts_u, caches_u, _ = M.forward(
             state.params, cfg, x, train=False, fused=False
         )
-        np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_u))
+        assert_bitwise_equal(y_f, y_u)
         for af, au, cf, cu in zip(acts_f, acts_u, caches_f, caches_u):
-            assert af.dtype == au.dtype
-            np.testing.assert_array_equal(np.asarray(af), np.asarray(au))
-            assert cf["z_star"].dtype == cu["z_star"].dtype
-            np.testing.assert_array_equal(
-                np.asarray(cf["z_star"]), np.asarray(cu["z_star"])
-            )
+            assert_bitwise_equal(af, au)
+            assert_bitwise_equal(cf["z_star"], cu["z_star"])
 
     def test_fused_interpret_backend_matches_on_single_block(self):
         """The Pallas kernel (interpret mode) slots into forward_layers."""
@@ -151,10 +146,8 @@ class TestForwardLayersParity:
         a_i, c_i = B.forward_layers(p, spec, x, train=False,
                                     fused=True, backend="interpret")
         a_u, c_u = B.forward_layers(p, spec, x, train=False, fused=False)
-        np.testing.assert_array_equal(np.asarray(a_i), np.asarray(a_u))
-        np.testing.assert_array_equal(
-            np.asarray(c_i["z_star"]), np.asarray(c_u["z_star"])
-        )
+        assert_bitwise_equal(a_i, a_u)
+        assert_bitwise_equal(c_i["z_star"], c_u["z_star"])
 
     def test_cache_contract_identical(self):
         """Backward consumes the same cache keys whichever forward ran."""
@@ -167,9 +160,7 @@ class TestForwardLayersParity:
         _, c_f = B.forward_layers(p, spec, x, train=False, fused=True)
         _, c_u = B.forward_layers(p, spec, x, train=False, fused=False)
         assert set(c_f) == set(c_u)
-        np.testing.assert_array_equal(
-            np.asarray(c_f["linear"]), np.asarray(c_u["linear"])
-        )
+        assert_bitwise_equal(c_f["linear"], c_u["linear"])
 
 
 # ---------------------------------------------------------------------------
@@ -195,13 +186,9 @@ class TestTrainStepParity:
             les.train_step, cfg=cfg, fused=True))(st, x=x, labels=y, key=key)
         st_u, m_u = jax.jit(functools.partial(
             les.train_step, cfg=cfg, fused=False))(st, x=x, labels=y, key=key)
-        for pf, pu in zip(jax.tree_util.tree_leaves(st_f.params),
-                          jax.tree_util.tree_leaves(st_u.params)):
-            np.testing.assert_array_equal(np.asarray(pf), np.asarray(pu))
+        assert_bitwise_equal(st_f.params, st_u.params)
         assert int(m_f.loss) == int(m_u.loss)
-        np.testing.assert_array_equal(
-            np.asarray(m_f.local_losses), np.asarray(m_u.local_losses)
-        )
+        assert_bitwise_equal(m_f.local_losses, m_u.local_losses)
 
     def test_fused_multi_step_training_stays_exact(self):
         """Divergence can compound: run several steps and compare params."""
@@ -216,6 +203,4 @@ class TestTrainStepParity:
             k = jax.random.PRNGKey(i)
             st_f, _ = step_f(st_f, x=x, labels=y, key=k)
             st_u, _ = step_u(st_u, x=x, labels=y, key=k)
-        for pf, pu in zip(jax.tree_util.tree_leaves(st_f.params),
-                          jax.tree_util.tree_leaves(st_u.params)):
-            np.testing.assert_array_equal(np.asarray(pf), np.asarray(pu))
+        assert_bitwise_equal(st_f.params, st_u.params)

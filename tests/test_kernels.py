@@ -8,6 +8,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from _gradcheck import assert_bitwise_equal
 from repro.core.scaling import conv_scale_factor, linear_scale_factor
 from repro.kernels.integer_sgd.integer_sgd import integer_sgd_update
 from repro.kernels.integer_sgd.ref import integer_sgd_ref
@@ -28,7 +29,7 @@ class TestNitroMatmulKernel:
         sf = linear_scale_factor(k)
         got = nitro_matmul(x, w, sf=sf, interpret=True, bm=32, bn=32, bk=64)
         want = nitro_matmul_ref(x, w, sf=sf)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_bitwise_equal(got, want)
 
     @pytest.mark.parametrize("in_dtype", [jnp.int8, jnp.int32])
     @pytest.mark.parametrize("out_dtype", [jnp.int8, jnp.int32])
@@ -40,7 +41,7 @@ class TestNitroMatmulKernel:
         got = nitro_matmul(x, w, sf=sf, out_dtype=out_dtype, interpret=True)
         want = nitro_matmul_ref(x, w, sf=sf, out_dtype=out_dtype)
         assert got.dtype == out_dtype
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_bitwise_equal(got, want)
 
     @pytest.mark.parametrize("apply_relu", [True, False])
     @pytest.mark.parametrize("alpha_inv", [3, 10, 100])
@@ -53,7 +54,7 @@ class TestNitroMatmulKernel:
             x, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu, interpret=True
         )
         want = nitro_matmul_ref(x, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_bitwise_equal(got, want)
 
     @pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 64), (128, 128, 128)])
     def test_tile_size_sweep(self, bm, bn, bk):
@@ -64,7 +65,7 @@ class TestNitroMatmulKernel:
         sf = linear_scale_factor(100)
         got = nitro_matmul(x, w, sf=sf, bm=bm, bn=bn, bk=bk, interpret=True)
         want = nitro_matmul_ref(x, w, sf=sf)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_bitwise_equal(got, want)
 
     @given(st.integers(0, 2**31 - 1))
     @settings(max_examples=20, deadline=None)
@@ -76,7 +77,7 @@ class TestNitroMatmulKernel:
         sf = linear_scale_factor(int(k))
         got = nitro_matmul(x, w, sf=sf, interpret=True, bm=32, bn=32, bk=32)
         want = nitro_matmul_ref(x, w, sf=sf)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_bitwise_equal(got, want)
 
     def test_output_range_fits_int8(self):
         """Fused scale+relu output always fits int8 — the contract that lets
@@ -94,11 +95,12 @@ class TestNitroOps:
         rng = np.random.default_rng(4)
         x = jnp.asarray(rng.integers(-127, 128, (4, 10, 48)), jnp.int32)
         w = jnp.asarray(rng.integers(-60, 61, (48, 24)), jnp.int32)
-        got = ops.nitro_linear(x, w, use_kernel=True, interpret=True)
+        with pytest.warns(DeprecationWarning, match="use_kernel"):
+            got = ops.nitro_linear(x, w, use_kernel=True, interpret=True)
         want = nitro_matmul_ref(
             x.reshape(-1, 48), w, sf=linear_scale_factor(48)
         ).reshape(4, 10, 24)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_bitwise_equal(got, want)
 
     def test_nitro_conv2d_matches_reference_block(self):
         """Fused conv path ≡ conv_forward → scale → relu from repro.core."""
@@ -107,12 +109,75 @@ class TestNitroOps:
         rng = np.random.default_rng(5)
         x = jnp.asarray(rng.integers(-127, 128, (2, 6, 6, 3)), jnp.int32)
         w = jnp.asarray(rng.integers(-50, 51, (3, 3, 3, 8)), jnp.int32)
-        got = ops.nitro_conv2d(x, w, use_kernel=True, interpret=True)
+        with pytest.warns(DeprecationWarning, match="use_kernel"):
+            got = ops.nitro_conv2d(x, w, use_kernel=True, interpret=True)
         z, _ = layers.conv_forward({"w": w}, x)
         want = activations.nitro_relu(
             scaling.scale_forward(z, scaling.conv_scale_factor(3, 3)), 10
         )
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_bitwise_equal(got, want)
+
+
+class TestLegacyBackendKnobs:
+    """The deprecated ``use_kernel``/``interpret`` mapping (bugfix
+    satellite): explicit use warns, contradictions raise instead of
+    silently preferring one knob, and an explicit ``interpret=True`` is
+    honoured off-TPU instead of being dropped."""
+
+    def test_legacy_knobs_warn(self):
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.integers(-127, 128, (4, 16)), jnp.int32)
+        w = jnp.asarray(rng.integers(-40, 41, (16, 8)), jnp.int32)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            ops.nitro_linear(x, w, use_kernel=False)
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            ops._legacy_backend(None, False)
+
+    def test_defaults_do_not_warn(self):
+        """The knob-free path must stay silent — only explicit legacy use
+        pays the warning."""
+        import warnings
+
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.integers(-127, 128, (4, 16)), jnp.int32)
+        w = jnp.asarray(rng.integers(-40, 41, (16, 8)), jnp.int32)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            ops.nitro_linear(x, w)
+
+    def test_contradictory_knobs_raise(self):
+        """use_kernel=False + interpret=True has no meaning: there is no
+        kernel to interpret.  Historically the kernel knob silently won."""
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.integers(-127, 128, (4, 16)), jnp.int32)
+        w = jnp.asarray(rng.integers(-40, 41, (16, 8)), jnp.int32)
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="contradictory"):
+                ops.nitro_linear(x, w, use_kernel=False, interpret=True)
+            with pytest.raises(ValueError, match="contradictory"):
+                ops.nitro_conv2d(
+                    jnp.zeros((1, 4, 4, 2), jnp.int32),
+                    jnp.zeros((3, 3, 2, 2), jnp.int32),
+                    use_kernel=False, interpret=True,
+                )
+
+    def test_mapping_table(self):
+        """The full legacy → backend table, including the fixed row:
+        interpret=True with use_kernel unset selects the interpreter
+        (previously it resolved to 'reference' off-TPU, silently)."""
+        import warnings
+
+        on_tpu = jax.default_backend() == "tpu"
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            assert ops._legacy_backend(True, True) == "interpret"
+            assert ops._legacy_backend(True, False) == "pallas"
+            assert ops._legacy_backend(False, None) == "reference"
+            assert ops._legacy_backend(False, False) == "reference"
+            assert ops._legacy_backend(None, True) == "interpret"
+            assert ops._legacy_backend(None, None) == (
+                "pallas" if on_tpu else "reference"
+            )
 
 
 class TestIntegerSGDKernel:
@@ -123,7 +188,7 @@ class TestIntegerSGDKernel:
         g = jnp.asarray(rng.integers(-(2**20), 2**20, shape), jnp.int32)
         got = integer_sgd_update(w, g, 512, 3000, interpret=True)
         want = integer_sgd_ref(w, g, 512, 3000)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_bitwise_equal(got, want)
 
     @pytest.mark.parametrize("gamma,eta", [(1, 0), (512, 0), (512, 3000), (4096, 28000)])
     def test_hyperparameter_sweep(self, gamma, eta):
@@ -132,7 +197,7 @@ class TestIntegerSGDKernel:
         g = jnp.asarray(rng.integers(-(2**24), 2**24, (300,)), jnp.int32)
         got = integer_sgd_update(w, g, gamma, eta, interpret=True)
         want = integer_sgd_ref(w, g, gamma, eta)
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert_bitwise_equal(got, want)
 
     def test_scalars_are_runtime_values(self):
         """One compiled kernel must serve different γ/η (SMEM scalars) —

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _gradcheck import assert_bitwise_equal, assert_jaxpr_integer_only
 from repro.core import les, model
 from repro.core.blocks import BlockSpec
 from repro.core.model import NitroConfig
@@ -35,36 +36,17 @@ def toy_data():
     return jnp.asarray(x.astype(np.int32)), jnp.asarray(y)
 
 
-def _assert_jaxpr_integer_only(jaxpr):
-    """Recursively assert no float dtype appears anywhere in a jaxpr.
-
-    Descends into sub-jaxprs carried in eqn params (pjit, cond, and —
-    crucially — the Pallas kernel body inside ``pallas_call``), so the
-    fused-kernel path is actually inspected, not just the call wrapping it.
-    """
-    for eqn in jaxpr.eqns:
-        for v in list(eqn.invars) + list(eqn.outvars):
-            aval = getattr(v, "aval", None)
-            if aval is not None and hasattr(aval, "dtype"):
-                assert "float" not in str(aval.dtype), f"float op: {eqn}"
-        for param in eqn.params.values():
-            items = param if isinstance(param, (tuple, list)) else [param]
-            for item in items:
-                if isinstance(item, jax.core.ClosedJaxpr):
-                    _assert_jaxpr_integer_only(item.jaxpr)
-                elif isinstance(item, jax.core.Jaxpr):
-                    _assert_jaxpr_integer_only(item)
-
-
 class TestTrainStep:
-    @pytest.mark.parametrize("fused,backend", [
-        (True, "auto"),        # the default train path
-        (True, "interpret"),   # the actual Pallas kernel body, off-TPU
-        (False, "auto"),       # unfused reference escape hatch
+    @pytest.mark.parametrize("fused,fuse_bwd,backend", [
+        (True, True, "auto"),       # the default train path (fwd + bwd fused)
+        (True, True, "interpret"),  # the actual Pallas kernel bodies, off-TPU
+        (True, False, "auto"),      # unfused δ path escape hatch
+        (False, False, "auto"),     # fully unfused reference composition
     ])
-    def test_step_is_integer_only(self, toy_data, fused, backend):
+    def test_step_is_integer_only(self, toy_data, fused, fuse_bwd, backend):
         """No float dtype anywhere in the jit-compiled training step —
-        fused (including inside the Pallas kernel jaxpr) and unfused."""
+        fused forward *and* fused backward (including inside the Pallas
+        kernel jaxprs), plus both unfused escape hatches."""
         cfg = NitroConfig(
             blocks=(BlockSpec("conv", 16, pool=True, d_lr=256, dropout=0.1),
                     BlockSpec("linear", 64, dropout=0.1)),
@@ -75,9 +57,9 @@ class TestTrainStep:
         st = les.create_train_state(jax.random.PRNGKey(0), cfg)
         jaxpr = jax.make_jaxpr(
             functools.partial(les.train_step, cfg=cfg, fused=fused,
-                              backend=backend)
+                              fuse_bwd=fuse_bwd, backend=backend)
         )(st, x=x[:8], labels=y[:8], key=jax.random.PRNGKey(1))
-        _assert_jaxpr_integer_only(jaxpr.jaxpr)
+        assert_jaxpr_integer_only(jaxpr.jaxpr)
 
     def test_loss_decreases_on_learnable_task(self, toy_data):
         x, y = toy_data
@@ -129,13 +111,8 @@ class TestTrainStep:
             st._replace(params=mutated), x=x[:32], labels=y[:32],
             key=jax.random.PRNGKey(5),
         )
-        np.testing.assert_array_equal(
-            np.asarray(st_a.params["blocks"][0]["fw"]["w"]),
-            np.asarray(st_b.params["blocks"][0]["fw"]["w"]),
-        )
-        np.testing.assert_array_equal(
-            np.asarray(st_a.params["blocks"][0]["lr"]["w"]),
-            np.asarray(st_b.params["blocks"][0]["lr"]["w"]),
+        assert_bitwise_equal(
+            st_a.params["blocks"][0], st_b.params["blocks"][0]
         )
 
     def test_eval_step_counts_correct(self, toy_data):

@@ -1,0 +1,168 @@
+#!/usr/bin/env python
+"""Line-coverage gate for ``src/repro/core`` + ``src/repro/kernels``.
+
+``tools/ci_check.sh`` prefers **pytest-cov** (see requirements-dev.txt)
+when it is importable:
+
+    python -m pytest -q -m "not slow" \
+        --cov=repro.core --cov=repro.kernels --cov-fail-under=<floor>
+
+This script is the dependency-free fallback for containers where
+pytest-cov cannot be installed (this repo's CI image has no network
+access): it measures line coverage of the gated packages with a scoped
+``sys.settrace`` — line events are enabled only for frames whose code
+lives in a gated file, so the rest of the suite pays one dict lookup per
+function call — runs pytest in-process, and enforces the same floor.
+
+    python tools/cov_gate.py --fail-under 80 [--report] -- -x -q -m "not slow"
+
+Executable lines are derived from the compiled code objects
+(``co_lines`` over the module's nested code-object tree), so the
+denominator is stable across runs; the number tracks pytest-cov's to
+within a couple of points (docstring/``pragma`` handling differs — pin
+the floor with a small margin when switching tools).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+from collections import defaultdict
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GATED_DIRS = (
+    os.path.join(ROOT, "src", "repro", "core"),
+    os.path.join(ROOT, "src", "repro", "kernels"),
+)
+
+
+def gated_files() -> list[str]:
+    files = []
+    for d in GATED_DIRS:
+        for dirpath, _, names in os.walk(d):
+            files.extend(
+                os.path.join(dirpath, n) for n in names if n.endswith(".py")
+            )
+    return sorted(files)
+
+
+def executable_lines(path: str) -> set[int]:
+    """Line numbers carrying bytecode, over the nested code-object tree."""
+    with open(path, "r") as f:
+        code = compile(f.read(), path, "exec")
+    lines: set[int] = set()
+    stack = [code]
+    while stack:
+        co = stack.pop()
+        lines.update(ln for _, _, ln in co.co_lines() if ln is not None)
+        stack.extend(c for c in co.co_consts if hasattr(c, "co_lines"))
+    return lines
+
+
+class Tracer:
+    """Scoped line tracer: line events only inside the gated files."""
+
+    def __init__(self, targets: set[str]):
+        self.targets = targets
+        self.executed: dict[str, set[int]] = defaultdict(set)
+        # raw co_filename → canonical path if gated, else None; lines are
+        # always recorded under the canonical path so a module imported
+        # through a non-canonical sys.path entry still reports correctly.
+        self._canonical: dict[str, str | None] = {}
+        self._locals: dict[str, object] = {}
+
+    def _local_for(self, canon: str):
+        tracer = self._locals.get(canon)
+        if tracer is None:
+            lines = self.executed[canon]
+
+            def tracer(frame, event, arg):
+                if event == "line":
+                    lines.add(frame.f_lineno)
+                return tracer
+
+            self._locals[canon] = tracer
+        return tracer
+
+    def __call__(self, frame, event, arg):
+        if event != "call":
+            return None
+        fname = frame.f_code.co_filename
+        canon = self._canonical.get(fname, False)
+        if canon is False:
+            abspath = os.path.abspath(fname)
+            canon = abspath if abspath in self.targets else None
+            self._canonical[fname] = canon
+        if canon is None:
+            return None
+        self.executed[canon].add(frame.f_lineno)  # the def/call line
+        return self._local_for(canon)
+
+    def install(self):
+        threading.settrace(self)
+        sys.settrace(self)
+
+    def uninstall(self):
+        sys.settrace(None)
+        threading.settrace(None)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fail-under", type=float, required=True,
+                    help="minimum aggregate line coverage percent")
+    ap.add_argument("--report", action="store_true",
+                    help="print the per-file table even on success")
+    ap.add_argument("pytest_args", nargs="*",
+                    help="arguments forwarded to pytest (after --)")
+    args = ap.parse_args(argv)
+
+    files = gated_files()
+    targets = {os.path.abspath(f) for f in files}
+    executable = {f: executable_lines(f) for f in files}
+
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    os.chdir(ROOT)
+
+    import pytest  # after path setup, before the tracer goes live
+
+    tracer = Tracer(targets)
+    tracer.install()
+    try:
+        status = pytest.main(args.pytest_args or ["-x", "-q", "-m", "not slow"])
+    finally:
+        tracer.uninstall()
+    if status != 0:
+        print(f"[cov_gate] pytest failed (exit {status}); no coverage verdict")
+        return int(status)
+
+    total_exec = total_cov = 0
+    rows = []
+    for f in files:
+        exe = executable[f]
+        cov = tracer.executed.get(os.path.abspath(f), set()) & exe
+        total_exec += len(exe)
+        total_cov += len(cov)
+        pct = 100.0 * len(cov) / len(exe) if exe else 100.0
+        rows.append((os.path.relpath(f, ROOT), len(cov), len(exe), pct))
+
+    pct_total = 100.0 * total_cov / total_exec if total_exec else 100.0
+    failed = pct_total < args.fail_under
+    if args.report or failed:
+        width = max(len(r[0]) for r in rows)
+        for name, cov, exe, pct in rows:
+            print(f"[cov_gate] {name:<{width}}  {cov:>5}/{exe:<5}  {pct:6.1f}%")
+    print(f"[cov_gate] TOTAL src/repro/{{core,kernels}}: "
+          f"{total_cov}/{total_exec} lines = {pct_total:.1f}% "
+          f"(floor {args.fail_under:.1f}%)")
+    if failed:
+        print("[cov_gate] FAIL: coverage fell below the floor")
+        return 2
+    print("[cov_gate] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
