@@ -1,0 +1,204 @@
+"""Observability overhead benchmark: telemetry + tracing must stay cheap.
+
+Two gates, both parity-checked before any clock starts:
+
+  * **train telemetry** — one jit-compiled ``les.train_step`` with
+    ``telemetry=True`` vs off, interleaved min-of-N with ABBA ordering
+    (``common.time_paired``).  The parity gate asserts the two produce
+    bit-identical parameters first — the benchmark never times a
+    computation that changed results.  The headline number is the
+    overhead **at the default sampling cadence** (``--telemetry-every
+    50``: only every 50th step pays the telemetry cost, so the effective
+    overhead is raw/50) with the raw every-step overhead reported
+    alongside;
+  * **fleet tracing** — a burst of requests through two ``FleetEngine``
+    instances over one shared registry (same compiled plan, so jit cost
+    is paid once at warmup), one with a ``Tracer`` attached and one
+    without, alternating which engine is timed first per round
+    (min-of-N).  The parity gate asserts both return identical labels.
+
+Emits the usual CSV rows on stdout and machine-readable
+``BENCH_obs.json`` in the CWD; the target recorded there is **< 3%
+overhead at default sampling** for telemetry and for tracing.
+
+    PYTHONPATH=src python -m benchmarks.obs_overhead [--quick] [--smoke]
+
+``--smoke`` runs the tiny 8×8 config in seconds — the CI gate
+(tools/ci_check.sh) uses it to keep this path exercised on every commit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_paired, tiny_smoke_cfg
+
+JSON_PATH = "BENCH_obs.json"
+
+# launch/train.py's suggested --telemetry-every cadence: the effective
+# overhead of sampled telemetry is raw/DEFAULT_SAMPLING
+DEFAULT_SAMPLING = 50
+OVERHEAD_TARGET = 0.03  # <3% at default sampling
+
+# (arch, scale, batch) — same CI-feasible paper scales as train_step
+CONFIGS = [
+    ("vgg8b", 0.0625, 16),
+]
+
+
+def _overhead(us_on: float, us_off: float) -> float:
+    return (us_on - us_off) / us_off if us_off else 0.0
+
+
+def _bench_train(cfg, batch: int, iters: int, results: list) -> None:
+    from repro.core import les
+
+    state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-127, 128, (batch, *cfg.input_shape)),
+                    jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.num_classes, batch), jnp.int32)
+    key = jax.random.PRNGKey(2)
+
+    steps = {
+        "telemetry_off": jax.jit(functools.partial(les.train_step, cfg=cfg)),
+        "telemetry_on": jax.jit(functools.partial(
+            les.train_step, cfg=cfg, telemetry=True)),
+    }
+
+    # parity gate: telemetry must not perturb the trajectory
+    st_off, _ = steps["telemetry_off"](state, x=x, labels=labels, key=key)
+    st_on, _, _ = steps["telemetry_on"](state, x=x, labels=labels, key=key)
+    for pv, pr in zip(jax.tree_util.tree_leaves(st_on.params),
+                      jax.tree_util.tree_leaves(st_off.params)):
+        np.testing.assert_array_equal(np.asarray(pv), np.asarray(pr),
+                                      err_msg="telemetry changed the step")
+    del st_off, st_on
+
+    us = time_paired(steps, state, x=x, labels=labels, key=key, iters=iters)
+    raw = _overhead(us["telemetry_on"], us["telemetry_off"])
+    sampled = raw / DEFAULT_SAMPLING
+    emit(f"obs/train/{cfg.name}/telemetry_off", us["telemetry_off"],
+         f"batch {batch}")
+    emit(f"obs/train/{cfg.name}/telemetry_on", us["telemetry_on"],
+         f"raw overhead {raw * 100:.2f}%")
+    emit(f"obs/train/{cfg.name}/overhead", 0.0,
+         f"{sampled * 100:.3f}% at 1/{DEFAULT_SAMPLING} sampling "
+         f"(target <{OVERHEAD_TARGET * 100:.0f}%)")
+    results.append({
+        "kind": "train_telemetry",
+        "arch": cfg.name,
+        "batch": batch,
+        "us_per_step": us,
+        "overhead_raw": raw,
+        "sampling_interval": DEFAULT_SAMPLING,
+        "overhead_at_default_sampling": sampled,
+        "meets_target": sampled < OVERHEAD_TARGET,
+        "bit_exact": True,  # asserted above before timing
+    })
+
+
+def _bench_fleet(cfg, iters: int, requests: int, results: list) -> None:
+    from repro.core import les
+    from repro.infer import freeze
+    from repro.obs import Tracer
+    from repro.serving import FleetEngine, ModelRegistry
+
+    state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+    fm = freeze(state, cfg)
+    registry = ModelRegistry()
+    registry.register("m", fm)
+    rng = np.random.default_rng(3)
+    images = [rng.integers(-127, 128, cfg.input_shape).astype(np.int32)
+              for _ in range(requests)]
+
+    tracer = Tracer()
+    engines = {
+        "trace_off": FleetEngine(registry, batch_size=8),
+        "trace_on": FleetEngine(registry, batch_size=8, tracer=tracer),
+    }
+    try:
+        # warmup (jit compile — the plan is shared, so this pays once)
+        # doubles as the parity gate: tracing must not change results
+        labels = {m: e.classify(images[:8], model="m")
+                  for m, e in engines.items()}
+        assert labels["trace_on"] == labels["trace_off"], \
+            "tracing changed the served labels"
+
+        names = list(engines)
+        best = {m: float("inf") for m in names}
+        for i in range(iters):
+            for m in names if i % 2 == 0 else reversed(names):
+                t0 = time.perf_counter()
+                engines[m].classify(images, model="m")
+                best[m] = min(best[m], (time.perf_counter() - t0) * 1e6)
+    finally:
+        for e in engines.values():
+            e.close()
+
+    raw = _overhead(best["trace_on"], best["trace_off"])
+    emit(f"obs/fleet/{cfg.name}/trace_off", best["trace_off"],
+         f"{requests} requests")
+    emit(f"obs/fleet/{cfg.name}/trace_on", best["trace_on"],
+         f"overhead {raw * 100:.2f}%; {tracer.recorded} spans recorded")
+    results.append({
+        "kind": "fleet_tracing",
+        "arch": cfg.name,
+        "requests": requests,
+        "us_per_burst": best,
+        "overhead": raw,
+        "meets_target": raw < OVERHEAD_TARGET,
+        "spans_recorded": tracer.recorded,
+        "labels_identical": True,  # asserted above before timing
+    })
+
+
+def run(quick: bool = False, smoke: bool = False) -> None:
+    from repro.configs import paper
+
+    iters = 3 if (quick or smoke) else 10
+    requests = 32 if (quick or smoke) else 256
+    results: list[dict] = []
+    if smoke:
+        cfg = tiny_smoke_cfg()
+        _bench_train(cfg, batch=8, iters=iters, results=results)
+        _bench_fleet(cfg, iters=iters, requests=requests, results=results)
+    else:
+        for arch, scale, batch in CONFIGS:
+            cfg = paper.get(arch, scale=scale)
+            _bench_train(cfg, batch=batch, iters=iters, results=results)
+            _bench_fleet(cfg, iters=iters, requests=requests, results=results)
+    payload = {
+        "benchmark": "obs_overhead",
+        "backend": jax.default_backend(),
+        "sampling_interval": DEFAULT_SAMPLING,
+        "overhead_target": OVERHEAD_TARGET,
+        "estimator": (
+            "interleaved min-of-N, ABBA order — co-tenant CPU noise only "
+            "inflates samples, so the per-variant minimum bounds the "
+            "intrinsic cost; telemetry overhead is reported raw "
+            "(every step) and at the default 1/50 sampling cadence, "
+            "which is what launch/train.py --telemetry-every actually "
+            "pays"
+        ),
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("obs/json", 0.0, JSON_PATH)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer timing iters")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config only (CI import-and-run gate)")
+    args = ap.parse_args()
+    run(quick=args.quick, smoke=args.smoke)

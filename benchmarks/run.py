@@ -24,6 +24,7 @@ def main() -> None:
         ablations,
         conv_stream,
         kernel_bench,
+        obs_overhead,
         roofline,
         serve_fleet,
         serve_infer,
@@ -41,6 +42,7 @@ def main() -> None:
         ("conv", lambda: conv_stream.run(quick=q)),
         ("infer", lambda: serve_infer.run(quick=q)),
         ("serve", lambda: serve_fleet.run(quick=q)),
+        ("obs", lambda: obs_overhead.run(quick=q)),
         ("table1", lambda: table1_mlp.run(steps=150 if q else 600)),
         ("table2", lambda: table2_cnn.run(steps=80 if q else 250)),
         ("table8", lambda: table8_lr.run(steps=60 if q else 150)),

@@ -1,12 +1,17 @@
 """End-to-end driver: train a (reduced) VGG8B with NITRO-D for a few
-hundred steps, with checkpoint/restart and straggler monitoring — the
-full production train loop on the paper's flagship architecture.
+hundred steps, with checkpoint/restart, straggler monitoring and
+integer-numerics telemetry — the full production train loop on the
+paper's flagship architecture.
 
     PYTHONPATH=src python examples/train_vgg8b.py [--steps 300] [--scale 0.25]
 
 ``--scale 1.0`` builds the paper's exact VGG8B (128..512 filters); the
 default 0.25 fits a few hundred CPU steps in minutes.  Restarting the
 script resumes from the checkpoint — kill it mid-run to see recovery.
+Every 50th step additionally records per-layer bit-occupancy /
+saturation telemetry to ``metrics.jsonl`` next to the checkpoints
+(``--telemetry-every 0`` to disable; see docs/OBSERVABILITY.md for how
+to read it) — the training trajectory is bitwise identical either way.
 """
 
 import argparse
@@ -20,12 +25,17 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--ckpt-dir", default="/tmp/nitro_vgg8b_ckpt")
+    ap.add_argument("--telemetry-every", type=int, default=50)
     args = ap.parse_args()
 
-    train_nitro(
+    result = train_nitro(
         "vgg8b", steps=args.steps, batch=args.batch,
         ckpt_dir=args.ckpt_dir, dataset="tiles32", scale=args.scale,
+        telemetry_every=args.telemetry_every,
     )
+    if "scaled_loss" in result:
+        print(f"final scaled loss {result['scaled_loss']:.4f} "
+              f"(per-sample RSS in one-hot units)")
 
 
 if __name__ == "__main__":

@@ -169,6 +169,10 @@ def forward_layers(
         a, cache["pool"] = layers.maxpool_forward(a)
     if train and spec.dropout > 0.0:
         a, cache["dropout"] = layers.dropout_forward(dropout_key, a, spec.dropout)
+    # The block output (what feeds the next block) — a reference, not a
+    # copy: ``repro.obs.telemetry`` reads its bit-occupancy when the step
+    # runs with telemetry on; jit DCEs it otherwise.
+    cache["act"] = a
     return a, cache
 
 

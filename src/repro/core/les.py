@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro.core import blocks as B
 from repro.core import model as M
 from repro.core import optimizer as opt
-from repro.core.losses import one_hot_int, rss_grad, rss_loss
+from repro.core.losses import ONE_HOT_VALUE, one_hot_int, rss_grad, rss_loss
 from repro.core.numerics import INT_DTYPE
 
 
@@ -53,6 +53,19 @@ class StepMetrics(NamedTuple):
     correct: jax.Array       # # correct top-1 predictions in the batch
     local_losses: jax.Array  # per-block integer RSS (L,)
 
+    def scaled_loss(self, batch_size: int) -> float:
+        """Display-only per-sample loss in one-hot units: loss / (B·32²).
+
+        The raw integer RSS grows with the batch size and the squared
+        one-hot magnitude (Appendix B.2's 32), which makes progress
+        lines hard to eyeball across configs.  This divides both out —
+        a *host-side float convenience only*: it must be called on a
+        concrete (already-computed) metric outside the jitted step, so
+        the training jaxpr stays float-free (calling it on a tracer
+        raises, by design).
+        """
+        return float(self.loss) / (float(batch_size) * ONE_HOT_VALUE ** 2)
+
 
 def train_step(
     state: TrainState,
@@ -65,7 +78,8 @@ def train_step(
     fuse_bwd: bool = True,
     backend: str = "auto",
     conv_mode: str = "stream",
-) -> tuple[TrainState, StepMetrics]:
+    telemetry: bool = False,
+):
     """One integer-only NITRO-D step over a batch. jit-able (cfg static).
 
     The forward pass runs on the fused kernels by default (the same entry
@@ -78,6 +92,14 @@ def train_step(
     path for the fused forward *and* the conv gradients: ``'stream'``
     (implicit im2col — default) or ``'materialise'`` (explicit HBM patch
     matrices, the historical route).
+
+    ``telemetry=True`` returns ``(state, metrics, telem)`` where
+    ``telem`` is the integer-only numerics-telemetry pytree of
+    ``repro.obs.telemetry`` (per-layer bit-occupancy/saturation, dead
+    units, optimiser scalars).  Telemetry is a pure readout added as an
+    extra jit output: the returned ``TrainState`` trajectory is bitwise
+    identical with it on or off, and the whole jaxpr stays float-free —
+    both test-enforced.
     """
     params = state.params
     y = one_hot_int(labels, cfg.num_classes)
@@ -96,6 +118,7 @@ def train_step(
     # ---- per-block local training (independent → parallel) ----------------
     new_blocks = []
     local_losses = []
+    fw_grads_all = []  # retained for the telemetry readout (DCE'd otherwise)
     for spec, p, a_l, fw_cache in zip(
         cfg.blocks, params["blocks"], acts, fw_caches
     ):
@@ -107,6 +130,7 @@ def train_step(
             p, spec, fw_cache, delta_fw,
             conv_mode=conv_mode, backend=backend, fuse_bwd=fuse_bwd,
         )
+        fw_grads_all.append(fw_grads)
         new_blocks.append(
             {
                 "fw": opt.apply_tree(p["fw"], fw_grads, state.opt_fw),
@@ -120,7 +144,17 @@ def train_step(
         correct=jnp.sum(jnp.argmax(y_hat, axis=-1) == labels),
         local_losses=jnp.stack(local_losses),
     )
-    return state._replace(params=new_params, step=state.step + 1), metrics
+    new_state = state._replace(params=new_params, step=state.step + 1)
+    if telemetry:
+        # lazy import: obs is an optional read-only layer over the core
+        from repro.obs import telemetry as T
+
+        telem = T.collect_train_telemetry(
+            cfg, new_params, fw_caches, fw_grads_all, out_grads,
+            state.opt_lr, state.opt_fw,
+        )
+        return new_state, metrics, telem
+    return new_state, metrics
 
 
 def eval_step(

@@ -77,7 +77,7 @@ def _parse_model_dir(spec: str) -> tuple[str, str]:
     return name, path
 
 
-def _build_registry(args):
+def _build_registry(args, metrics=None):
     """Resolve --fleet-dir / --model-dir / train-and-freeze into a registry."""
     from repro.infer import load_fleet_manifest, save_frozen
     from repro.serving import ModelRegistry
@@ -88,7 +88,7 @@ def _build_registry(args):
     if args.fleet_dir and args.model_dir:
         raise SystemExit("--fleet-dir and --model-dir are mutually "
                          "exclusive — add extra models to FLEET.json")
-    registry = ModelRegistry(backend=args.backend)
+    registry = ModelRegistry(backend=args.backend, metrics=metrics)
     if args.fleet_dir:
         # read FLEET.json exactly once: registering from the parsed dict
         # keeps the printed paths, the splits, and the loaded models all
@@ -147,6 +147,13 @@ def main():
                     help="static scheduler only")
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="expose the serving metrics as Prometheus text "
+                         "at /metrics on this port (0 = pick an ephemeral "
+                         "port and print it)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the engine's batch-lifecycle span trace "
+                         "(JSONL) here")
     args = ap.parse_args()
 
     from repro.serving import (
@@ -159,7 +166,17 @@ def main():
         snapshot_delta,
     )
 
-    registry, manifest_splits = _build_registry(args)
+    metrics = server = tracer = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricRegistry, start_metrics_server
+        metrics = MetricRegistry()
+        server = start_metrics_server(metrics, port=args.metrics_port)
+        print(f"[metrics] Prometheus text at {server.url}")
+    if args.trace_out:
+        from repro.obs import Tracer
+        tracer = Tracer()
+
+    registry, manifest_splits = _build_registry(args, metrics=metrics)
 
     splits = dict(manifest_splits)
     if args.split:
@@ -224,7 +241,8 @@ def main():
         if len(registry.ids()) != 1 or args.split:
             raise SystemExit("--scheduler static serves exactly one model")
         with VisionEngine(first.plan, batch_size=args.batch,
-                          max_wait_ms=args.max_wait_ms) as engine:
+                          max_wait_ms=args.max_wait_ms,
+                          metrics=metrics) as engine:
             engine.classify(images[:1])  # warmup compile outside the clock
             pre = engine.stats.snapshot()
             t0 = time.perf_counter()
@@ -237,7 +255,7 @@ def main():
             }
     else:
         with FleetEngine(registry, batch_size=args.batch,
-                         router=router) as engine:
+                         router=router, tracer=tracer) as engine:
             for mid in registry.ids():  # warmup compiles outside the clock
                 engine.classify([make_image(mid)], model=mid)
             pre = engine.snapshot()
@@ -263,6 +281,25 @@ def main():
           f"avg fill {fleet['avg_batch_fill']:.2f}")
     for mid, mstats in snapshot["models"].items():
         print(f"[serve]   {mid}: {json.dumps(mstats, sort_keys=True)}")
+
+    if tracer is not None:
+        n_spans = tracer.export_jsonl(args.trace_out)
+        print(f"[trace] {n_spans} spans -> {args.trace_out}")
+    if server is not None:
+        # scrape our own endpoint: proves the full HTTP path end-to-end
+        # and shows the headline counters in the run's output
+        from urllib.request import urlopen
+        text = urlopen(server.url, timeout=5).read().decode()
+        samples = [ln for ln in text.splitlines()
+                   if ln and not ln.startswith("#")]
+        print(f"[metrics] scraped {server.url}: {len(samples)} samples")
+        headline = ("serve_requests_total", "serve_queue_depth",
+                    "serve_batch_fill_count", "serve_model_version",
+                    "serve_model_swaps_total")
+        for ln in samples:
+            if ln.startswith(headline):
+                print(f"[metrics]   {ln}")
+        server.close()
 
 
 if __name__ == "__main__":

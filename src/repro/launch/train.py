@@ -25,11 +25,23 @@ import numpy as np
 
 
 def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
-                dataset: str, scale: float, seed: int = 0) -> dict:
-    """Integer-only NITRO-D training (paper algorithm)."""
+                dataset: str, scale: float, seed: int = 0,
+                telemetry_every: int = 0, telemetry_out: str | None = None,
+                trace_out: str | None = None) -> dict:
+    """Integer-only NITRO-D training (paper algorithm).
+
+    ``telemetry_every=N`` runs every N-th step through the
+    telemetry-enabled variant of ``les.train_step`` (bitwise-identical
+    trajectory — sampling cadence changes cost, never results) and
+    appends the per-layer bit-occupancy/saturation records to
+    ``telemetry_out`` (default: ``metrics.jsonl`` next to the
+    checkpoints).  ``trace_out`` writes a span trace of the run's phases
+    (step / checkpoint / eval) as JSONL.
+    """
     from repro.configs import get_paper_config
     from repro.core import les
     from repro.data import synthetic
+    from repro.obs.trace import NULL_TRACER, Tracer
     from repro.train import checkpoint as ckpt
     from repro.train.fault_tolerance import PreemptionGuard, StepTimer, StragglerDetector
 
@@ -51,6 +63,17 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
         print(f"[restore] resumed from step {start_step}")
 
     step_fn = jax.jit(functools.partial(les.train_step, cfg=cfg))
+    telem_step_fn = None
+    if telemetry_every > 0:
+        from repro.obs import telemetry as T
+        # a second jit cache entry, not a recompile of the first: the
+        # trajectory it returns is bitwise-identical (test-enforced)
+        telem_step_fn = jax.jit(
+            functools.partial(les.train_step, cfg=cfg, telemetry=True))
+        if telemetry_out is None:
+            telemetry_out = os.path.join(ckpt_dir or ".", "metrics.jsonl")
+        print(f"[telemetry] every {telemetry_every} steps -> {telemetry_out}")
+    tracer = Tracer() if trace_out else NULL_TRACER
     guard = PreemptionGuard(install=False)
     straggler = StragglerDetector()
     timer = StepTimer()
@@ -61,35 +84,57 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
         for x, y in synthetic.batches(ds.x_train, ds.y_train, batch, seed=it):
             if it >= steps or guard.requested:
                 break
-            state, metrics = step_fn(
-                state, x=jnp.asarray(x), labels=jnp.asarray(y),
-                key=jax.random.PRNGKey(start_step + it),
-            )
+            sampled = telem_step_fn is not None and it % telemetry_every == 0
+            with tracer.span("train.step", step=start_step + it,
+                             telemetry=sampled):
+                if sampled:
+                    state, metrics, telem = telem_step_fn(
+                        state, x=jnp.asarray(x), labels=jnp.asarray(y),
+                        key=jax.random.PRNGKey(start_step + it),
+                    )
+                    T.append_jsonl(telemetry_out, T.to_records(
+                        telem, cfg=cfg, step=start_step + it))
+                else:
+                    state, metrics = step_fn(
+                        state, x=jnp.asarray(x), labels=jnp.asarray(y),
+                        key=jax.random.PRNGKey(start_step + it),
+                    )
             dt = timer.lap()
             if straggler.record(dt):
                 print(f"[straggler] step {it}: {dt:.3f}s vs ewma {straggler.ewma:.3f}s")
             if it % 50 == 0:
                 print(f"step {it:5d}  loss={int(metrics.loss)}  "
+                      f"scaled={metrics.scaled_loss(batch):.4f}  "
                       f"correct={int(metrics.correct)}/{batch}")
             if checkpointer and it > 0 and it % 200 == 0:
-                checkpointer.save(start_step + it, state)
+                with tracer.span("train.checkpoint", step=start_step + it):
+                    checkpointer.save(start_step + it, state)
             it += 1
         if guard.requested:
             break
     if checkpointer:
-        checkpointer.save(start_step + it, state)
-        checkpointer.wait()
+        with tracer.span("train.checkpoint", step=start_step + it,
+                         final=True):
+            checkpointer.save(start_step + it, state)
+            checkpointer.wait()
 
     # test accuracy
     correct = 0
-    for i in range(0, len(ds.x_test) - batch + 1, batch):
-        correct += int(les.eval_step(
-            state, cfg, jnp.asarray(ds.x_test[i:i + batch]),
-            jnp.asarray(ds.y_test[i:i + batch])))
+    with tracer.span("train.eval"):
+        for i in range(0, len(ds.x_test) - batch + 1, batch):
+            correct += int(les.eval_step(
+                state, cfg, jnp.asarray(ds.x_test[i:i + batch]),
+                jnp.asarray(ds.y_test[i:i + batch])))
     n_eval = (len(ds.x_test) // batch) * batch
     acc = correct / max(n_eval, 1)
+    if trace_out:
+        n_spans = tracer.export_jsonl(trace_out)
+        print(f"[trace] {n_spans} spans -> {trace_out}")
     print(f"[done] test accuracy {acc:.4f} over {n_eval} samples")
-    return {"test_accuracy": acc, "steps": it}
+    out = {"test_accuracy": acc, "steps": it}
+    if metrics is not None:
+        out["scaled_loss"] = metrics.scaled_loss(batch)
+    return out
 
 
 def train_lm(arch: str, *, steps: int, batch: int, seq: int, scale: float,
@@ -149,6 +194,14 @@ def main():
     ap.add_argument("--ckpt-dir")
     ap.add_argument("--les-groups", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry-every", type=int, default=0,
+                    help="sample integer-numerics telemetry every N steps "
+                         "(0 = off) into --telemetry-out")
+    ap.add_argument("--telemetry-out",
+                    help="telemetry JSONL path (default: metrics.jsonl "
+                         "next to the checkpoints)")
+    ap.add_argument("--trace-out",
+                    help="write a span trace of the run (JSONL)")
     args = ap.parse_args()
 
     from repro.configs import ARCHS, PAPER_ARCHS
@@ -156,7 +209,10 @@ def main():
     if args.arch in PAPER_ARCHS:
         train_nitro(args.arch, steps=args.steps, batch=args.batch,
                     ckpt_dir=args.ckpt_dir, dataset=args.dataset,
-                    scale=args.scale, seed=args.seed)
+                    scale=args.scale, seed=args.seed,
+                    telemetry_every=args.telemetry_every,
+                    telemetry_out=args.telemetry_out,
+                    trace_out=args.trace_out)
     elif args.arch in ARCHS:
         train_lm(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
                  scale=args.scale, ckpt_dir=args.ckpt_dir,

@@ -1,0 +1,39 @@
+"""repro.obs — observability spine: telemetry, metrics, tracing.
+
+telemetry.py  jit-safe integer-only in-graph reductions computed
+              alongside ``les.train_step(telemetry=True)``: per-layer
+              bit-occupancy histograms, saturation counts, NITRO-ReLU
+              dead units, optimiser-scalar evolution — bitwise-neutral
+              to the training trajectory (test-enforced)
+metrics.py    thread-safe MetricRegistry (counters/gauges/histograms,
+              Prometheus-text + JSONL exposition, HTTP scrape server)
+              — the spine ``serving.stats.EngineStats`` is built on
+trace.py      monotonic-clock span tracer with thread-local nesting,
+              JSONL export, optional jax.profiler bridge — wrapped
+              around train-step phases and the FleetEngine batch
+              lifecycle
+
+Metric catalogue and how-to: docs/OBSERVABILITY.md.
+"""
+
+from repro.obs.metrics import (
+    MetricError,
+    MetricRegistry,
+    MetricsServer,
+    latency_summary_ms,
+    percentile,
+    start_metrics_server,
+)
+from repro.obs.trace import NULL_TRACER, Span, Tracer
+
+__all__ = [
+    "MetricError",
+    "MetricRegistry",
+    "MetricsServer",
+    "NULL_TRACER",
+    "Span",
+    "Tracer",
+    "latency_summary_ms",
+    "percentile",
+    "start_metrics_server",
+]

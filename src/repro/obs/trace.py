@@ -1,0 +1,173 @@
+"""Lightweight span tracing for train + serve hot paths.
+
+A ``Tracer`` records named spans on the monotonic clock
+(``time.monotonic_ns`` — immune to wall-clock steps) with thread-local
+nesting: a span opened inside another span on the same thread carries
+its ``parent_id``, so an exported trace reconstructs the call tree —
+e.g. one ``fleet.batch`` span containing ``assemble`` → ``dispatch`` →
+``fetch`` → ``deliver`` children, or a ``train.step`` span containing a
+``checkpoint`` child.
+
+Design points:
+
+  * **bounded** — spans land in a ``deque(maxlen=capacity)``; a
+    long-lived engine never grows host memory per batch.  ``recorded``
+    counts everything ever finished, so ``recorded - len(snapshot())``
+    is the number of evicted (oldest) spans;
+  * **thread-safe** — each thread keeps its own nesting stack
+    (``threading.local``), the finished-span buffer is lock-protected;
+  * **cheap when off** — ``NULL_TRACER`` is a no-op stand-in with the
+    same surface, so instrumented code reads
+    ``self.tracer.span("assemble")`` unconditionally;
+  * **profiler bridge** — ``annotate=True`` additionally wraps each span
+    in ``jax.profiler.TraceAnnotation`` (when available), making the
+    spans visible inside an XLA profile without a second instrumentation
+    pass.
+
+``export_jsonl`` writes one span per line (ns integers, start-ordered)
+for offline analysis; ``docs/OBSERVABILITY.md`` shows how to read it.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+from contextlib import contextmanager, nullcontext
+from typing import Any, NamedTuple
+
+
+class Span(NamedTuple):
+    """One finished span (times in ns on the monotonic clock)."""
+
+    name: str
+    t_start_ns: int
+    t_end_ns: int
+    span_id: int
+    parent_id: int | None
+    thread: str
+    attrs: dict[str, Any]
+
+    @property
+    def duration_ns(self) -> int:
+        return self.t_end_ns - self.t_start_ns
+
+
+def _trace_annotation_cls():
+    """``jax.profiler.TraceAnnotation`` when importable, else None."""
+    try:
+        from jax.profiler import TraceAnnotation
+        return TraceAnnotation
+    except Exception:  # pragma: no cover — jax always present in this repo
+        return None
+
+
+class Tracer:
+    """Records nested spans; export with ``snapshot()``/``export_jsonl``."""
+
+    def __init__(self, *, capacity: int = 65536, annotate: bool = False):
+        self._lock = threading.Lock()
+        self._spans: deque[Span] = deque(maxlen=capacity)
+        self._local = threading.local()
+        self._next_id = 1
+        self.recorded = 0  # total spans ever finished (incl. evicted)
+        self._annotation = _trace_annotation_cls() if annotate else None
+
+    def _stack(self) -> list[int]:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    @contextmanager
+    def span(self, name: str, **attrs):
+        """Context manager recording one span around its body.
+
+        The span is recorded even when the body raises — a failing batch
+        still shows up in the trace, with its true duration.
+        """
+        stack = self._stack()
+        parent = stack[-1] if stack else None
+        with self._lock:
+            span_id = self._next_id
+            self._next_id += 1
+        stack.append(span_id)
+        bridge = (self._annotation(name) if self._annotation is not None
+                  else nullcontext())
+        t0 = time.monotonic_ns()
+        try:
+            with bridge:
+                yield span_id
+        finally:
+            t1 = time.monotonic_ns()
+            stack.pop()
+            with self._lock:
+                self._spans.append(Span(
+                    name=name, t_start_ns=t0, t_end_ns=t1, span_id=span_id,
+                    parent_id=parent,
+                    thread=threading.current_thread().name, attrs=attrs,
+                ))
+                self.recorded += 1
+
+    def event(self, name: str, **attrs) -> None:
+        """Record an instantaneous (zero-duration) span."""
+        with self.span(name, **attrs):
+            pass
+
+    def snapshot(self) -> list[Span]:
+        """The retained spans, oldest first (a consistent copy)."""
+        with self._lock:
+            return list(self._spans)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans.clear()
+
+    def export_jsonl(self, path: str) -> int:
+        """Write one JSON line per span, start-ordered; returns the count."""
+        spans = sorted(self.snapshot(), key=lambda s: s.t_start_ns)
+        with open(path, "w") as f:
+            for s in spans:
+                f.write(json.dumps({
+                    "name": s.name,
+                    "t_start_ns": s.t_start_ns,
+                    "t_end_ns": s.t_end_ns,
+                    "duration_ns": s.duration_ns,
+                    "span_id": s.span_id,
+                    "parent_id": s.parent_id,
+                    "thread": s.thread,
+                    "attrs": s.attrs,
+                }, sort_keys=True) + "\n")
+        return len(spans)
+
+
+class _NullTracer:
+    """No-op stand-in: same surface as ``Tracer``, near-zero cost.
+
+    Instrumented hot paths hold a tracer unconditionally
+    (``tracer = tracer or NULL_TRACER``) instead of branching at every
+    phase.
+    """
+
+    recorded = 0
+
+    def span(self, name: str, **attrs):
+        return nullcontext(0)
+
+    def event(self, name: str, **attrs) -> None:
+        pass
+
+    def snapshot(self) -> list[Span]:
+        return []
+
+    def clear(self) -> None:
+        pass
+
+    def export_jsonl(self, path: str) -> int:
+        with open(path, "w"):
+            pass
+        return 0
+
+
+NULL_TRACER = _NullTracer()

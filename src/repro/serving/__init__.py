@@ -3,16 +3,19 @@
 engine.py    batched prefill/decode LM engine over the model zoo
 vision.py    static dynamic-batching integer CNN engine over a fused
              repro.infer ExecutionPlan (the NITRO-D deploy path)
-stats.py     shared latency percentiles + thread-safe EngineStats
+stats.py     thread-safe EngineStats over repro.obs.MetricRegistry +
+             re-exported nearest-rank latency percentiles
 registry.py  ModelRegistry: many FrozenModels compiled + hot-swapped
-             under stable model ids, shared padding buffers
+             under stable model ids, shared padding buffers; pass
+             metrics= for scrapeable per-model counters + swap events
 fleet.py     FleetEngine: continuous (double-buffered) batching over
              every registered model — per-model queues, weighted
-             round-robin, deterministic A/B Router
+             round-robin, deterministic A/B Router; queue-depth /
+             batch-fill metrics and per-phase tracer spans
 
 One model, simplest path:  compile_plan → VisionEngine.
 A fleet of models:         ModelRegistry → FleetEngine (+ Router splits).
-Data flow in docs/SERVING.md.
+Data flow in docs/SERVING.md; metric catalogue in docs/OBSERVABILITY.md.
 """
 
 # Lazy re-exports: the LM path (`repro.serving.engine`) deliberately

@@ -47,6 +47,8 @@ from concurrent.futures import Future
 import jax
 import numpy as np
 
+from repro.obs.metrics import MetricRegistry
+from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.registry import ModelEntry, ModelRegistry
 from repro.serving.stats import EngineStats
 from repro.serving.vision import (
@@ -140,6 +142,15 @@ class FleetEngine:
     One daemon worker serves every registered model; per-model queues are
     drained by smooth weighted round-robin and batches are double-
     buffered (assemble N+1 on host while N runs on device).
+
+    Observability: ``metrics`` (defaulting to the registry's shared
+    ``MetricRegistry``, if it has one) adds the fleet-wide counters as
+    ``serve_*_total{model="_fleet"}`` plus a per-model
+    ``serve_queue_depth`` gauge and a ``serve_batch_fill`` histogram
+    (real fraction of every launched batch).  ``tracer`` (an
+    ``obs.Tracer``) records one span per batch-lifecycle phase —
+    assemble / dispatch / fetch / deliver — tagged with the model id;
+    both default to no-ops with zero hot-path cost.
     """
 
     def __init__(
@@ -151,13 +162,37 @@ class FleetEngine:
         weights: dict[str, float] | None = None,
         router: Router | None = None,
         coalesce_ms: float = 1.0,
+        metrics: MetricRegistry | None = None,
+        tracer: Tracer | None = None,
     ):
         self.registry = registry
         self.batch_size = batch_size
         self.queue_depth = queue_depth
         self.coalesce_ms = coalesce_ms
         self.router = router or Router()
-        self.stats = EngineStats()  # fleet-wide; per-model in entry.stats
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        # inherit the registry's shared metrics so a metrics-enabled fleet
+        # needs no extra plumbing; an explicit metrics= still wins
+        self.metrics = metrics if metrics is not None else registry.metrics
+        if self.metrics is not None:
+            # fleet-wide counters join the per-model families under a
+            # reserved label value (a real id can't be empty, "_fleet" is
+            # ours by convention)
+            self.stats = EngineStats(registry=self.metrics,
+                                     labels={"model": "_fleet"})
+            self._depth_gauge = self.metrics.gauge(
+                "serve_queue_depth", "queued requests per model",
+                labels=("model",),
+            )
+            self._fill_hist = self.metrics.histogram(
+                "serve_batch_fill",
+                "real (unpadded) fraction of each launched batch",
+                buckets=(0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0),
+            )
+        else:
+            self.stats = EngineStats()  # fleet-wide; per-model in entry.stats
+            self._depth_gauge = None
+            self._fill_hist = None
         self._weights = dict(weights or {})
         self._wrr: dict[str, float] = {}
         self._queues: dict[str, deque[Request]] = {}
@@ -206,6 +241,8 @@ class FleetEngine:
                 if self._closed:
                     raise RuntimeError("engine is closed")
             q.append(req)
+            if self._depth_gauge is not None:
+                self._depth_gauge.labels(model=model_id).set(len(q))
             self._cond.notify_all()
         return req.future
 
@@ -342,6 +379,8 @@ class FleetEngine:
         """Pop ≤ batch_size requests; caller holds ``self._cond``."""
         q = self._queues[model_id]
         items = [q.popleft() for _ in range(min(len(q), self.batch_size))]
+        if self._depth_gauge is not None:
+            self._depth_gauge.labels(model=model_id).set(len(q))
         self._cond.notify_all()  # free backpressured submitters
         return model_id, items
 
@@ -354,28 +393,33 @@ class FleetEngine:
         the stack fails) would otherwise kill the engine's only worker
         thread and hang every pending future.
         """
-        try:
-            entry: ModelEntry = self.registry.get(model_id)
-            plan = entry.plan  # read once: hot-swap flips this atomically
-            pad = self.registry.pad_buffer(plan.input_shape)
-            batch = assemble_batch(items, pad, self.batch_size)
-        except Exception as e:
-            fail_batch(items, RuntimeError(
-                f"cannot assemble batch for model {model_id!r} "
-                f"(evicted, or replaced with an incompatible model?): {e}"))
-            return None
+        with self.tracer.span("fleet.assemble", model=model_id,
+                              n=len(items)):
+            try:
+                entry: ModelEntry = self.registry.get(model_id)
+                plan = entry.plan  # read once: hot-swap flips atomically
+                pad = self.registry.pad_buffer(plan.input_shape)
+                batch = assemble_batch(items, pad, self.batch_size)
+            except Exception as e:
+                fail_batch(items, RuntimeError(
+                    f"cannot assemble batch for model {model_id!r} "
+                    f"(evicted, or replaced with an incompatible "
+                    f"model?): {e}"))
+                return None
         return entry, items, batch, plan
 
     def _dispatch(self, assembled):
         """Asynchronously launch one assembled batch; returns in-flight
         state (entry, items, device array, t_launch) or None on failure."""
         entry, items, batch, plan = assembled
-        t0 = time.perf_counter()
-        try:
-            dev = plan.logits(batch)  # async dispatch — returns immediately
-        except Exception as e:  # trace/compile-time failure
-            fail_batch(items, e)
-            return None
+        with self.tracer.span("fleet.dispatch", model=entry.model_id,
+                              n=len(items)):
+            t0 = time.perf_counter()
+            try:
+                dev = plan.logits(batch)  # async — returns immediately
+            except Exception as e:  # trace/compile-time failure
+                fail_batch(items, e)
+                return None
         return entry, items, dev, t0
 
     def _fetch(self, inflight):
@@ -388,11 +432,12 @@ class FleetEngine:
         misattribute seconds to requests already finished on device.
         """
         entry, items, dev, t0 = inflight
-        try:
-            logits = np.asarray(jax.device_get(dev))
-        except Exception as e:  # runtime failure surfaces at the fetch
-            fail_batch(items, e)
-            return None
+        with self.tracer.span("fleet.fetch", model=entry.model_id):
+            try:
+                logits = np.asarray(jax.device_get(dev))
+            except Exception as e:  # runtime failure surfaces at the fetch
+                fail_batch(items, e)
+                return None
         return entry, items, logits, t0, time.perf_counter()
 
     def _deliver(self, fetched) -> None:
@@ -403,9 +448,12 @@ class FleetEngine:
         """
         entry, items, logits, t0, t_done = fetched
         n = len(items)
-        entry.stats.record_batch(n, self.batch_size - n, t_done - t0)
-        self.stats.record_batch(n, self.batch_size - n, t_done - t0)
-        resolve_batch(items, logits, t_done)
+        with self.tracer.span("fleet.deliver", model=entry.model_id, n=n):
+            entry.stats.record_batch(n, self.batch_size - n, t_done - t0)
+            self.stats.record_batch(n, self.batch_size - n, t_done - t0)
+            if self._fill_hist is not None:
+                self._fill_hist.observe(n / self.batch_size)
+            resolve_batch(items, logits, t_done)
 
     def _serve_loop(self):
         # The pipeline keeps exactly ONE batch executing at any moment and

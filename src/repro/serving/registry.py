@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.infer.export import FrozenModel, load_fleet_manifest, load_frozen
 from repro.infer.plan import ExecutionPlan, compile_plan
+from repro.obs.metrics import MetricRegistry
 from repro.serving.stats import EngineStats
 
 
@@ -55,13 +56,50 @@ class ModelEntry:
 
 
 class ModelRegistry:
-    """Thread-safe model-id → ModelEntry table with shared pad buffers."""
+    """Thread-safe model-id → ModelEntry table with shared pad buffers.
 
-    def __init__(self, *, backend: str = "auto"):
+    Pass ``metrics=`` (a shared ``obs.MetricRegistry``) and the registry
+    becomes scrapeable: each model's ``EngineStats`` registers as
+    ``serve_*_total{model=<id>}`` children of the shared families, and
+    lifecycle events surface as ``serve_model_swaps_total`` /
+    ``serve_model_version`` / ``serve_model_events_total`` — the signals
+    ``serve_vision --metrics-port`` exposes at ``/metrics``.
+    """
+
+    def __init__(self, *, backend: str = "auto",
+                 metrics: MetricRegistry | None = None):
         self.backend = backend
+        self.metrics = metrics
         self._lock = threading.RLock()
         self._entries: dict[str, ModelEntry] = {}
         self._pads: dict[tuple[int, ...], np.ndarray] = {}
+        if metrics is not None:
+            self._swaps = metrics.counter(
+                "serve_model_swaps_total",
+                "checkpoint hot-swaps under a stable model id",
+                labels=("model",),
+            )
+            self._version = metrics.gauge(
+                "serve_model_version",
+                "version of the checkpoint currently answering a model id",
+                labels=("model",),
+            )
+            self._events = metrics.counter(
+                "serve_model_events_total",
+                "model lifecycle events (register / swap / evict)",
+                labels=("event", "model"),
+            )
+
+    def _make_stats(self, model_id: str) -> EngineStats:
+        if self.metrics is None:
+            return EngineStats()
+        return EngineStats(registry=self.metrics,
+                           labels={"model": model_id})
+
+    def _record_event(self, event: str, entry: ModelEntry) -> None:
+        if self.metrics is not None:
+            self._events.labels(event=event, model=entry.model_id).inc()
+            self._version.labels(model=entry.model_id).set(entry.version)
 
     # ---- lifecycle --------------------------------------------------------
 
@@ -77,9 +115,11 @@ class ModelRegistry:
                     f"model id {model_id!r} already registered — "
                     f"use swap() to hot-swap its checkpoint"
                 )
-            entry = ModelEntry(model_id=model_id, plan=plan)
+            entry = ModelEntry(model_id=model_id, plan=plan,
+                               stats=self._make_stats(model_id))
             self._entries[model_id] = entry
             self._pad_for(plan.input_shape)
+        self._record_event("register", entry)
         return entry
 
     def load(self, model_id: str, model_dir: str, *,
@@ -110,12 +150,16 @@ class ModelRegistry:
             entry.plan = plan
             entry.version += 1
             self._pad_for(plan.input_shape)
+        if self.metrics is not None:
+            self._swaps.labels(model=model_id).inc()
+        self._record_event("swap", entry)
         return entry
 
     def evict(self, model_id: str) -> None:
         with self._lock:
-            self._require(model_id)
+            entry = self._require(model_id)
             del self._entries[model_id]
+        self._record_event("evict", entry)
 
     # ---- lookup -----------------------------------------------------------
 
@@ -172,11 +216,12 @@ class ModelRegistry:
         return pad
 
     @classmethod
-    def from_manifest(cls, root: str, *,
-                      backend: str = "auto") -> "ModelRegistry":
+    def from_manifest(cls, root: str, *, backend: str = "auto",
+                      metrics: MetricRegistry | None = None,
+                      ) -> "ModelRegistry":
         """Build a registry from an on-disk ``FLEET.json`` directory."""
         manifest = load_fleet_manifest(root)
-        reg = cls(backend=backend)
+        reg = cls(backend=backend, metrics=metrics)
         for model_id, model_dir in sorted(manifest["models"].items()):
             reg.load(model_id, model_dir)
         return reg

@@ -1,36 +1,44 @@
 """Shared serving statistics: latency percentiles + thread-safe counters.
 
-One home for the percentile math that was previously duplicated across
-``benchmarks/serve_infer.py`` and the ``serve_vision`` CLI, plus the
-``EngineStats`` record shared by the static ``VisionEngine`` and the
-continuous-batching ``FleetEngine``.
+Since the ``repro.obs`` observability layer landed, this module is the
+serving-facing veneer over ``obs.metrics``: the percentile helpers are
+re-exported from there (one nearest-rank implementation for the whole
+repo) and ``EngineStats`` is built on a ``MetricRegistry`` — the same
+counters that ``serve_vision --metrics-port`` exposes over Prometheus
+text.
+
+``EngineStats`` keeps its historical surface (``requests`` /
+``batches`` / ``padded_slots`` reads, ``record_batch``, ``snapshot()``)
+so engines and benchmarks are unchanged.  Two modes:
+
+  * standalone (default): a private registry per instance — exactly the
+    old behaviour;
+  * shared: pass ``registry=`` + ``labels=`` and the counters become
+    children of the shared families (``serve_requests_total{model=…}``
+    etc.), which is how ``ModelRegistry`` folds every model's stats into
+    one scrapeable registry.
 
 ``EngineStats`` is written from an engine's worker thread while clients
-read it concurrently, so every mutation goes through ``record_batch``
-(one lock acquisition per *batch*, not per request — negligible next to
-a device launch) and readers take a consistent copy via ``snapshot()``.
+read it concurrently: ``record_batch`` holds the registry lock across
+all its updates (one acquisition per *batch*, not per request —
+negligible next to a device launch), so ``snapshot()`` — which takes the
+same lock — never observes a half-applied batch.
 """
 
 from __future__ import annotations
 
-import threading
-from collections import deque
+from repro.obs.metrics import (  # noqa: F401 — historical re-export home
+    PERCENTILES,
+    MetricRegistry,
+    latency_summary_ms,
+    percentile,
+)
 
-# Percentiles every serving surface reports, as (label, quantile).
-PERCENTILES = (("p50", 0.50), ("p90", 0.90), ("p95", 0.95), ("p99", 0.99))
-
-
-def percentile(sorted_vals, q: float) -> float:
-    """Nearest-rank percentile of an ascending-sorted sequence (0 if empty)."""
-    if not sorted_vals:
-        return 0.0
-    return sorted_vals[min(int(q * len(sorted_vals)), len(sorted_vals) - 1)]
-
-
-def latency_summary_ms(latencies_s) -> dict[str, float]:
-    """Unsorted per-request latencies in seconds → {p50,p90,p95,p99} in ms."""
-    lats = sorted(latencies_s)
-    return {label: percentile(lats, q) * 1e3 for label, q in PERCENTILES}
+# Metric-family names EngineStats registers (shared across every scope).
+REQUESTS_TOTAL = "serve_requests_total"
+BATCHES_TOTAL = "serve_batches_total"
+PADDED_SLOTS_TOTAL = "serve_padded_slots_total"
+BATCH_LATENCY_SECONDS = "serve_batch_latency_seconds"
 
 
 def snapshot_delta(pre: dict, post: dict) -> dict:
@@ -70,39 +78,72 @@ def fleet_snapshot_delta(pre: dict, post: dict) -> dict:
 class EngineStats:
     """Thread-safe per-engine (or per-model) serving counters.
 
-    The public counter attributes (``requests``, ``batches``,
-    ``padded_slots``) stay plain ints for cheap reads; ``snapshot()``
-    is the consistent view — it holds the same lock ``record_batch``
-    writes under, so a snapshot never observes a half-applied batch.
+    Backed by ``obs.metrics`` families; ``snapshot()`` is the consistent
+    view — it holds the same lock ``record_batch`` writes under, so a
+    snapshot never observes a half-applied batch.
     """
 
-    def __init__(self, *, latency_window: int = 1024):
-        self._lock = threading.Lock()
-        self.requests = 0
-        self.batches = 0
-        self.padded_slots = 0
-        # bounded: a long-lived engine must not grow host memory per batch
-        self.batch_latency_s: deque = deque(maxlen=latency_window)
+    def __init__(self, *, latency_window: int = 1024,
+                 registry: MetricRegistry | None = None,
+                 labels: dict[str, str] | None = None):
+        if registry is None and labels:
+            raise ValueError("labels require a shared registry")
+        self.registry = registry or MetricRegistry()
+        labels = dict(labels or {})
+        names = tuple(sorted(labels))
+        reg = self.registry
+        self._requests = reg.counter(
+            REQUESTS_TOTAL, "requests answered", labels=names).labels(**labels)
+        self._batches = reg.counter(
+            BATCHES_TOTAL, "device batches launched", labels=names,
+        ).labels(**labels)
+        self._padded = reg.counter(
+            PADDED_SLOTS_TOTAL, "zero-padded batch slots", labels=names,
+        ).labels(**labels)
+        # bounded window: a long-lived engine must not grow host memory
+        self._latency = reg.histogram(
+            BATCH_LATENCY_SECONDS, "per-batch device latency", labels=names,
+            window=latency_window,
+        ).labels(**labels)
 
     def record_batch(self, n: int, padded: int, latency_s: float) -> None:
-        with self._lock:
-            self.requests += n
-            self.batches += 1
-            self.padded_slots += padded
-            self.batch_latency_s.append(latency_s)
+        with self.registry.lock:  # re-entrant: one atomic multi-metric update
+            self._requests.inc(n)
+            self._batches.inc()
+            self._padded.inc(padded)
+            self._latency.observe(latency_s)
+
+    @property
+    def requests(self) -> int:
+        return self._requests.value
+
+    @property
+    def batches(self) -> int:
+        return self._batches.value
+
+    @property
+    def padded_slots(self) -> int:
+        return self._padded.value
+
+    @property
+    def batch_latency_s(self):
+        """The bounded latency-sample window (read-only compat view)."""
+        return self._latency.window
 
     @property
     def avg_batch_fill(self) -> float:
-        total = self.requests + self.padded_slots
-        return self.requests / total if total else 0.0
+        with self.registry.lock:
+            requests, padded = self._requests.value, self._padded.value
+        total = requests + padded
+        return requests / total if total else 0.0
 
     def snapshot(self) -> dict:
         """Consistent JSON-ready view: counters + batch-latency percentiles."""
-        with self._lock:
-            requests = self.requests
-            batches = self.batches
-            padded = self.padded_slots
-            lats = list(self.batch_latency_s)
+        with self.registry.lock:
+            requests = self._requests.value
+            batches = self._batches.value
+            padded = self._padded.value
+            lats = list(self._latency.window)
         total = requests + padded
         return {
             "requests": requests,

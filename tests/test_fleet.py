@@ -111,8 +111,11 @@ class TestStats:
         vals = [1.0, 2.0, 3.0, 4.0]
         assert percentile([], 0.5) == 0.0
         assert percentile(vals, 0.0) == 1.0
-        assert percentile(vals, 0.5) == 3.0
+        # nearest-rank: the ceil(q·n)-th smallest — the median of 4 is
+        # the 2nd value (the former floor-rank version returned the 3rd)
+        assert percentile(vals, 0.5) == 2.0
         assert percentile(vals, 0.99) == 4.0
+        assert percentile(vals, 1.0) == 4.0
 
     def test_latency_summary_keys_and_units(self):
         out = latency_summary_ms([0.001, 0.002, 0.003])

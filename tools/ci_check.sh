@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Quick CI gate: the tier-1 test command (minus slow integration tests)
-# run under a line-coverage floor for src/repro/{core,kernels}, plus
-# kernel / fused-training / fleet-serving benchmark smokes, a serve-CLI
-# smoke, and a docs link check.  Run from anywhere.
+# run under a line-coverage floor for src/repro/{core,kernels,obs}, plus
+# kernel / fused-training / fleet-serving / observability benchmark
+# smokes, a serve-CLI smoke (with a live /metrics endpoint), and a docs
+# link check.  Run from anywhere.
 #
 #   tools/ci_check.sh          # quick gate
 #   FULL=1 tools/ci_check.sh   # include slow integration tests (tier-1 exact)
@@ -25,7 +26,7 @@ if [[ "${FULL:-0}" == "1" ]]; then
     python -m pytest -x -q
 elif python -c "import pytest_cov" 2>/dev/null; then
     python -m pytest -x -q -m "not slow" \
-        --cov=repro.core --cov=repro.kernels \
+        --cov=repro.core --cov=repro.kernels --cov=repro.obs \
         --cov-fail-under="$COV_FLOOR"
 else
     python tools/cov_gate.py --fail-under "$COV_FLOOR" -- -x -q -m "not slow"
@@ -35,6 +36,7 @@ python -m benchmarks.run --quick --only kernel
 python -m benchmarks.train_step --smoke
 python -m benchmarks.conv_stream --smoke
 python -m benchmarks.serve_fleet --smoke
+python -m benchmarks.obs_overhead --smoke
 python -m repro.launch.serve_vision --train-steps 0 --scale 0.0625 \
-    --backend reference --requests 24 --batch 8
+    --backend reference --requests 24 --batch 8 --metrics-port 0
 echo "[ci_check] OK"

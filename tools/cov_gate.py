@@ -1,11 +1,12 @@
 #!/usr/bin/env python
-"""Line-coverage gate for ``src/repro/core`` + ``src/repro/kernels``.
+"""Line-coverage gate for ``src/repro/{core,kernels,obs}``.
 
 ``tools/ci_check.sh`` prefers **pytest-cov** (see requirements-dev.txt)
 when it is importable:
 
     python -m pytest -q -m "not slow" \
-        --cov=repro.core --cov=repro.kernels --cov-fail-under=<floor>
+        --cov=repro.core --cov=repro.kernels --cov=repro.obs \
+        --cov-fail-under=<floor>
 
 This script is the dependency-free fallback for containers where
 pytest-cov cannot be installed (this repo's CI image has no network
@@ -15,6 +16,10 @@ lives in a gated file, so the rest of the suite pays one dict lookup per
 function call — runs pytest in-process, and enforces the same floor.
 
     python tools/cov_gate.py --fail-under 80 [--report] -- -x -q -m "not slow"
+
+``--pkg repro/core`` (repeatable) overrides the gated package set;
+overlapping specs (e.g. ``repro`` plus ``repro/core``) are deduplicated
+at the file level, so a file is never counted twice in the aggregate.
 
 Executable lines are derived from the compiled code objects
 (``co_lines`` over the module's nested code-object tree), so the
@@ -32,17 +37,23 @@ import threading
 from collections import defaultdict
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-GATED_DIRS = (
-    os.path.join(ROOT, "src", "repro", "core"),
-    os.path.join(ROOT, "src", "repro", "kernels"),
-)
+DEFAULT_PKGS = ("repro/core", "repro/kernels", "repro/obs")
 
 
-def gated_files() -> list[str]:
-    files = []
-    for d in GATED_DIRS:
+def gated_files(pkgs=DEFAULT_PKGS) -> list[str]:
+    """Every .py under the gated packages, deduplicated.
+
+    ``pkgs`` are src/-relative package dirs; the set() collapses files
+    reachable through several overlapping specs so the aggregate never
+    double-counts a line.
+    """
+    files: set[str] = set()
+    for pkg in pkgs:
+        d = os.path.join(ROOT, "src", *pkg.split("/"))
+        if not os.path.isdir(d):
+            raise SystemExit(f"[cov_gate] no such package dir: {d}")
         for dirpath, _, names in os.walk(d):
-            files.extend(
+            files.update(
                 os.path.join(dirpath, n) for n in names if n.endswith(".py")
             )
     return sorted(files)
@@ -115,11 +126,16 @@ def main(argv=None) -> int:
                     help="minimum aggregate line coverage percent")
     ap.add_argument("--report", action="store_true",
                     help="print the per-file table even on success")
+    ap.add_argument("--pkg", action="append", metavar="REL",
+                    help="src/-relative package dir to gate (repeatable; "
+                         f"default: {' '.join(DEFAULT_PKGS)})")
     ap.add_argument("pytest_args", nargs="*",
                     help="arguments forwarded to pytest (after --)")
     args = ap.parse_args(argv)
 
-    files = gated_files()
+    # dict.fromkeys: dedupe repeated --pkg specs, keep the given order
+    pkgs = tuple(dict.fromkeys(args.pkg or DEFAULT_PKGS))
+    files = gated_files(pkgs)
     targets = {os.path.abspath(f) for f in files}
     executable = {f: executable_lines(f) for f in files}
 
@@ -154,7 +170,7 @@ def main(argv=None) -> int:
         width = max(len(r[0]) for r in rows)
         for name, cov, exe, pct in rows:
             print(f"[cov_gate] {name:<{width}}  {cov:>5}/{exe:<5}  {pct:6.1f}%")
-    print(f"[cov_gate] TOTAL src/repro/{{core,kernels}}: "
+    print(f"[cov_gate] TOTAL {'+'.join('src/' + p for p in pkgs)}: "
           f"{total_cov}/{total_exec} lines = {pct_total:.1f}% "
           f"(floor {args.fail_under:.1f}%)")
     if failed:
