@@ -1,0 +1,181 @@
+"""Data-parallel scaling benchmark: per-step time vs device count.
+
+Times one jit-compiled training step at device counts {1, 2, 4} — the
+single-device ``les.train_step`` baseline against the sharded
+``dp.dp_train_step`` under each reducer (``psum`` / ``ring`` /
+``compress``).  Because forced host devices only exist if ``XLA_FLAGS``
+is set before backend init, each device count runs in a *worker
+subprocess* (``--worker``); the parent aggregates.
+
+Before timing, every variant is **parity-gated**: one step of each
+reducer must produce bitwise-identical parameters to the single-device
+step on the full batch (the suite's core claim — the benchmark never
+times two computations that disagree).  Timing is interleaved min-of-N
+with ABBA ordering (``common.time_paired``): co-tenant CPU noise only
+inflates samples, so the per-variant minimum bounds the intrinsic cost.
+
+On CPU host devices the "scaling" is honest about being a *semantics*
+demo: shards share the same socket, so don't expect linear speedup —
+the interesting outputs are the reducer overheads relative to psum and
+the parity gate itself.  Real scaling needs real chips; the numbers
+here track the *relative* cost of the three exact reduction schedules.
+
+Emits ``name,us_per_call,derived`` CSV rows and ``BENCH_parallel.json``.
+
+    PYTHONPATH=src python -m benchmarks.dp_scaling [--quick] [--smoke]
+
+``--smoke`` (tiny config, devices {1, 2}) is the CI import-and-run gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+JSON_PATH = "BENCH_parallel.json"
+
+# (config name, batch) — batch must divide by every device count
+CONFIGS = [("tiny", 8), ("vgg8b", 16)]
+DEVICE_COUNTS = [1, 2, 4]
+
+
+def _build(config: str, batch: int):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import tiny_smoke_cfg
+    from repro.core import les
+
+    if config == "tiny":
+        cfg = tiny_smoke_cfg()
+    else:
+        from repro.configs import paper
+        cfg = paper.get("vgg8b", scale=0.0625, input_shape=(16, 16, 3))
+    state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-127, 128, (batch, *cfg.input_shape)),
+                    jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.num_classes, batch), jnp.int32)
+    return cfg, state, x, labels
+
+
+def _worker(out_path: str, config: str, batch: int, devices: int,
+            iters: int) -> None:
+    """Runs inside a subprocess whose XLA_FLAGS already forced ``devices``
+    host devices; writes the timing dict as JSON to ``out_path``."""
+    import functools
+
+    import jax
+    import numpy as np
+
+    from benchmarks.common import time_paired
+    from repro.core import les
+    from repro.parallel import dp
+
+    assert jax.device_count() == devices, (jax.device_count(), devices)
+    cfg, state, x, labels = _build(config, batch)
+    key = jax.random.PRNGKey(2)
+
+    steps = {"single": jax.jit(functools.partial(les.train_step, cfg=cfg))}
+    mesh = dp.data_mesh(devices)
+    for reducer in dp.REDUCERS:
+        steps[reducer] = dp.make_dp_train_step(cfg, mesh, dp_reduce=reducer)
+
+    # parity gate: every reducer's post-step params ≡ the single-device step
+    ref = jax.tree_util.tree_leaves(
+        steps["single"](state, x=x, labels=labels, key=key)[0].params)
+    for reducer in dp.REDUCERS:
+        got = jax.tree_util.tree_leaves(
+            steps[reducer](state, x=x, labels=labels, key=key)[0].params)
+        for a, b in zip(got, ref):
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{reducer} @ {devices}dev")
+
+    us = time_paired(steps, state, x=x, labels=labels, key=key, iters=iters)
+    with open(out_path, "w") as f:
+        json.dump({"us_per_step": us, "bit_exact": True}, f)
+
+
+def run(quick: bool = False, smoke: bool = False) -> None:
+    from benchmarks.common import emit
+
+    iters = 3 if (quick or smoke) else 10
+    configs = [("tiny", 8)] if smoke else CONFIGS
+    device_counts = [1, 2] if smoke else DEVICE_COUNTS
+    results: list[dict] = []
+    for config, batch in configs:
+        base_us = None
+        for devices in device_counts:
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = (
+                env.get("XLA_FLAGS", "").replace(
+                    "--xla_force_host_platform_device_count", "--removed") +
+                f" --xla_force_host_platform_device_count={devices}"
+            ).strip()
+            with tempfile.NamedTemporaryFile(suffix=".json",
+                                             delete=False) as tf:
+                out_path = tf.name
+            try:
+                proc = subprocess.run(
+                    [sys.executable, "-m", "benchmarks.dp_scaling",
+                     "--worker", "--out", out_path, "--config", config,
+                     "--batch", str(batch), "--devices", str(devices),
+                     "--iters", str(iters)],
+                    env=env, capture_output=True, text=True, timeout=1800)
+                if proc.returncode != 0:
+                    raise RuntimeError(
+                        f"dp_scaling worker ({config}, {devices}dev) "
+                        f"failed:\n{proc.stdout}\n{proc.stderr}")
+                with open(out_path) as f:
+                    us = json.load(f)["us_per_step"]
+            finally:
+                os.unlink(out_path)
+            if base_us is None:
+                base_us = us["single"]
+            for variant, t in sorted(us.items()):
+                emit(f"parallel/{config}/{devices}dev/{variant}", t,
+                     f"batch {batch}; {base_us / t:.2f}x vs 1dev single")
+            results.append({
+                "config": config, "devices": devices, "batch": batch,
+                "us_per_step": us,
+                "speedup_vs_single_1dev":
+                    {m: base_us / t for m, t in us.items()},
+                "bit_exact": True,  # parity-gated in the worker
+            })
+    payload = {
+        "benchmark": "dp_scaling",
+        "reducers": ["psum", "ring", "compress"],
+        "timing": "interleaved min-of-N (ABBA) per worker subprocess; "
+                  "every reducer parity-gated bitwise against the "
+                  "single-device step before timing",
+        "note": "CPU host devices share one socket — relative reducer "
+                "cost is meaningful, absolute scaling needs real chips",
+        "results": results,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("parallel/json", 0.0, JSON_PATH)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer timing iters")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, 1-2 devices (CI gate)")
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--out")
+    ap.add_argument("--config", default="tiny")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args()
+    if args.worker:
+        _worker(args.out, args.config, args.batch, args.devices, args.iters)
+    else:
+        run(quick=args.quick, smoke=args.smoke)

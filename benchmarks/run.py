@@ -23,6 +23,7 @@ def main() -> None:
     from benchmarks import (
         ablations,
         conv_stream,
+        dp_scaling,
         kernel_bench,
         obs_overhead,
         roofline,
@@ -43,6 +44,7 @@ def main() -> None:
         ("infer", lambda: serve_infer.run(quick=q)),
         ("serve", lambda: serve_fleet.run(quick=q)),
         ("obs", lambda: obs_overhead.run(quick=q)),
+        ("parallel", lambda: dp_scaling.run(quick=q)),
         ("table1", lambda: table1_mlp.run(steps=150 if q else 600)),
         ("table2", lambda: table2_cnn.run(steps=80 if q else 250)),
         ("table8", lambda: table8_lr.run(steps=60 if q else 150)),

@@ -117,6 +117,8 @@ def forward_layers(
     fused: bool = True,
     backend: str = "auto",
     conv_mode: str = "stream",
+    dp_axis: str | None = None,
+    dp_shards: int = 1,
 ) -> tuple[jax.Array, dict]:
     """Run a block's forward layers; cache everything backward needs.
 
@@ -134,6 +136,11 @@ def forward_layers(
 
     The cache contract is identical in all modes (``z_star`` + the
     layer input), so ``forward_layers_backward`` is unchanged.
+
+    ``dp_axis``/``dp_shards`` (a shard_map axis name + its static size)
+    make IntegerDropout draw the global-batch mask and slice this
+    shard's rows — see ``layers.dropout_forward``; no other layer
+    samples, so nothing else needs them.
     """
     cache: dict[str, Any] = {}
     if spec.kind == "conv":
@@ -168,7 +175,9 @@ def forward_layers(
     if spec.pool:
         a, cache["pool"] = layers.maxpool_forward(a)
     if train and spec.dropout > 0.0:
-        a, cache["dropout"] = layers.dropout_forward(dropout_key, a, spec.dropout)
+        a, cache["dropout"] = layers.dropout_forward(
+            dropout_key, a, spec.dropout, dp_axis=dp_axis, dp_shards=dp_shards,
+        )
     # The block output (what feeds the next block) — a reference, not a
     # copy: ``repro.obs.telemetry`` reads its bit-occupancy when the step
     # runs with telemetry on; jit DCEs it otherwise.

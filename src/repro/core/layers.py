@@ -267,13 +267,25 @@ class DropoutCache(NamedTuple):
 
 
 def dropout_forward(
-    key: jax.Array, x: jax.Array, rate: float
+    key: jax.Array, x: jax.Array, rate: float,
+    *, dp_axis: str | None = None, dp_shards: int = 1,
 ) -> tuple[jax.Array, DropoutCache]:
     """Integer inverted dropout.
 
     The float 1/(1−p) rescale becomes a fixed-point multiply-then-shift:
     q = round(256/(1−p)); out = (x·mask·q) >> 8.  Expectation is preserved to
     <0.4 % while staying in ℤ.  rate == 0 is the identity.
+
+    Dropout is the one sampled operation in the training step, so it is
+    also the one place batch sharding could break bitwise determinism:
+    ``jax.random.bits(key, (B/n, ...))`` on a shard is *not* a row-slice
+    of ``bits(key, (B, ...))`` on the full batch.  Under data parallelism
+    (``dp_axis`` names the active shard_map axis, ``dp_shards`` its
+    static size) every shard therefore draws the **global-batch** mask
+    from the shared key and slices its own row block by
+    ``lax.axis_index`` — identical masks to the single-device run at any
+    device count, test-enforced.  The redundant per-shard mask generation
+    is threefry on uint32, a negligible slice of step cost.
     """
     if rate <= 0.0:
         return x, DropoutCache(mask=jnp.ones((), numerics.INT_DTYPE), q=1 << _DROPOUT_FP_BITS)
@@ -282,7 +294,15 @@ def dropout_forward(
     # Integer Bernoulli: uniform uint32 bits < ⌊keep·2³²⌋ — keeps the whole
     # training step free of float ops (the jaxpr is asserted float-free).
     threshold = jnp.uint32(min(int(keep * (1 << 32)), (1 << 32) - 1))
-    bits = jax.random.bits(key, x.shape, jnp.uint32)
+    if dp_axis is not None and dp_shards > 1:
+        local_b = x.shape[0]
+        bits = jax.random.bits(
+            key, (local_b * dp_shards, *x.shape[1:]), jnp.uint32
+        )
+        start = jax.lax.axis_index(dp_axis) * local_b
+        bits = jax.lax.dynamic_slice_in_dim(bits, start, local_b, axis=0)
+    else:
+        bits = jax.random.bits(key, x.shape, jnp.uint32)
     mask = (bits < threshold).astype(numerics.INT_DTYPE)
     out = floor_div(x * mask * q, 1 << _DROPOUT_FP_BITS)
     return out, DropoutCache(mask=mask, q=q)

@@ -48,6 +48,28 @@ def create_train_state(key: jax.Array, cfg: M.NitroConfig) -> TrainState:
     )
 
 
+class StepGrads(NamedTuple):
+    """Raw integer gradients of one step, pre-optimiser.
+
+    Same structure as ``TrainState.params``: ``blocks`` is a tuple of
+    ``{"fw": ..., "lr": ...}`` gradient dicts, ``output`` the output-layer
+    gradient dict.  This is the pytree a data-parallel step all-reduces
+    between ``compute_gradients`` and ``apply_gradients`` — int32
+    summation is exact and order-invariant, so the reduction point is
+    also the bitwise-determinism point (see ``repro.parallel.dp``).
+    """
+
+    blocks: tuple
+    output: dict
+
+
+class StepAux(NamedTuple):
+    """Non-gradient byproducts of ``compute_gradients`` that the
+    telemetry readout consumes (jit DCEs them otherwise)."""
+
+    fw_caches: tuple
+
+
 class StepMetrics(NamedTuple):
     loss: jax.Array          # integer RSS of the output layers
     correct: jax.Array       # # correct top-1 predictions in the batch
@@ -67,6 +89,94 @@ class StepMetrics(NamedTuple):
         return float(self.loss) / (float(batch_size) * ONE_HOT_VALUE ** 2)
 
 
+def compute_gradients(
+    state: TrainState,
+    cfg: M.NitroConfig,
+    x: jax.Array,
+    labels: jax.Array,
+    key: jax.Array,
+    *,
+    fused: bool = True,
+    fuse_bwd: bool = True,
+    backend: str = "auto",
+    conv_mode: str = "stream",
+    dp_axis: str | None = None,
+    dp_shards: int = 1,
+) -> tuple[StepGrads, StepMetrics, StepAux]:
+    """Forward + backward over a batch — raw gradients, no parameter update.
+
+    This is the first half of ``train_step``, split out so a data-parallel
+    step (``repro.parallel.dp``) can all-reduce the integer gradients
+    between gradient computation and the IntegerSGD update.  The returned
+    ``StepGrads``/``StepMetrics`` are *sums over the batch this call saw*:
+    summing them across batch shards (exact int32 addition) reproduces
+    the full-batch values bit-for-bit, which is what makes integer data
+    parallelism bitwise-deterministic at any device count.
+
+    ``dp_axis``/``dp_shards`` describe the data-parallel context this
+    call runs in (a ``shard_map`` axis name and its size).  They exist
+    solely so IntegerDropout draws the *global-batch* mask and slices
+    this shard's rows — the one sampled operation whose per-shard
+    evaluation would otherwise diverge from the single-device run.
+    Outside shard_map leave them at their defaults.
+    """
+    params = state.params
+    y = one_hot_int(labels, cfg.num_classes)
+
+    # ---- forward ----------------------------------------------------------
+    y_hat, acts, fw_caches, out_cache = M.forward(
+        params, cfg, x, train=True, key=key, fused=fused, backend=backend,
+        conv_mode=conv_mode, dp_axis=dp_axis, dp_shards=dp_shards,
+    )
+
+    # ---- output layers ----------------------------------------------------
+    grad_o = rss_grad(y_hat, y)
+    out_grads = B.output_backward(params["output"], out_cache, grad_o)
+
+    # ---- per-block local gradients (independent → parallel) ---------------
+    block_grads = []
+    local_losses = []
+    for spec, p, a_l, fw_cache in zip(
+        cfg.blocks, params["blocks"], acts, fw_caches
+    ):
+        y_hat_l, lr_cache = B.learning_layers(p, spec, a_l)
+        grad_l = B.local_gradient(y_hat_l, y)
+        local_losses.append(rss_loss(y_hat_l, y))
+        delta_fw, lr_grads = B.learning_layers_backward(p, spec, lr_cache, grad_l)
+        fw_grads = B.forward_layers_backward(
+            p, spec, fw_cache, delta_fw,
+            conv_mode=conv_mode, backend=backend, fuse_bwd=fuse_bwd,
+        )
+        block_grads.append({"fw": fw_grads, "lr": lr_grads})
+
+    grads = StepGrads(blocks=tuple(block_grads), output=out_grads)
+    metrics = StepMetrics(
+        loss=rss_loss(y_hat, y),
+        correct=jnp.sum(jnp.argmax(y_hat, axis=-1) == labels),
+        local_losses=jnp.stack(local_losses),
+    )
+    return grads, metrics, StepAux(fw_caches=tuple(fw_caches))
+
+
+def apply_gradients(state: TrainState, grads: StepGrads) -> TrainState:
+    """IntegerSGD update of every parameter group from raw gradients.
+
+    The second half of ``train_step``: deterministic given (state, grads),
+    so two replicas holding identical state and identical (all-reduced)
+    gradients step to bitwise-identical new states.
+    """
+    new_blocks = [
+        {
+            "fw": opt.apply_tree(p["fw"], g["fw"], state.opt_fw),
+            "lr": opt.apply_tree(p["lr"], g["lr"], state.opt_lr),
+        }
+        for p, g in zip(state.params["blocks"], grads.blocks)
+    ]
+    new_output = opt.apply_tree(state.params["output"], grads.output, state.opt_lr)
+    new_params = {"blocks": new_blocks, "output": new_output}
+    return state._replace(params=new_params, step=state.step + 1)
+
+
 def train_step(
     state: TrainState,
     cfg: M.NitroConfig,
@@ -81,6 +191,12 @@ def train_step(
     telemetry: bool = False,
 ):
     """One integer-only NITRO-D step over a batch. jit-able (cfg static).
+
+    Composes ``compute_gradients`` (forward + backward → raw integer
+    gradients) with ``apply_gradients`` (IntegerSGD update) — the split
+    exists so the data-parallel step in ``repro.parallel.dp`` can
+    all-reduce the gradients in between; this single-device composition
+    is bitwise identical to the pre-split monolithic step.
 
     The forward pass runs on the fused kernels by default (the same entry
     points the inference plan compiles to); ``fused=False`` is the unfused
@@ -101,56 +217,18 @@ def train_step(
     identical with it on or off, and the whole jaxpr stays float-free —
     both test-enforced.
     """
-    params = state.params
-    y = one_hot_int(labels, cfg.num_classes)
-
-    # ---- forward ----------------------------------------------------------
-    y_hat, acts, fw_caches, out_cache = M.forward(
-        params, cfg, x, train=True, key=key, fused=fused, backend=backend,
-        conv_mode=conv_mode,
+    grads, metrics, aux = compute_gradients(
+        state, cfg, x, labels, key,
+        fused=fused, fuse_bwd=fuse_bwd, backend=backend, conv_mode=conv_mode,
     )
-
-    # ---- output layers ----------------------------------------------------
-    grad_o = rss_grad(y_hat, y)
-    out_grads = B.output_backward(params["output"], out_cache, grad_o)
-    new_output = opt.apply_tree(params["output"], out_grads, state.opt_lr)
-
-    # ---- per-block local training (independent → parallel) ----------------
-    new_blocks = []
-    local_losses = []
-    fw_grads_all = []  # retained for the telemetry readout (DCE'd otherwise)
-    for spec, p, a_l, fw_cache in zip(
-        cfg.blocks, params["blocks"], acts, fw_caches
-    ):
-        y_hat_l, lr_cache = B.learning_layers(p, spec, a_l)
-        grad_l = B.local_gradient(y_hat_l, y)
-        local_losses.append(rss_loss(y_hat_l, y))
-        delta_fw, lr_grads = B.learning_layers_backward(p, spec, lr_cache, grad_l)
-        fw_grads = B.forward_layers_backward(
-            p, spec, fw_cache, delta_fw,
-            conv_mode=conv_mode, backend=backend, fuse_bwd=fuse_bwd,
-        )
-        fw_grads_all.append(fw_grads)
-        new_blocks.append(
-            {
-                "fw": opt.apply_tree(p["fw"], fw_grads, state.opt_fw),
-                "lr": opt.apply_tree(p["lr"], lr_grads, state.opt_lr),
-            }
-        )
-
-    new_params = {"blocks": new_blocks, "output": new_output}
-    metrics = StepMetrics(
-        loss=rss_loss(y_hat, y),
-        correct=jnp.sum(jnp.argmax(y_hat, axis=-1) == labels),
-        local_losses=jnp.stack(local_losses),
-    )
-    new_state = state._replace(params=new_params, step=state.step + 1)
+    new_state = apply_gradients(state, grads)
     if telemetry:
         # lazy import: obs is an optional read-only layer over the core
         from repro.obs import telemetry as T
 
         telem = T.collect_train_telemetry(
-            cfg, new_params, fw_caches, fw_grads_all, out_grads,
+            cfg, new_state.params, aux.fw_caches,
+            [g["fw"] for g in grads.blocks], grads.output,
             state.opt_lr, state.opt_fw,
         )
         return new_state, metrics, telem

@@ -59,6 +59,8 @@ def forward(
     fused: bool = True,
     backend: str = "auto",
     conv_mode: str = "stream",
+    dp_axis: str | None = None,
+    dp_shards: int = 1,
 ) -> tuple[jax.Array, list[jax.Array], list[dict], dict]:
     """Full forward pass.
 
@@ -74,6 +76,10 @@ def forward(
     the ``fuse_bwd`` δ-path knob — lives on ``les.train_step``, which
     threads the same ``backend``/``conv_mode`` into the gradient
     dispatcher ``kernels.grad_ops``.)
+
+    ``dp_axis``/``dp_shards`` describe an enclosing data-parallel
+    shard_map context; they only affect IntegerDropout (global-batch
+    mask, sliced per shard — see ``layers.dropout_forward``).
     """
     a = jnp.asarray(x, INT_DTYPE)
     acts: list[jax.Array] = []
@@ -86,6 +92,7 @@ def forward(
         a, cache = B.forward_layers(
             p, spec, a, dropout_key=dk, train=train,
             fused=fused, backend=backend, conv_mode=conv_mode,
+            dp_axis=dp_axis, dp_shards=dp_shards,
         )
         acts.append(a)
         caches.append(cache)

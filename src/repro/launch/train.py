@@ -4,6 +4,9 @@ Two trainers behind one CLI:
 
   * ``--arch <paper arch>``  (mlp1..4, vgg8b, vgg11b) — the NITRO-D
     integer-only LES trainer (the paper's algorithm, core library);
+    ``--num-devices N`` shards the batch over a data mesh
+    (``repro.parallel.dp``) with a bitwise-identical trajectory,
+    ``--dp-reduce`` picks the exact all-reduce (psum/ring/compress);
   * ``--arch <lm arch>``     (qwen3-32b, …) — the sharded LM trainer
     (bf16/fp32 AdamW or LES-groups mode), sized by ``--scale`` for
     CPU-budget runs.
@@ -27,7 +30,8 @@ import numpy as np
 def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
                 dataset: str, scale: float, seed: int = 0,
                 telemetry_every: int = 0, telemetry_out: str | None = None,
-                trace_out: str | None = None) -> dict:
+                trace_out: str | None = None,
+                num_devices: int = 1, dp_reduce: str = "psum") -> dict:
     """Integer-only NITRO-D training (paper algorithm).
 
     ``telemetry_every=N`` runs every N-th step through the
@@ -37,6 +41,13 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
     ``telemetry_out`` (default: ``metrics.jsonl`` next to the
     checkpoints).  ``trace_out`` writes a span trace of the run's phases
     (step / checkpoint / eval) as JSONL.
+
+    ``num_devices > 1`` shards the batch over a ``data`` mesh axis via
+    ``repro.parallel.dp`` (``dp_reduce`` picks the all-reduce:
+    psum / ring / compress) — the trajectory is *bitwise identical* to
+    the single-device run, so this is purely a throughput knob.  The
+    process must already have that many JAX devices (``main()`` re-execs
+    with ``XLA_FLAGS`` to force host devices on CPU).
     """
     from repro.configs import get_paper_config
     from repro.core import les
@@ -62,14 +73,29 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
         state, start_step = ckpt.restore(ckpt_dir, state)
         print(f"[restore] resumed from step {start_step}")
 
-    step_fn = jax.jit(functools.partial(les.train_step, cfg=cfg))
+    if num_devices > 1:
+        from repro.parallel import dp
+        if batch % num_devices:
+            raise SystemExit(
+                f"--batch {batch} must divide evenly over "
+                f"--num-devices {num_devices}")
+        mesh = dp.data_mesh(num_devices)
+        print(f"[dp] {num_devices}-device data mesh, reduce={dp_reduce} "
+              f"(bitwise ≡ single-device)")
+        step_fn = dp.make_dp_train_step(cfg, mesh, dp_reduce=dp_reduce)
+    else:
+        step_fn = jax.jit(functools.partial(les.train_step, cfg=cfg))
     telem_step_fn = None
     if telemetry_every > 0:
         from repro.obs import telemetry as T
         # a second jit cache entry, not a recompile of the first: the
         # trajectory it returns is bitwise-identical (test-enforced)
-        telem_step_fn = jax.jit(
-            functools.partial(les.train_step, cfg=cfg, telemetry=True))
+        if num_devices > 1:
+            telem_step_fn = dp.make_dp_train_step(
+                cfg, mesh, dp_reduce=dp_reduce, telemetry=True)
+        else:
+            telem_step_fn = jax.jit(
+                functools.partial(les.train_step, cfg=cfg, telemetry=True))
         if telemetry_out is None:
             telemetry_out = os.path.join(ckpt_dir or ".", "metrics.jsonl")
         print(f"[telemetry] every {telemetry_every} steps -> {telemetry_out}")
@@ -202,7 +228,31 @@ def main():
                          "next to the checkpoints)")
     ap.add_argument("--trace-out",
                     help="write a span trace of the run (JSONL)")
+    ap.add_argument("--num-devices", type=int, default=1,
+                    help="data-parallel device count (NITRO archs; "
+                         "trajectory is bitwise-identical at any value)")
+    ap.add_argument("--dp-reduce", default="psum",
+                    choices=("psum", "ring", "compress"),
+                    help="gradient all-reduce: XLA psum, hand-scheduled "
+                         "ring, or int8-limb compressed (all exact)")
     args = ap.parse_args()
+
+    if args.num_devices > 1 and jax.device_count() < args.num_devices:
+        # XLA only honours forced host devices before backend init — too
+        # late in this process (device_count() just initialised it), so
+        # re-exec ourselves with the flag set.
+        if os.environ.get("_REPRO_DP_REEXEC"):
+            raise SystemExit(
+                f"--num-devices {args.num_devices}: still only "
+                f"{jax.device_count()} devices after forcing XLA_FLAGS")
+        import sys
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.num_devices}"
+        ).strip()
+        os.environ["_REPRO_DP_REEXEC"] = "1"
+        os.execv(sys.executable,
+                 [sys.executable, "-m", "repro.launch.train"] + sys.argv[1:])
 
     from repro.configs import ARCHS, PAPER_ARCHS
 
@@ -212,7 +262,8 @@ def main():
                     scale=args.scale, seed=args.seed,
                     telemetry_every=args.telemetry_every,
                     telemetry_out=args.telemetry_out,
-                    trace_out=args.trace_out)
+                    trace_out=args.trace_out,
+                    num_devices=args.num_devices, dp_reduce=args.dp_reduce)
     elif args.arch in ARCHS:
         train_lm(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
                  scale=args.scale, ckpt_dir=args.ckpt_dir,

@@ -1,1 +1,10 @@
-"""Distribution substrate: logical-axis sharding, collectives, compression."""
+"""Distribution substrate for integer training.
+
+``dp`` is the wired path: data-parallel ``les.train_step`` over a
+``data`` mesh axis, bitwise-identical to single-device at any device
+count (integer gradients sum exactly).  ``sharding`` maps logical axis
+names to mesh axes, ``collectives`` provides the hand-scheduled ring
+all-reduce, ``compress`` the exact int8-limb wire format (plus the
+approximate EF path for float gradients).  ``pipeline`` is unwired
+GPipe scaffolding.  See ``docs/PARALLEL.md``.
+"""

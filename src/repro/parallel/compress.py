@@ -1,18 +1,32 @@
-"""Gradient compression for cross-pod (DCN) all-reduce.
+"""Gradient compression for the data-parallel all-reduce.
 
-Two regimes (DESIGN.md §5):
+Two regimes, matching the two kinds of gradient this repo ever ships
+across a ``data`` mesh axis (see ``docs/PARALLEL.md``):
 
-  * **FP path** — int8 quantisation against a per-tensor power-of-two scale
-    with an error-feedback residual: the quantisation error of step *t* is
-    added back into the gradient at step *t+1*, so the compression bias
-    vanishes in expectation (standard EF-SGD).  4× less DCN traffic.
+  * **NITRO path** — NITRO-D's gradients are *already int32*: cross-device
+    reduction is exact integer summation, so data-parallel training is
+    bit-reproducible regardless of reduction order (integer addition is
+    associative and commutative).  ``exact_integer_psum`` is the plain
+    XLA all-reduce; ``nitro_compressed_psum`` is the same exact sum over
+    an **int8-limb wire format**: each int32 element is decomposed into
+    ``num_limbs`` base-256 digits carried as int8 payloads, the limb
+    planes are summed with int32 carry headroom (safe for ≤ 2²⁴
+    replicas), and the per-limb sums recombine to the bit-exact int32
+    total.  ``num_limbs=4`` encodes any int32 (same bytes as int32 —
+    the win is an int8 wire dtype for links with faster int8
+    collectives); ``num_limbs=2`` halves the payload and is exact
+    whenever every gradient element fits int16 — precisely the bound the
+    ``repro.obs`` bit-occupancy telemetry measures per layer.  Both are
+    property-tested for exactness and order-invariance.
 
-  * **NITRO path** — the paper's gradients are *already integers*: cross-pod
-    reduction is exact int32 summation.  No compression error exists, and
-    data-parallel training is bit-reproducible regardless of reduction
-    order (integer addition is associative).  This is a genuine systems
-    advantage of integer-only training at scale and is exercised by the
-    multi-pod LES trainer.
+  * **FP path** — for *float* gradients (the LM trainer; kept as the
+    comparison baseline): int8 quantisation against a per-tensor
+    power-of-two scale with an error-feedback residual — the quantisation
+    error of step *t* is added back into the gradient at step *t+1*, so
+    the compression bias vanishes in expectation (standard EF-SGD).
+    4× less wire traffic, but *approximate*: this path can never be
+    bitwise-deterministic, which is exactly the contrast the NITRO path
+    exists to demonstrate.
 """
 
 from __future__ import annotations
@@ -21,6 +35,100 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# NITRO path: exact integer reduction (int32, or int8-limb wire format)
+# ---------------------------------------------------------------------------
+
+_LIMB_BITS = 8
+_LIMB_BASE = 1 << _LIMB_BITS  # 256
+_LIMB_BIAS = 128              # maps an unsigned digit 0..255 onto int8
+
+
+def exact_integer_psum(int_grads, axis_name: str):
+    """NITRO path: int32 gradients sum exactly; bit-reproducible DP."""
+    return jax.tree_util.tree_map(
+        lambda g: jax.lax.psum(g, axis_name), int_grads
+    )
+
+
+def pack_int8_limbs(g: jax.Array, num_limbs: int = 4) -> jax.Array:
+    """int32 tensor → ``(num_limbs, *shape)`` int8 limb planes.
+
+    Little-endian base-256 digits: low limbs are unsigned digits biased
+    by −128 onto the int8 range; the top limb is the *arithmetic* shift
+    remainder (sign-carrying, stored unbiased).  Exact round trip iff
+    every element fits ``8·num_limbs`` signed bits — always true for
+    ``num_limbs=4``; for fewer limbs it is the caller's contract (checked
+    by ``fits_limbs``, measured per layer by the obs bit telemetry).
+    """
+    if not (1 <= num_limbs <= 4):
+        raise ValueError(f"num_limbs must be in 1..4, got {num_limbs}")
+    g = g.astype(jnp.int32)
+    limbs = [
+        ((g >> (_LIMB_BITS * k)) & (_LIMB_BASE - 1)) - _LIMB_BIAS
+        for k in range(num_limbs - 1)
+    ]
+    limbs.append(g >> (_LIMB_BITS * (num_limbs - 1)))  # signed top limb
+    return jnp.stack(limbs).astype(jnp.int8)
+
+
+def unpack_limb_sums(limb_sums: jax.Array, num_shards: int) -> jax.Array:
+    """Recombine per-limb int32 *sums* into the summed int32 tensor.
+
+    ``limb_sums[k]`` is Σ over shards of the (biased) int8 limb *k*,
+    accumulated in int32.  Linearity gives Σg = Σ_k 256^k·(limb-plane-k
+    sum, bias restored); intermediate products may wrap mod 2³², which is
+    harmless — int32 addition is exact mod 2³², and the true total fits
+    int32 (the same no-overflow contract plain ``psum`` has).
+    """
+    num_limbs = limb_sums.shape[0]
+    total = jnp.zeros_like(limb_sums[0])
+    for k in range(num_limbs - 1):
+        unbiased = limb_sums[k] + num_shards * _LIMB_BIAS
+        total = total + (unbiased << (_LIMB_BITS * k))
+    total = total + (limb_sums[num_limbs - 1] << (_LIMB_BITS * (num_limbs - 1)))
+    return total
+
+
+def fits_limbs(g: jax.Array, num_limbs: int) -> jax.Array:
+    """Scalar bool: every element representable in ``8·num_limbs`` signed
+    bits (the exactness precondition of a truncated-limb encoding)."""
+    bound = 1 << (_LIMB_BITS * num_limbs - 1)
+    g = g.astype(jnp.int32)
+    return jnp.all((g >= -bound) & (g <= bound - 1))
+
+
+def nitro_compressed_psum(int_grads, axis_name: str, *, num_limbs: int = 4):
+    """Exact all-reduce of an int32 gradient pytree over int8 payloads.
+
+    Per tensor: pack into int8 limb planes (the wire payload), lift each
+    plane to int32 (carry headroom: 255·N ≪ 2³¹ for any real N), psum the
+    planes, recombine.  Bitwise ≡ ``exact_integer_psum`` whenever every
+    local element fits ``8·num_limbs`` signed bits — unconditionally for
+    the default ``num_limbs=4``.  Unlike the EF float path there is no
+    residual state to carry: the encoding is lossless, so compression
+    composes with bitwise-deterministic data parallelism.
+    """
+    n = None
+
+    def reduce_one(g: jax.Array) -> jax.Array:
+        nonlocal n
+        limbs = pack_int8_limbs(g, num_limbs)          # int8 on the wire
+        lifted = limbs.astype(jnp.int32)
+        summed = jax.lax.psum(lifted, axis_name)
+        if n is None:
+            from repro.parallel.collectives import axis_size
+
+            n = axis_size(axis_name)
+        return unpack_limb_sums(summed, n).astype(g.dtype)
+
+    return jax.tree_util.tree_map(reduce_one, int_grads)
+
+
+# ---------------------------------------------------------------------------
+# FP path: EF-int8 quantisation (float gradients only — approximate)
+# ---------------------------------------------------------------------------
 
 
 class EFState(NamedTuple):
@@ -42,7 +150,10 @@ def _quantize_one(g: jax.Array, r: jax.Array):
     gf = g.astype(jnp.float32) + r
     amax = jnp.max(jnp.abs(gf))
     shift = jnp.ceil(jnp.log2(jnp.maximum(amax / 127.0, 1e-30)))
-    scale = jnp.exp2(shift)
+    # ldexp, not exp2: XLA's exp2 approximation can land one ulp *below*
+    # 2^k, which silently breaks the exactly-representable-scale property
+    # (caught by the pow2 hypothesis test).
+    scale = jnp.ldexp(jnp.float32(1.0), shift.astype(jnp.int32))
     q = jnp.clip(jnp.round(gf / scale), -127, 127)
     new_r = gf - q * scale
     return q.astype(jnp.int8), scale, new_r
@@ -92,10 +203,3 @@ def compressed_psum(grads, ef: EFState, axis_name: str):
         lambda x: jax.lax.psum(x, axis_name), q
     )
     return decompress(summed, s_max), ef
-
-
-def exact_integer_psum(int_grads, axis_name: str):
-    """NITRO path: int32 gradients sum exactly; bit-reproducible DP."""
-    return jax.tree_util.tree_map(
-        lambda g: jax.lax.psum(g, axis_name), int_grads
-    )

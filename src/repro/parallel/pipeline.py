@@ -1,10 +1,13 @@
-"""Pipeline-parallel scaffolding (for >100B models; DESIGN.md §5).
+"""Pipeline-parallel scaffolding — *not* wired into NITRO-D training.
 
-None of the assigned cells needs PP (the largest, 141B mixtral, fits
-FSDP×TP on 256 chips), so PP is not wired into the launcher meshes — this
-module provides the schedule machinery for the >100B regime: a GPipe-style
-microbatched loop expressed with `ppermute` hops between stage shards, so
-a future mesh axis ("stage") drops in without touching model code.
+NITRO-D has no inter-block gradient flow, so its natural model
+parallelism is block-per-device LES (each local-loss block trains
+independently), not pipelining — and the paper-scale CNNs (VGG11B is
+< 40M params) fit a single device anyway.  Data parallelism is the wired
+path (``repro.parallel.dp``).  This module keeps the generic GPipe-style
+schedule machinery — a microbatched loop expressed with ``ppermute`` hops
+between stage shards — so a future ``"stage"`` mesh axis (e.g. for a
+block-pipelined LES variant) drops in without touching model code.
 
 ``pipeline_apply`` is backend-agnostic: with one stage it degrades to a
 sequential scan over microbatches (unit-tested path); with S stages inside

@@ -88,8 +88,11 @@ def tree_shardings(mesh: Mesh, rules: Mapping[str, Any], logical_tree):
 
 
 # ---------------------------------------------------------------------------
-# Rule tables (DESIGN.md §5).  ``data_axes``/``pod`` collapse automatically on
-# single-pod meshes: rules reference only axis names present in the mesh.
+# Rule tables.  Only ``"batch"`` is exercised by the wired NITRO-D
+# data-parallel path (``repro.parallel.dp``: batch → ``data`` mesh axis);
+# the rest cover the generic transformer axes the scaffolding was built
+# against and future TP/FSDP experiments.  ``pod`` collapses automatically
+# on single-pod meshes: rules reference only axis names present in the mesh.
 # ---------------------------------------------------------------------------
 
 

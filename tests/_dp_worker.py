@@ -1,0 +1,135 @@
+"""Subprocess worker for the data-parallel bitwise-identity suite.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` only takes effect
+before the XLA backend initialises, and the pytest process has long since
+initialised it with 1 device — so every (device count, reducer) cell of
+``tests/test_data_parallel.py`` runs in a fresh interpreter via this
+script.  The worker:
+
+  1. forces the requested host-device count *before* importing jax;
+  2. builds a deterministic config + dataset (identical in every worker —
+     everything derives from fixed seeds);
+  3. runs a multi-step trajectory through either the single-device
+     ``les.train_step`` (``--reducer single``, the reference) or the
+     sharded ``dp.dp_train_step`` with the requested reducer;
+  4. asserts the whole step jaxpr is float-free (descending into the
+     shard_map sub-jaxpr) — a failed assert fails the subprocess;
+  5. writes final-state leaves, per-step metrics and (optionally) the
+     telemetry pytree to an ``.npz`` the test compares bitwise.
+
+Run by the ``dp_run`` fixture; also usable by hand:
+
+    python tests/_dp_worker.py --out /tmp/t.npz --devices 4 --reducer ring
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--reducer", default="single",
+                    choices=("single", "psum", "ring", "compress"))
+    ap.add_argument("--config", default="tiny", choices=("tiny", "vgg8b"))
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--telemetry", action="store_true")
+    args = ap.parse_args()
+
+    # must precede the first jax import anywhere in the process
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={args.devices}"
+    ).strip()
+
+    # self-sufficient import path: the launching pytest may not have been
+    # started with PYTHONPATH=src (e.g. under tools/cov_gate.py)
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       os.pardir, "src")
+    if os.path.isdir(src) and src not in sys.path:
+        sys.path.insert(0, src)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    assert jax.device_count() == args.devices, (
+        jax.device_count(), args.devices)
+
+    from _gradcheck import assert_jaxpr_integer_only
+    from repro.core import blocks as B
+    from repro.core import les
+    from repro.core import model as M
+
+    if args.config == "tiny":
+        cfg = M.NitroConfig(
+            blocks=(
+                B.BlockSpec(kind="conv", out_features=16, pool=True,
+                            d_lr=256, dropout=0.1),
+                B.BlockSpec(kind="linear", out_features=64, dropout=0.1),
+            ),
+            input_shape=(8, 8, 3), num_classes=10, gamma_inv=512,
+        )
+    else:  # paper VGG8B at CPU-test scale
+        from repro.configs import get_paper_config
+        cfg = get_paper_config("vgg8b", scale=0.0625,
+                               input_shape=(16, 16, 3))
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(
+        rng.integers(-128, 128, (args.batch, *cfg.input_shape)), jnp.int32)
+    labels = jnp.asarray(
+        rng.integers(0, cfg.num_classes, (args.batch,)), jnp.int32)
+    state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+
+    if args.reducer == "single":
+        def step(state, x, labels, key):
+            return les.train_step(state, cfg, x, labels, key,
+                                  telemetry=args.telemetry)
+    else:
+        from repro.parallel import dp
+        mesh = dp.data_mesh(args.devices)
+
+        def step(state, x, labels, key):
+            return dp.dp_train_step(state, cfg, x, labels, key,
+                                    mesh=mesh, dp_reduce=args.reducer,
+                                    telemetry=args.telemetry)
+
+    # the whole sharded step must stay integer-only — iter_eqns descends
+    # into the shard_map/pjit sub-jaxprs, so the interior is covered too
+    jaxpr = jax.make_jaxpr(step)(state, x, labels, jax.random.PRNGKey(100))
+    assert_jaxpr_integer_only(jaxpr)
+
+    step = jax.jit(step)
+    losses, corrects, locals_ = [], [], []
+    telem = None
+    for i in range(args.steps):
+        out = step(state, x, labels, jax.random.PRNGKey(100 + i))
+        state, metrics = out[0], out[1]
+        if args.telemetry:
+            telem = out[2]
+        losses.append(np.asarray(metrics.loss))
+        corrects.append(np.asarray(metrics.correct))
+        locals_.append(np.asarray(metrics.local_losses))
+
+    payload = {
+        "loss": np.stack(losses),
+        "correct": np.stack(corrects),
+        "local_losses": np.stack(locals_),
+        "float_free": np.asarray(1, np.int32),
+    }
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(state)):
+        payload[f"state_{i:03d}"] = np.asarray(leaf)
+    if telem is not None:
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(telem)):
+            payload[f"telem_{i:03d}"] = np.asarray(leaf)
+    np.savez(args.out, **payload)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

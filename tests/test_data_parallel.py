@@ -1,0 +1,215 @@
+"""Data-parallel bitwise-identity suite — the proof behind docs/PARALLEL.md.
+
+NITRO-D's gradients are int32 batch sums, and int32 addition is exact and
+associative — so sharding the batch over a ``data`` mesh, all-reducing
+per-shard gradients, and applying IntegerSGD must reproduce the
+single-device ``les.train_step`` **bit for bit**.  This file turns that
+"must" into assertions, at three strengths:
+
+  * in-process: ``dp_train_step`` over a real (1-device) mesh ≡
+    ``train_step``, for every reducer; the sharded step's jaxpr is
+    float-free (descending into the shard_map interior); telemetry
+    on/off cannot perturb the sharded trajectory;
+  * a quick 2-device smoke: subprocess workers (fresh interpreters with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the flag is
+    dead after backend init, hence the subprocess) prove 2-device psum ≡
+    single-device on the multi-step trajectory;
+  * the full ``slow`` matrix: device counts {2, 4} × reducers
+    {psum, ring, compress} × configs {tiny-with-dropout, scaled VGG8B},
+    every cell compared leaf-by-leaf, dtype-exact, against the same
+    single-device reference — plus telemetry equality under sharding.
+
+The tiny config has dropout on *both* blocks deliberately: dropout is
+the only sampled op in the step, and its global-mask-then-slice DP path
+(``layers.dropout_forward``) is exactly what these trajectories would
+expose if it diverged.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _gradcheck import assert_bitwise_equal, assert_jaxpr_integer_only
+from repro.core import blocks as B
+from repro.core import les
+from repro.core import model as M
+from repro.parallel import dp
+
+_WORKER = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "_dp_worker.py")
+
+
+def tiny_dp_cfg() -> M.NitroConfig:
+    """Conv + linear blocks, dropout on both — must match _dp_worker.py."""
+    return M.NitroConfig(
+        blocks=(
+            B.BlockSpec(kind="conv", out_features=16, pool=True,
+                        d_lr=256, dropout=0.1),
+            B.BlockSpec(kind="linear", out_features=64, dropout=0.1),
+        ),
+        input_shape=(8, 8, 3), num_classes=10, gamma_inv=512,
+    )
+
+
+@pytest.fixture(scope="module")
+def toy_batch():
+    cfg = tiny_dp_cfg()
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-128, 128, (8, *cfg.input_shape)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, 10, (8,)), jnp.int32)
+    return cfg, x, labels
+
+
+@pytest.fixture(scope="module")
+def dp_run(tmp_path_factory):
+    """Callable running one (devices, reducer, config) worker cell in a
+    fresh interpreter; results cached for the whole module so the
+    single-device reference is computed once per config."""
+    cache: dict[tuple, dict] = {}
+    out_dir = tmp_path_factory.mktemp("dp_npz")
+
+    def run(*, devices: int, reducer: str, config: str = "tiny",
+            steps: int = 3, batch: int = 8, telemetry: bool = False) -> dict:
+        key = (devices, reducer, config, steps, batch, telemetry)
+        if key not in cache:
+            out = out_dir / ("_".join(str(p) for p in key) + ".npz")
+            env = dict(os.environ)
+            env.pop("XLA_FLAGS", None)  # worker sets its own device count
+            cmd = [sys.executable, _WORKER, "--out", str(out),
+                   "--devices", str(devices), "--reducer", reducer,
+                   "--config", config, "--steps", str(steps),
+                   "--batch", str(batch)]
+            if telemetry:
+                cmd.append("--telemetry")
+            proc = subprocess.run(cmd, env=env, capture_output=True,
+                                  text=True, timeout=900)
+            assert proc.returncode == 0, (
+                f"worker {key} failed:\n{proc.stdout}\n{proc.stderr}")
+            with np.load(out) as z:
+                cache[key] = {k: z[k] for k in z.files}
+        return cache[key]
+
+    return run
+
+
+def assert_runs_bitwise_equal(got: dict, want: dict) -> None:
+    """Every npz entry — final-state leaves, per-step metric trajectories,
+    telemetry leaves — equal bit for bit, dtypes included."""
+    assert sorted(got) == sorted(want)
+    for k in sorted(got):
+        assert got[k].dtype == want[k].dtype, (k, got[k].dtype, want[k].dtype)
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# In-process: real mesh + shard_map semantics without extra devices
+# ---------------------------------------------------------------------------
+
+
+class TestInProcess:
+    @pytest.mark.parametrize("reducer", dp.REDUCERS)
+    def test_dp_step_matches_train_step(self, toy_batch, reducer):
+        """1-device mesh, every reducer: the sharded step *is* train_step."""
+        cfg, x, labels = toy_batch
+        state_ref = state_dp = les.create_train_state(jax.random.PRNGKey(0), cfg)
+        mesh = dp.data_mesh(1)
+        step_dp = dp.make_dp_train_step(cfg, mesh, dp_reduce=reducer)
+        step_ref = jax.jit(
+            lambda s, x, l, k: les.train_step(s, cfg, x, l, k))
+        for i in range(2):
+            key = jax.random.PRNGKey(100 + i)
+            state_ref, m_ref = step_ref(state_ref, x, labels, key)
+            state_dp, m_dp = step_dp(state_dp, x, labels, key)
+        assert_bitwise_equal(state_dp, state_ref)
+        assert_bitwise_equal(m_dp, m_ref)
+
+    def test_sharded_step_jaxpr_is_float_free(self, toy_batch):
+        """Integer-only all the way down — iter_eqns descends into the
+        shard_map sub-jaxpr, so the sharded interior is checked too."""
+        cfg, x, labels = toy_batch
+        state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+        mesh = dp.data_mesh(1)
+        jaxpr = jax.make_jaxpr(
+            lambda s, x, l, k: dp.dp_train_step(
+                s, cfg, x, l, k, mesh=mesh, dp_reduce="ring"))(
+            state, x, labels, jax.random.PRNGKey(1))
+        prims = {e.primitive.name for e in jaxpr.eqns}
+        assert "shard_map" in prims  # really testing the sharded program
+        assert_jaxpr_integer_only(jaxpr)
+
+    def test_telemetry_on_off_identity_under_sharding(self, toy_batch):
+        cfg, x, labels = toy_batch
+        state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+        key = jax.random.PRNGKey(7)
+        mesh = dp.data_mesh(1)
+        st_t, m_t, telem = dp.make_dp_train_step(cfg, mesh, telemetry=True)(
+            state, x, labels, key)
+        st_p, m_p = dp.make_dp_train_step(cfg, mesh)(state, x, labels, key)
+        assert_bitwise_equal(st_t, st_p)
+        assert_bitwise_equal(m_t, m_p)
+        # and the readout itself matches the single-device readout
+        _, _, telem_ref = jax.jit(
+            lambda s, x, l, k: les.train_step(
+                s, cfg, x, l, k, telemetry=True))(state, x, labels, key)
+        assert_bitwise_equal(telem, telem_ref)
+
+    def test_unknown_reducer_rejected(self, toy_batch):
+        cfg, x, labels = toy_batch
+        state = les.create_train_state(jax.random.PRNGKey(0), cfg)
+        with pytest.raises(ValueError, match="dp_reduce"):
+            dp.dp_train_step(state, cfg, x, labels, jax.random.PRNGKey(0),
+                             mesh=dp.data_mesh(1), dp_reduce="avg")
+        with pytest.raises(ValueError, match="dp_reduce"):
+            dp.reduce_gradients({"w": x}, "data", "avg")
+
+    def test_oversubscribed_mesh_rejected(self):
+        n = jax.device_count() + 1
+        with pytest.raises(ValueError, match="xla_force_host_platform"):
+            dp.data_mesh(n)
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: real forced host devices
+# ---------------------------------------------------------------------------
+
+
+class TestDeviceCounts:
+    def test_two_device_psum_smoke(self, dp_run):
+        """The quick-gate cell: 2 real devices, default reducer, full
+        trajectory ≡ single-device."""
+        ref = dp_run(devices=1, reducer="single")
+        got = dp_run(devices=2, reducer="psum")
+        assert_runs_bitwise_equal(got, ref)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("reducer", dp.REDUCERS)
+    @pytest.mark.parametrize("devices", [2, 4])
+    def test_tiny_trajectory_identical(self, dp_run, devices, reducer):
+        ref = dp_run(devices=1, reducer="single")
+        got = dp_run(devices=devices, reducer=reducer)
+        assert_runs_bitwise_equal(got, ref)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("reducer", dp.REDUCERS)
+    @pytest.mark.parametrize("devices", [2, 4])
+    def test_vgg8b_trajectory_identical(self, dp_run, devices, reducer):
+        """The paper CNN (CPU-test scale): same equality, real conv stack."""
+        ref = dp_run(devices=1, reducer="single", config="vgg8b", steps=2)
+        got = dp_run(devices=devices, reducer=reducer,
+                     config="vgg8b", steps=2)
+        assert_runs_bitwise_equal(got, ref)
+
+    @pytest.mark.slow
+    def test_telemetry_identical_across_devices(self, dp_run):
+        """Per-layer bit histograms / saturation / dead counts psum'd over
+        shards must equal the single-device full-batch readout exactly."""
+        ref = dp_run(devices=1, reducer="single", telemetry=True)
+        got = dp_run(devices=4, reducer="psum", telemetry=True)
+        assert_runs_bitwise_equal(got, ref)

@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
 # Quick CI gate: the tier-1 test command (minus slow integration tests)
-# run under a line-coverage floor for src/repro/{core,kernels,obs}, plus
-# kernel / fused-training / fleet-serving / observability benchmark
-# smokes, a serve-CLI smoke (with a live /metrics endpoint), and a docs
-# link check.  Run from anywhere.
+# run under a line-coverage floor for src/repro/{core,kernels,obs,parallel},
+# plus kernel / fused-training / fleet-serving / observability /
+# data-parallel benchmark smokes, a serve-CLI smoke (with a live /metrics
+# endpoint), and a docs link check.  Run from anywhere.
 #
 #   tools/ci_check.sh          # quick gate
 #   FULL=1 tools/ci_check.sh   # include slow integration tests (tier-1 exact)
@@ -27,6 +27,7 @@ if [[ "${FULL:-0}" == "1" ]]; then
 elif python -c "import pytest_cov" 2>/dev/null; then
     python -m pytest -x -q -m "not slow" \
         --cov=repro.core --cov=repro.kernels --cov=repro.obs \
+        --cov=repro.parallel \
         --cov-fail-under="$COV_FLOOR"
 else
     python tools/cov_gate.py --fail-under "$COV_FLOOR" -- -x -q -m "not slow"
@@ -37,6 +38,7 @@ python -m benchmarks.train_step --smoke
 python -m benchmarks.conv_stream --smoke
 python -m benchmarks.serve_fleet --smoke
 python -m benchmarks.obs_overhead --smoke
+python -m benchmarks.dp_scaling --smoke
 python -m repro.launch.serve_vision --train-steps 0 --scale 0.0625 \
     --backend reference --requests 24 --batch 8 --metrics-port 0
 echo "[ci_check] OK"

@@ -1,12 +1,12 @@
 #!/usr/bin/env python
-"""Line-coverage gate for ``src/repro/{core,kernels,obs}``.
+"""Line-coverage gate for ``src/repro/{core,kernels,obs,parallel}``.
 
 ``tools/ci_check.sh`` prefers **pytest-cov** (see requirements-dev.txt)
 when it is importable:
 
     python -m pytest -q -m "not slow" \
         --cov=repro.core --cov=repro.kernels --cov=repro.obs \
-        --cov-fail-under=<floor>
+        --cov=repro.parallel --cov-fail-under=<floor>
 
 This script is the dependency-free fallback for containers where
 pytest-cov cannot be installed (this repo's CI image has no network
@@ -37,7 +37,7 @@ import threading
 from collections import defaultdict
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_PKGS = ("repro/core", "repro/kernels", "repro/obs")
+DEFAULT_PKGS = ("repro/core", "repro/kernels", "repro/obs", "repro/parallel")
 
 
 def gated_files(pkgs=DEFAULT_PKGS) -> list[str]:
