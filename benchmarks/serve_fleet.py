@@ -31,6 +31,13 @@ A second section serves a two-model fleet through a 90/10 A/B split to
 record the router + weighted-round-robin overhead next to the
 single-model numbers.
 
+The production arm carries an ``Slo(deadline_ms=50)``: every run reports
+its per-arm p99-vs-SLO roll-up (``slo_summary``) — p99 latency, slack
+against the deadline, violation count — and the fleet runs exercise the
+live SLO-attribution path (``serve_request_deadline_seconds`` /
+``serve_slo_violations_total`` on a real MetricRegistry).  The candidate
+arm deliberately has no SLO, covering the mixed-fleet case.
+
 Emits the usual ``name,us_per_call,derived`` CSV rows on stdout *and*
 machine-readable ``BENCH_serve.json`` in the CWD.
 
@@ -54,6 +61,11 @@ import numpy as np
 from benchmarks.common import emit, tiny_smoke_cfg
 
 JSON_PATH = "BENCH_serve.json"
+
+# Production-arm serving objective: generous against the ~10 ms batch
+# compute + 5 ms static stall, so healthy runs meet it and the reported
+# violations measure scheduler pathology, not an impossible target.
+SLO_MS = 50.0
 
 # (arch, scale, engine batch) — paper topology at a scale where one batch
 # computes in ~10 ms on CPU: big enough to be a real model, small enough
@@ -138,12 +150,16 @@ def _summary(name, wall, results, fill, n_requests):
 def _bench_config(cfg, batch: int, n_requests: int, reps: int,
                   results: list) -> None:
     from repro.infer import compile_plan
-    from repro.serving import ModelRegistry, Router
+    from repro.obs.metrics import MetricRegistry
+    from repro.serving import ModelRegistry, Router, Slo, slo_summary
 
+    slo = Slo(deadline_ms=SLO_MS)
     fm = _freeze_random(cfg, seed=0)
     plan = compile_plan(fm)
-    registry = ModelRegistry()
-    registry.register("prod", fm)
+    # real metric registry: the timed runs exercise the live SLO
+    # attribution (deadline histograms + violation counters), not a stub
+    registry = ModelRegistry(metrics=MetricRegistry())
+    registry.register("prod", fm, slo=slo)
 
     rng = np.random.default_rng(1)
     images = [rng.integers(-127, 128, cfg.input_shape).astype(np.int32)
@@ -181,21 +197,29 @@ def _bench_config(cfg, batch: int, n_requests: int, reps: int,
         name: _summary(name, wall, res, fill, n_requests)
         for name, (wall, res, fill) in best.items()
     }
+    # same objective scored on both schedulers: the "prod" arm's SLO
+    for name, (_, res, _) in best.items():
+        runs[name]["slo"] = slo_summary([r.latency_s for r in res], slo)
     speedup = (runs["continuous"]["requests_per_s"]
                / runs["static"]["requests_per_s"])
     for name, run_ in runs.items():
+        s = run_["slo"]
         emit(f"serve/{cfg.name}/{name}",
              run_["wall_s"] / n_requests * 1e6,
              f"{run_['requests_per_s']:.1f} req/s; "
-             f"fill {run_['batch_fill']:.2f}")
+             f"fill {run_['batch_fill']:.2f}; "
+             f"p99 {s['p99_ms']:.1f}ms vs slo {s['slo_ms']:.0f}ms "
+             f"({'meets' if s['meets_slo'] else 'MISSES'})")
     emit(f"serve/{cfg.name}/speedup", 0.0,
          f"{speedup:.2f}x continuous/static")
 
     # ---- two-model A/B fleet through the router -------------------------
     # fresh registry: per-model stats live on registry entries, so reusing
     # the drained one would fold the single-model runs into the arm counts
-    ab_registry = ModelRegistry()
-    ab_registry.register("prod", fm)
+    ab_registry = ModelRegistry(metrics=MetricRegistry())
+    ab_registry.register("prod", fm, slo=slo)
+    # no SLO on the candidate: the mixed fleet (objective on one arm
+    # only) is the case the attribution path must handle
     ab_registry.register("candidate", _freeze_random(cfg, seed=1))
     router = Router({"split": {"prod": 0.9, "candidate": 0.1}})
     wall, res, snap = _drain_continuous(ab_registry, "split", router, images,
@@ -206,6 +230,16 @@ def _bench_config(cfg, batch: int, n_requests: int, reps: int,
                   snap["fleet"]["avg_batch_fill"], n_requests)
     ab["split"] = {"prod": 0.9, "candidate": 0.1}
     ab["arm_requests"] = arm_requests
+    # per-arm p99-vs-SLO: the router's hash split is pure, so each
+    # request re-resolves to its arm post-hoc
+    arm_lats: dict[str, list[float]] = {}
+    for i, r in enumerate(res):
+        mid = router.resolve("split", f"req-{i}")
+        arm_lats.setdefault(mid, []).append(r.latency_s)
+    ab["arms"] = {
+        mid: slo_summary(lats, ab_registry.get(mid).slo)
+        for mid, lats in sorted(arm_lats.items())
+    }
     emit(f"serve/{cfg.name}/ab", wall / n_requests * 1e6,
          f"{n_requests / wall:.1f} req/s; arms {arm_requests}")
 
@@ -215,6 +249,7 @@ def _bench_config(cfg, batch: int, n_requests: int, reps: int,
         "closed_loop_clients": n_clients,
         "backend": plan.backend,
         "bit_exact": True,  # asserted above before timing
+        "slo_ms": SLO_MS,
         "speedup_continuous_over_static": speedup,
         "runs": [runs["static"], runs["continuous"], ab],
     })

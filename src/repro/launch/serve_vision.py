@@ -146,6 +146,10 @@ def main():
     ap.add_argument("--max-wait-ms", type=float, default=3.0,
                     help="static scheduler only")
     ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--slo", type=float, default=None, metavar="MS",
+                    help="serving deadline in ms, applied to every loaded "
+                         "model (per-model violation attribution + "
+                         "serve_slo_* metrics; continuous scheduler only)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="expose the serving metrics as Prometheus text "
@@ -159,6 +163,7 @@ def main():
     from repro.serving import (
         FleetEngine,
         Router,
+        Slo,
         VisionEngine,
         fleet_snapshot_delta,
         latency_summary_ms,
@@ -177,6 +182,17 @@ def main():
         tracer = Tracer()
 
     registry, manifest_splits = _build_registry(args, metrics=metrics)
+    if args.slo is not None:
+        # one objective for the whole fleet: the launcher serves a single
+        # workload, so every arm is scored against the same deadline
+        slo = Slo(deadline_ms=args.slo)
+        for mid in registry.ids():
+            registry.set_slo(mid, slo)
+        print(f"[slo] deadline {slo.deadline_ms:.1f} ms on {registry.ids()}")
+    if metrics is not None:
+        from repro.obs import register_build_info
+        register_build_info(
+            metrics, backend=registry.get(registry.ids()[0]).plan.backend)
 
     splits = dict(manifest_splits)
     if args.split:
@@ -240,6 +256,9 @@ def main():
     if args.scheduler == "static":
         if len(registry.ids()) != 1 or args.split:
             raise SystemExit("--scheduler static serves exactly one model")
+        if args.slo is not None:
+            raise SystemExit("--slo requires --scheduler continuous "
+                             "(SLO attribution lives in the fleet engine)")
         with VisionEngine(first.plan, batch_size=args.batch,
                           max_wait_ms=args.max_wait_ms,
                           metrics=metrics) as engine:
@@ -270,6 +289,17 @@ def main():
             snapshot = fleet_snapshot_delta(pre, post)
             for mid, mstats in snapshot["models"].items():
                 mstats["version"] = post["models"][mid]["version"]
+            # per-model SLO attribution, warmup excluded the same way
+            snapshot["slo"] = {}
+            for mid, c in post.get("slo", {}).items():
+                p = pre.get("slo", {}).get(mid,
+                                           {"requests": 0, "violations": 0})
+                reqs = c["requests"] - p["requests"]
+                viol = c["violations"] - p["violations"]
+                snapshot["slo"][mid] = {
+                    "requests": reqs, "violations": viol,
+                    "violation_frac": viol / reqs if reqs else 0.0,
+                }
 
     pct = latency_summary_ms(r.latency_s for r in results)
     fleet = snapshot["fleet"]
@@ -281,6 +311,9 @@ def main():
           f"avg fill {fleet['avg_batch_fill']:.2f}")
     for mid, mstats in snapshot["models"].items():
         print(f"[serve]   {mid}: {json.dumps(mstats, sort_keys=True)}")
+    for mid, sstats in snapshot.get("slo", {}).items():
+        print(f"[slo]   {mid}: {sstats['violations']}/{sstats['requests']} "
+              f"past deadline ({100 * sstats['violation_frac']:.1f}%)")
 
     if tracer is not None:
         n_spans = tracer.export_jsonl(args.trace_out)
@@ -295,7 +328,8 @@ def main():
         print(f"[metrics] scraped {server.url}: {len(samples)} samples")
         headline = ("serve_requests_total", "serve_queue_depth",
                     "serve_batch_fill_count", "serve_model_version",
-                    "serve_model_swaps_total")
+                    "serve_model_swaps_total", "serve_slo_violations_total",
+                    "repro_build_info")
         for ln in samples:
             if ln.startswith(headline):
                 print(f"[metrics]   {ln}")

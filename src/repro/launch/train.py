@@ -31,7 +31,9 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
                 dataset: str, scale: float, seed: int = 0,
                 telemetry_every: int = 0, telemetry_out: str | None = None,
                 trace_out: str | None = None,
-                num_devices: int = 1, dp_reduce: str = "psum") -> dict:
+                num_devices: int = 1, dp_reduce: str = "psum",
+                metrics_port: int | None = None,
+                alerts_out: str | None = None) -> dict:
     """Integer-only NITRO-D training (paper algorithm).
 
     ``telemetry_every=N`` runs every N-th step through the
@@ -39,8 +41,16 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
     trajectory — sampling cadence changes cost, never results) and
     appends the per-layer bit-occupancy/saturation records to
     ``telemetry_out`` (default: ``metrics.jsonl`` next to the
-    checkpoints).  ``trace_out`` writes a span trace of the run's phases
-    (step / checkpoint / eval) as JSONL.
+    checkpoints).  Each sampled step also feeds the **health monitor**
+    (``obs.health.default_rules``): saturation trends, int32 headroom,
+    dead-unit growth, optimiser-scalar stall — alerts print inline and
+    (with ``alerts_out``) append as JSONL.  ``trace_out`` writes a span
+    trace of the run's phases (step / checkpoint / eval) as JSONL.
+
+    ``metrics_port`` (0 = ephemeral) serves the run's metric registry
+    over HTTP — ``train_step_seconds`` / ``train_straggler_events_total``
+    plus the health gauges and ``repro_build_info`` — at ``/metrics``,
+    ``/metrics.json`` and ``/healthz`` (what ``obs_top`` scrapes live).
 
     ``num_devices > 1`` shards the batch over a ``data`` mesh axis via
     ``repro.parallel.dp`` (``dp_reduce`` picks the all-reduce:
@@ -52,6 +62,9 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
     from repro.configs import get_paper_config
     from repro.core import les
     from repro.data import synthetic
+    from repro.obs import health as H
+    from repro.obs.metrics import (MetricRegistry, register_build_info,
+                                   start_metrics_server)
     from repro.obs.trace import NULL_TRACER, Tracer
     from repro.train import checkpoint as ckpt
     from repro.train.fault_tolerance import PreemptionGuard, StepTimer, StragglerDetector
@@ -104,6 +117,25 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
     straggler = StragglerDetector()
     timer = StepTimer()
 
+    # host-side run metrics + health rules: never touch the jit graph,
+    # so the bitwise-identity and float-free guarantees are unaffected
+    registry = MetricRegistry()
+    register_build_info(registry, backend=jax.default_backend())
+    step_seconds = registry.histogram(
+        "train_step_seconds", "wall time per training step")
+    straggler_events = registry.counter(
+        "train_straggler_events_total",
+        "steps slower than the straggler EWMA threshold")
+    sinks = [H.print_sink]
+    if alerts_out:
+        sinks.append(H.jsonl_sink(alerts_out))
+        print(f"[health] alerts -> {alerts_out}")
+    monitor = H.HealthMonitor(registry=registry, sinks=sinks)
+    server = None
+    if metrics_port is not None:
+        server = start_metrics_server(registry, port=metrics_port)
+        print(f"[metrics] serving {server.url} (+ /metrics.json /healthz)")
+
     it = 0
     metrics = None
     while it < steps:
@@ -118,15 +150,19 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
                         state, x=jnp.asarray(x), labels=jnp.asarray(y),
                         key=jax.random.PRNGKey(start_step + it),
                     )
-                    T.append_jsonl(telemetry_out, T.to_records(
-                        telem, cfg=cfg, step=start_step + it))
+                    records = T.to_records(telem, cfg=cfg,
+                                           step=start_step + it)
+                    T.append_jsonl(telemetry_out, records)
+                    monitor.observe_records(records)
                 else:
                     state, metrics = step_fn(
                         state, x=jnp.asarray(x), labels=jnp.asarray(y),
                         key=jax.random.PRNGKey(start_step + it),
                     )
             dt = timer.lap()
+            step_seconds.observe(dt)
             if straggler.record(dt):
+                straggler_events.inc()
                 print(f"[straggler] step {it}: {dt:.3f}s vs ewma {straggler.ewma:.3f}s")
             if it % 50 == 0:
                 print(f"step {it:5d}  loss={int(metrics.loss)}  "
@@ -156,8 +192,17 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
     if trace_out:
         n_spans = tracer.export_jsonl(trace_out)
         print(f"[trace] {n_spans} spans -> {trace_out}")
+    if monitor.alerts:
+        counts = monitor.summary()["by_severity"]
+        print(f"[health] {len(monitor.alerts)} alert(s) fired "
+              f"({', '.join(f'{k}={v}' for k, v in counts.items() if v)}); "
+              f"{len(monitor.active_alerts())} still active")
+    if server is not None:
+        server.close()
     print(f"[done] test accuracy {acc:.4f} over {n_eval} samples")
-    out = {"test_accuracy": acc, "steps": it}
+    out = {"test_accuracy": acc, "steps": it,
+           "straggler_events": straggler.incidents,
+           "health": monitor.summary()}
     if metrics is not None:
         out["scaled_loss"] = metrics.scaled_loss(batch)
     return out
@@ -228,6 +273,12 @@ def main():
                          "next to the checkpoints)")
     ap.add_argument("--trace-out",
                     help="write a span trace of the run (JSONL)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics, /metrics.json and /healthz on "
+                         "this port (0 = ephemeral; NITRO archs)")
+    ap.add_argument("--alerts-out",
+                    help="append health alerts as JSONL (they always "
+                         "print inline)")
     ap.add_argument("--num-devices", type=int, default=1,
                     help="data-parallel device count (NITRO archs; "
                          "trajectory is bitwise-identical at any value)")
@@ -263,7 +314,9 @@ def main():
                     telemetry_every=args.telemetry_every,
                     telemetry_out=args.telemetry_out,
                     trace_out=args.trace_out,
-                    num_devices=args.num_devices, dp_reduce=args.dp_reduce)
+                    num_devices=args.num_devices, dp_reduce=args.dp_reduce,
+                    metrics_port=args.metrics_port,
+                    alerts_out=args.alerts_out)
     elif args.arch in ARCHS:
         train_lm(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
                  scale=args.scale, ckpt_dir=args.ckpt_dir,

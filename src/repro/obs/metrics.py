@@ -34,8 +34,18 @@ import bisect
 import json
 import math
 import threading
+import time
 from collections import deque
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+#: Repo version reported by ``repro_build_info`` (``src/repro`` is a
+#: namespace package, so the constant lives here, on the obs spine).
+REPRO_VERSION = "0.8.0"
+
+# Stamped at first import — the closest observable to process start
+# without a psutil dependency; good to well under a second, which is
+# all an uptime panel needs.
+_PROCESS_START_S = time.time()
 
 # Percentiles every serving surface reports, as (label, quantile).
 PERCENTILES = (("p50", 0.50), ("p90", 0.90), ("p95", 0.95), ("p99", 0.99))
@@ -395,6 +405,30 @@ class MetricRegistry:
         return out
 
 
+def register_build_info(registry: MetricRegistry, *,
+                        backend: str = "unknown",
+                        version: str = REPRO_VERSION) -> None:
+    """Register the standard process-identity metrics on ``registry``.
+
+    ``repro_build_info{version,backend} 1`` — the Prometheus *info*
+    idiom: a constant-1 gauge whose labels carry the identity, so
+    dashboards can join any series against "which build/backend answered
+    this scrape".  ``process_start_time_seconds`` (unix epoch) gives
+    uptime for free as ``time() - process_start_time_seconds``.  Both
+    are idempotent; every scrape surface (``serve_vision``,
+    ``launch/train --metrics-port``) calls this before serving.
+    """
+    registry.gauge(
+        "repro_build_info",
+        "constant 1; labels carry the repo version and device backend",
+        labels=("version", "backend"),
+    ).labels(version=version, backend=backend).set(1)
+    registry.gauge(
+        "process_start_time_seconds",
+        "unix time this process imported repro.obs.metrics",
+    ).set(_PROCESS_START_S)
+
+
 # ---------------------------------------------------------------------------
 # HTTP exposition (Prometheus scrape endpoint)
 # ---------------------------------------------------------------------------
@@ -404,8 +438,11 @@ class MetricsServer:
     """Tiny threaded HTTP server exposing one registry.
 
     ``GET /metrics`` → Prometheus text; ``GET /metrics.json`` → the JSON
-    snapshot.  ``port=0`` binds an ephemeral port (read it back from
-    ``.port`` — what the tests and ``--metrics-port 0`` use).
+    snapshot; ``GET /healthz`` → ``ok`` (a liveness probe that answers
+    while the worker thread still schedules requests — what container
+    orchestration and the obs_top dashboard poll).  ``port=0`` binds an
+    ephemeral port (read it back from ``.port`` — what the tests and
+    ``--metrics-port 0`` use).
     """
 
     def __init__(self, registry: MetricRegistry, *, port: int = 0,
@@ -423,6 +460,9 @@ class MetricsServer:
                     body = json.dumps(server.registry.json_snapshot(),
                                       sort_keys=True).encode()
                     ctype = "application/json"
+                elif self.path == "/healthz":
+                    body = b"ok\n"
+                    ctype = "text/plain; charset=utf-8"
                 else:
                     self.send_error(404, "unknown path (try /metrics)")
                     return

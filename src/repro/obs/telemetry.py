@@ -190,8 +190,9 @@ def to_records(telem: dict, *, cfg, step: int) -> list[dict]:
     """Flatten one step's telemetry pytree into JSON-ready row dicts.
 
     One row per block (weights/grads/pre-activations + dead fraction +
-    the static ``alpha_inv``), one for the output layers, and one
-    ``_opt`` row with the evolving optimiser scalars.
+    the static ``alpha_inv``), one for the output layers, one ``_opt``
+    row with the evolving optimiser scalars, and — on data-parallel
+    runs — a ``_dp`` row (shard count + compressed-reducer limb fit).
     """
     records = []
     for i, (spec, bt) in enumerate(zip(cfg.blocks, telem["blocks"])):
@@ -221,6 +222,12 @@ def to_records(telem: dict, *, cfg, step: int) -> list[dict]:
         "layer": "_opt",
         **{k: int(v) for k, v in telem["opt"].items()},
     })
+    if "dp" in telem:  # data-parallel runs only (see parallel.dp)
+        records.append({
+            "step": int(step),
+            "layer": "_dp",
+            **{k: int(v) for k, v in telem["dp"].items()},
+        })
     return records
 
 

@@ -19,6 +19,15 @@ Design points:
   * **cheap when off** — ``NULL_TRACER`` is a no-op stand-in with the
     same surface, so instrumented code reads
     ``self.tracer.span("assemble")`` unconditionally;
+  * **cheap when on** — a span is a small ``__slots__`` context manager
+    (no ``@contextmanager`` generator machinery), ids come from an
+    atomic counter instead of a lock round-trip, the per-thread name is
+    cached, and attr-less spans share one empty dict.  Hot paths
+    pre-bind the span name once (``bound = tracer.bind("fleet.fetch")``,
+    then ``with bound(model=...)``) so the per-call cost is one object
+    allocation + two clock reads + one lock acquisition at exit —
+    what lets the fleet batch loop trace every phase inside the <3%
+    overhead budget (``BENCH_obs.json``);
   * **profiler bridge** — ``annotate=True`` additionally wraps each span
     in ``jax.profiler.TraceAnnotation`` (when available), making the
     spans visible inside an XLA profile without a second instrumentation
@@ -30,11 +39,12 @@ for offline analysis; ``docs/OBSERVABILITY.md`` shows how to read it.
 
 from __future__ import annotations
 
+import itertools
 import json
 import threading
 import time
 from collections import deque
-from contextlib import contextmanager, nullcontext
+from contextlib import nullcontext
 from typing import Any, NamedTuple
 
 
@@ -63,52 +73,112 @@ def _trace_annotation_cls():
         return None
 
 
+# Shared by every attr-less span: allocating a fresh dict per span was a
+# measurable slice of the fleet batch loop's tracing overhead.  Treat as
+# immutable (Span.attrs aliases it).
+_EMPTY_ATTRS: dict[str, Any] = {}
+
+
+class _ThreadState(threading.local):
+    """Per-thread nesting stack + cached thread name.
+
+    ``threading.current_thread().name`` costs a dict lookup and an
+    attribute walk per call; spans close often enough that caching it
+    per thread is worth the subclassed-local dance.
+    """
+
+    def __init__(self):
+        self.stack: list[int] = []
+        self.name: str = threading.current_thread().name
+
+
+class _SpanHandle:
+    """One in-flight span: a plain ``__slots__`` context manager.
+
+    Replaces the historical ``@contextmanager`` generator — generator
+    frames, ``next()`` dispatch and the try/finally trampoline cost
+    ~10× this object's allocation on the fleet batch hot path.  The
+    span is recorded even when the body raises — a failing batch still
+    shows up in the trace, with its true duration.
+    """
+
+    __slots__ = ("_tracer", "_name", "_attrs", "_parent", "_span_id",
+                 "_t0", "_bridge")
+
+    def __init__(self, tracer: "Tracer", name: str, attrs: dict[str, Any]):
+        self._tracer = tracer
+        self._name = name
+        self._attrs = attrs
+
+    def __enter__(self) -> int:
+        tracer = self._tracer
+        stack = tracer._state.stack
+        self._parent = stack[-1] if stack else None
+        self._span_id = span_id = next(tracer._ids)
+        stack.append(span_id)
+        if tracer._annotation is not None:
+            self._bridge = tracer._annotation(self._name)
+            self._bridge.__enter__()
+        else:
+            self._bridge = None
+        self._t0 = time.monotonic_ns()
+        return span_id
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        t1 = time.monotonic_ns()
+        tracer = self._tracer
+        state = tracer._state
+        state.stack.pop()
+        if self._bridge is not None:
+            self._bridge.__exit__(exc_type, exc, tb)
+        with tracer._lock:
+            tracer._spans.append(Span(
+                name=self._name, t_start_ns=self._t0, t_end_ns=t1,
+                span_id=self._span_id, parent_id=self._parent,
+                thread=state.name, attrs=self._attrs,
+            ))
+            tracer.recorded += 1
+        return False
+
+
+class _BoundSpan:
+    """A span factory with the name pre-bound (``tracer.bind(name)``).
+
+    Calling it returns a fresh ``_SpanHandle`` — per-call state cannot
+    be shared, nesting and concurrent use of the same name must work —
+    but the name lookup, kwargs plumbing, and (for attr-less calls) the
+    attrs dict are paid once at bind time instead of per span.
+    """
+
+    __slots__ = ("_tracer", "_name")
+
+    def __init__(self, tracer: "Tracer", name: str):
+        self._tracer = tracer
+        self._name = name
+
+    def __call__(self, **attrs) -> _SpanHandle:
+        return _SpanHandle(self._tracer, self._name,
+                           attrs if attrs else _EMPTY_ATTRS)
+
+
 class Tracer:
     """Records nested spans; export with ``snapshot()``/``export_jsonl``."""
 
     def __init__(self, *, capacity: int = 65536, annotate: bool = False):
         self._lock = threading.Lock()
         self._spans: deque[Span] = deque(maxlen=capacity)
-        self._local = threading.local()
-        self._next_id = 1
+        self._state = _ThreadState()
+        self._ids = itertools.count(1)  # CPython next() is atomic
         self.recorded = 0  # total spans ever finished (incl. evicted)
         self._annotation = _trace_annotation_cls() if annotate else None
 
-    def _stack(self) -> list[int]:
-        stack = getattr(self._local, "stack", None)
-        if stack is None:
-            stack = self._local.stack = []
-        return stack
+    def span(self, name: str, **attrs) -> _SpanHandle:
+        """Context manager recording one span around its body."""
+        return _SpanHandle(self, name, attrs if attrs else _EMPTY_ATTRS)
 
-    @contextmanager
-    def span(self, name: str, **attrs):
-        """Context manager recording one span around its body.
-
-        The span is recorded even when the body raises — a failing batch
-        still shows up in the trace, with its true duration.
-        """
-        stack = self._stack()
-        parent = stack[-1] if stack else None
-        with self._lock:
-            span_id = self._next_id
-            self._next_id += 1
-        stack.append(span_id)
-        bridge = (self._annotation(name) if self._annotation is not None
-                  else nullcontext())
-        t0 = time.monotonic_ns()
-        try:
-            with bridge:
-                yield span_id
-        finally:
-            t1 = time.monotonic_ns()
-            stack.pop()
-            with self._lock:
-                self._spans.append(Span(
-                    name=name, t_start_ns=t0, t_end_ns=t1, span_id=span_id,
-                    parent_id=parent,
-                    thread=threading.current_thread().name, attrs=attrs,
-                ))
-                self.recorded += 1
+    def bind(self, name: str) -> _BoundSpan:
+        """Pre-bind ``name``: hot paths call the result as ``bound(**attrs)``."""
+        return _BoundSpan(self, name)
 
     def event(self, name: str, **attrs) -> None:
         """Record an instantaneous (zero-duration) span."""
@@ -152,8 +222,19 @@ class _NullTracer:
 
     recorded = 0
 
+    # one reusable, reentrant no-op CM: nullcontext carries no per-entry
+    # state, so sharing a single instance is safe and allocation-free
+    _NULL_CM = nullcontext(0)
+
     def span(self, name: str, **attrs):
-        return nullcontext(0)
+        return self._NULL_CM
+
+    def bind(self, name: str):
+        return self._null_bound
+
+    @staticmethod
+    def _null_bound(**attrs):
+        return _NullTracer._NULL_CM
 
     def event(self, name: str, **attrs) -> None:
         pass

@@ -42,6 +42,7 @@ guarantee this; the tests use subprocess workers).  See
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -105,6 +106,22 @@ def _reduce_tensor_telemetry(tt, axis_name: str):
         sat_int32=jax.lax.psum(tt.sat_int32, axis_name),
         max_abs=jax.lax.pmax(tt.max_abs, axis_name),
     )
+
+
+def _grads_fit_int16(grads, axis_name: str) -> jax.Array:
+    """1 iff every shard-local gradient element fits 2 int8 limbs (int16).
+
+    The exactness precondition of running ``dp_reduce="compress"`` at
+    ``num_limbs=2`` — evaluated on the *pre-reduce* shard-local
+    gradients (the values that would go on the wire) and pmin-ed so
+    every shard reports the global verdict.  Integer-only throughout
+    (comparisons → int32), so the float-free jaxpr guarantee holds.
+    """
+    local = jnp.min(jnp.stack([
+        compress.fits_limbs(g, 2).astype(jnp.int32)
+        for g in jax.tree_util.tree_leaves(grads)
+    ]))
+    return jax.lax.pmin(local, axis_name)
 
 
 def _dp_telemetry(cfg, new_state, aux, grads, state, axis_name: str):
@@ -180,15 +197,27 @@ def dp_train_step(
             fused=fused, fuse_bwd=fuse_bwd, backend=backend,
             conv_mode=conv_mode, dp_axis=DP_AXIS, dp_shards=n,
         )
-        grads = reduce_gradients(grads, DP_AXIS, dp_reduce)
+        if telemetry:
+            # pre-reduce: the shard-local widths are what hit the wire
+            fits16 = _grads_fit_int16(grads, DP_AXIS)
+        with jax.named_scope("dp/reduce_gradients"):
+            grads = reduce_gradients(grads, DP_AXIS, dp_reduce)
         metrics = les.StepMetrics(
             *(jax.lax.psum(m, DP_AXIS) for m in metrics)
         )
         new_state = les.apply_gradients(state, grads)
         if telemetry:
-            return new_state, metrics, _dp_telemetry(
+            telem = _dp_telemetry(
                 cfg, new_state, aux, grads, state, DP_AXIS
             )
+            # topology-scoped extras: excluded from the cross-topology
+            # bitwise-identity comparisons (shard count is not a property
+            # of the *training trajectory*), surfaced as the `_dp` row
+            telem["dp"] = {
+                "grad_fits_int16": fits16,
+                "shards": jnp.asarray(n, jnp.int32),
+            }
+            return new_state, metrics, telem
         return new_state, metrics
 
     sharded = shard_map(

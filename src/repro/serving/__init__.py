@@ -28,9 +28,11 @@ _EXPORTS = {
     "ModelEntry": "repro.serving.registry",
     "ModelRegistry": "repro.serving.registry",
     "EngineStats": "repro.serving.stats",
+    "Slo": "repro.serving.stats",
     "fleet_snapshot_delta": "repro.serving.stats",
     "latency_summary_ms": "repro.serving.stats",
     "percentile": "repro.serving.stats",
+    "slo_summary": "repro.serving.stats",
     "snapshot_delta": "repro.serving.stats",
     "VisionEngine": "repro.serving.vision",
     "VisionResult": "repro.serving.vision",

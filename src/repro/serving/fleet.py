@@ -50,7 +50,14 @@ import numpy as np
 from repro.obs.metrics import MetricRegistry
 from repro.obs.trace import NULL_TRACER, Tracer
 from repro.serving.registry import ModelEntry, ModelRegistry
-from repro.serving.stats import EngineStats
+from repro.serving.stats import (
+    REQUEST_DEADLINE_SECONDS,
+    SLACK_BUCKETS,
+    SLO_DEADLINE_SECONDS,
+    SLO_VIOLATIONS_TOTAL,
+    EngineStats,
+    Slo,
+)
 from repro.serving.vision import (
     Request,
     VisionResult,
@@ -151,6 +158,14 @@ class FleetEngine:
     ``obs.Tracer``) records one span per batch-lifecycle phase —
     assemble / dispatch / fetch / deliver — tagged with the model id;
     both default to no-ops with zero hot-path cost.
+
+    SLO attribution: a model whose ``ModelEntry`` carries an
+    ``Slo(deadline_ms)`` gets every delivered request's deadline slack
+    recorded (``serve_request_deadline_seconds{model=…}`` histogram,
+    ``serve_slo_violations_total{model=…}`` counter,
+    ``serve_slo_deadline_seconds`` gauge for dashboards) plus an
+    engine-local roll-up in ``slo_snapshot()`` — see
+    ``serving.stats.Slo``.
     """
 
     def __init__(
@@ -171,6 +186,16 @@ class FleetEngine:
         self.coalesce_ms = coalesce_ms
         self.router = router or Router()
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # pre-bound batch-lifecycle spans: the name (and, for attr-less
+        # phases, the attrs dict) is resolved once here instead of per
+        # batch — the fleet-tracing row of BENCH_obs.json is gated <3%
+        self._span_assemble = self.tracer.bind("fleet.assemble")
+        self._span_dispatch = self.tracer.bind("fleet.dispatch")
+        self._span_fetch = self.tracer.bind("fleet.fetch")
+        self._span_deliver = self.tracer.bind("fleet.deliver")
+        # per-model SLO accounting (requests, violations) — written only
+        # by the worker thread, read by slo_snapshot()
+        self._slo_counts: dict[str, list[int]] = {}
         # inherit the registry's shared metrics so a metrics-enabled fleet
         # needs no extra plumbing; an explicit metrics= still wins
         self.metrics = metrics if metrics is not None else registry.metrics
@@ -189,10 +214,29 @@ class FleetEngine:
                 "real (unpadded) fraction of each launched batch",
                 buckets=(0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0),
             )
+            self._deadline_hist = self.metrics.histogram(
+                REQUEST_DEADLINE_SECONDS,
+                "per-request deadline slack in seconds "
+                "(negative = SLO violated)",
+                labels=("model",), buckets=SLACK_BUCKETS,
+            )
+            self._slo_violations = self.metrics.counter(
+                SLO_VIOLATIONS_TOTAL,
+                "requests answered after their model's SLO deadline",
+                labels=("model",),
+            )
+            self._slo_deadline = self.metrics.gauge(
+                SLO_DEADLINE_SECONDS,
+                "configured per-model SLO deadline",
+                labels=("model",),
+            )
         else:
             self.stats = EngineStats()  # fleet-wide; per-model in entry.stats
             self._depth_gauge = None
             self._fill_hist = None
+            self._deadline_hist = None
+            self._slo_violations = None
+            self._slo_deadline = None
         self._weights = dict(weights or {})
         self._wrr: dict[str, float] = {}
         self._queues: dict[str, deque[Request]] = {}
@@ -254,7 +298,22 @@ class FleetEngine:
     def snapshot(self) -> dict:
         """Fleet-wide + per-model stats in one JSON-ready dict."""
         return {"fleet": self.stats.snapshot(),
-                "models": self.registry.snapshot()}
+                "models": self.registry.snapshot(),
+                "slo": self.slo_snapshot()}
+
+    def slo_snapshot(self) -> dict:
+        """Per-model SLO attribution: {model: requests/violations/frac}.
+
+        Only models with a configured ``Slo`` appear.  Written solely by
+        the worker thread; a concurrent read sees some prefix of the
+        delivered batches, never a torn one (the two list slots are
+        updated under the GIL in one bytecode run).
+        """
+        return {
+            mid: {"requests": c[0], "violations": c[1],
+                  "violation_frac": c[1] / c[0] if c[0] else 0.0}
+            for mid, c in sorted(self._slo_counts.items())
+        }
 
     def close(self):
         """Drain every queue (all futures resolve) and stop the worker."""
@@ -393,8 +452,7 @@ class FleetEngine:
         the stack fails) would otherwise kill the engine's only worker
         thread and hang every pending future.
         """
-        with self.tracer.span("fleet.assemble", model=model_id,
-                              n=len(items)):
+        with self._span_assemble(model=model_id, n=len(items)):
             try:
                 entry: ModelEntry = self.registry.get(model_id)
                 plan = entry.plan  # read once: hot-swap flips atomically
@@ -412,8 +470,7 @@ class FleetEngine:
         """Asynchronously launch one assembled batch; returns in-flight
         state (entry, items, device array, t_launch) or None on failure."""
         entry, items, batch, plan = assembled
-        with self.tracer.span("fleet.dispatch", model=entry.model_id,
-                              n=len(items)):
+        with self._span_dispatch(model=entry.model_id, n=len(items)):
             t0 = time.perf_counter()
             try:
                 dev = plan.logits(batch)  # async — returns immediately
@@ -432,7 +489,7 @@ class FleetEngine:
         misattribute seconds to requests already finished on device.
         """
         entry, items, dev, t0 = inflight
-        with self.tracer.span("fleet.fetch", model=entry.model_id):
+        with self._span_fetch(model=entry.model_id):
             try:
                 logits = np.asarray(jax.device_get(dev))
             except Exception as e:  # runtime failure surfaces at the fetch
@@ -448,12 +505,44 @@ class FleetEngine:
         """
         entry, items, logits, t0, t_done = fetched
         n = len(items)
-        with self.tracer.span("fleet.deliver", model=entry.model_id, n=n):
+        with self._span_deliver(model=entry.model_id, n=n):
             entry.stats.record_batch(n, self.batch_size - n, t_done - t0)
             self.stats.record_batch(n, self.batch_size - n, t_done - t0)
             if self._fill_hist is not None:
                 self._fill_hist.observe(n / self.batch_size)
+            if entry.slo is not None:
+                self._attribute_slo(entry, items, t_done)
             resolve_batch(items, logits, t_done)
+
+    def _attribute_slo(self, entry: ModelEntry, items: list[Request],
+                       t_done: float) -> None:
+        """Per-request deadline attribution for one delivered batch.
+
+        Slack is measured against the request's **end-to-end** latency
+        (submit → delivery-ready), not the device batch latency — queueing
+        behind other models' batches is exactly the cost the future
+        SLO-aware scheduler must see.  Negative slack = violation.
+        """
+        slo: Slo = entry.slo
+        deadline_s = slo.deadline_s
+        slacks = [deadline_s - (t_done - req.t_submit) for req in items]
+        violations = sum(1 for s in slacks if s < 0)
+        counts = self._slo_counts.setdefault(entry.model_id, [0, 0])
+        counts[0] += len(items)
+        counts[1] += violations
+        if self.metrics is not None:
+            hist = self._deadline_hist.labels(model=entry.model_id)
+            # touch the violation counter even when zero: a scrape must
+            # distinguish "no misses" from "never attributed"
+            violation_ctr = self._slo_violations.labels(
+                model=entry.model_id)
+            with self.metrics.lock:  # scrape-atomic per batch
+                self._slo_deadline.labels(model=entry.model_id).set(
+                    deadline_s)
+                for s in slacks:
+                    hist.observe(s)
+                if violations:
+                    violation_ctr.inc(violations)
 
     def _serve_loop(self):
         # The pipeline keeps exactly ONE batch executing at any moment and

@@ -33,7 +33,7 @@ import numpy as np
 from repro.infer.export import FrozenModel, load_fleet_manifest, load_frozen
 from repro.infer.plan import ExecutionPlan, compile_plan
 from repro.obs.metrics import MetricRegistry
-from repro.serving.stats import EngineStats
+from repro.serving.stats import EngineStats, Slo
 
 
 @dataclass
@@ -42,13 +42,16 @@ class ModelEntry:
 
     ``plan`` is replaced wholesale on hot-swap (never mutated), so a
     scheduler that read the entry keeps a self-consistent plan for the
-    batch it is assembling even while a swap lands.
+    batch it is assembling even while a swap lands.  ``slo`` is the
+    model's serving objective (or None): like the stats, it belongs to
+    the long-lived model *id*, so hot-swaps preserve it.
     """
 
     model_id: str
     plan: ExecutionPlan
     version: int = 0
     stats: EngineStats = field(default_factory=EngineStats)
+    slo: Slo | None = None
 
     @property
     def input_shape(self) -> tuple[int, ...]:
@@ -104,7 +107,8 @@ class ModelRegistry:
     # ---- lifecycle --------------------------------------------------------
 
     def register(self, model_id: str, fm: FrozenModel, *,
-                 backend: str | None = None) -> ModelEntry:
+                 backend: str | None = None,
+                 slo: Slo | None = None) -> ModelEntry:
         """Compile ``fm`` and serve it as ``model_id`` (id must be free)."""
         if not model_id:
             raise ValueError("model_id must be non-empty")
@@ -116,7 +120,7 @@ class ModelRegistry:
                     f"use swap() to hot-swap its checkpoint"
                 )
             entry = ModelEntry(model_id=model_id, plan=plan,
-                               stats=self._make_stats(model_id))
+                               stats=self._make_stats(model_id), slo=slo)
             self._entries[model_id] = entry
             self._pad_for(plan.input_shape)
         self._record_event("register", entry)
@@ -124,10 +128,23 @@ class ModelRegistry:
 
     def load(self, model_id: str, model_dir: str, *,
              step: int | None = None,
-             backend: str | None = None) -> ModelEntry:
+             backend: str | None = None,
+             slo: Slo | None = None) -> ModelEntry:
         """``load_frozen`` + ``register`` in one call."""
         return self.register(model_id, load_frozen(model_dir, step=step),
-                             backend=backend)
+                             backend=backend, slo=slo)
+
+    def set_slo(self, model_id: str, slo: Slo | None) -> ModelEntry:
+        """Attach (or clear) a model's serving objective after load.
+
+        The SLO belongs to the stable id: hot-swaps keep it, and engines
+        pick the change up on the next delivered batch (the entry is
+        read per batch).
+        """
+        with self._lock:
+            entry = self._require(model_id)
+            entry.slo = slo
+        return entry
 
     def swap(self, model_id: str, fm: FrozenModel, *,
              backend: str | None = None) -> ModelEntry:
@@ -191,6 +208,7 @@ class ModelRegistry:
         return {
             e.model_id: {"version": e.version,
                          "model": e.plan.name,
+                         "slo_ms": e.slo.deadline_ms if e.slo else None,
                          **e.stats.snapshot()}
             for e in entries
         }

@@ -23,9 +23,17 @@ read it concurrently: ``record_batch`` holds the registry lock across
 all its updates (one acquisition per *batch*, not per request —
 negligible next to a device launch), so ``snapshot()`` — which takes the
 same lock — never observes a half-applied batch.
+
+This module also owns the **SLO vocabulary**: ``Slo(deadline_ms)`` is
+the per-model objective a ``ModelEntry`` carries, ``slo_summary`` the
+per-arm p99-vs-SLO roll-up benchmarks report, and the
+``serve_request_deadline_seconds`` / ``serve_slo_violations_total``
+family names the fleet engine emits under.
 """
 
 from __future__ import annotations
+
+from dataclasses import dataclass
 
 from repro.obs.metrics import (  # noqa: F401 — historical re-export home
     PERCENTILES,
@@ -39,6 +47,68 @@ REQUESTS_TOTAL = "serve_requests_total"
 BATCHES_TOTAL = "serve_batches_total"
 PADDED_SLOTS_TOTAL = "serve_padded_slots_total"
 BATCH_LATENCY_SECONDS = "serve_batch_latency_seconds"
+
+# SLO-attribution families (FleetEngine, per ``model`` label).
+REQUEST_DEADLINE_SECONDS = "serve_request_deadline_seconds"
+SLO_VIOLATIONS_TOTAL = "serve_slo_violations_total"
+SLO_DEADLINE_SECONDS = "serve_slo_deadline_seconds"
+
+# Deadline-slack buckets (seconds): symmetric around 0 so the violating
+# tail (negative slack = missed deadline) is as resolvable as the
+# healthy side — a latency-shaped all-positive ladder would fold every
+# miss into one bucket.
+SLACK_BUCKETS = (-1.0, -0.25, -0.1, -0.05, -0.01, 0.0,
+                 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0)
+
+
+@dataclass(frozen=True)
+class Slo:
+    """A per-model serving objective: answer within ``deadline_ms``.
+
+    Attached to a ``ModelEntry`` (``ModelRegistry.register(..., slo=)``
+    or ``set_slo``); ``FleetEngine`` then records every delivered
+    request's **deadline slack** (``deadline − end-to-end latency``,
+    seconds; negative = violation) into
+    ``serve_request_deadline_seconds{model=…}`` and counts misses in
+    ``serve_slo_violations_total{model=…}`` — the attribution substrate
+    the ROADMAP's SLO-aware scheduler will optimise against.
+    """
+
+    deadline_ms: float
+
+    def __post_init__(self):
+        if not self.deadline_ms > 0:
+            raise ValueError(f"Slo deadline must be > 0 ms, "
+                             f"got {self.deadline_ms!r}")
+
+    @property
+    def deadline_s(self) -> float:
+        return self.deadline_ms / 1e3
+
+    def slack_s(self, latency_s: float) -> float:
+        """Signed headroom of one answered request (negative = missed)."""
+        return self.deadline_s - latency_s
+
+
+def slo_summary(latencies_s, slo: Slo | None) -> dict:
+    """Per-arm p99-vs-SLO roll-up (the ``BENCH_serve.json`` fields).
+
+    ``latencies_s`` are end-to-end per-request latencies for one model
+    arm; with no SLO configured only the p99 is reported.
+    """
+    lats = sorted(latencies_s)
+    p99_ms = percentile(lats, 0.99) * 1e3
+    out = {"p99_ms": p99_ms, "slo_ms": None}
+    if slo is not None:
+        violations = sum(1 for v in lats if v > slo.deadline_s)
+        out.update(
+            slo_ms=slo.deadline_ms,
+            p99_slack_ms=slo.deadline_ms - p99_ms,
+            slo_violations=violations,
+            violation_frac=violations / len(lats) if lats else 0.0,
+            meets_slo=p99_ms <= slo.deadline_ms,
+        )
+    return out
 
 
 def snapshot_delta(pre: dict, post: dict) -> dict:

@@ -126,6 +126,14 @@ def main() -> None:
     for i, leaf in enumerate(jax.tree_util.tree_leaves(state)):
         payload[f"state_{i:03d}"] = np.asarray(leaf)
     if telem is not None:
+        # the `dp` entry (shard count, limb-fit flag) is topology-scoped
+        # by design — drop it so the telemetry leaves compare bitwise
+        # across device counts; assert its shape here instead
+        dp_extra = telem.pop("dp", None)
+        if args.reducer != "single":
+            assert dp_extra is not None
+            assert int(dp_extra["shards"]) == args.devices
+            assert int(dp_extra["grad_fits_int16"]) in (0, 1)
         for i, leaf in enumerate(jax.tree_util.tree_leaves(telem)):
             payload[f"telem_{i:03d}"] = np.asarray(leaf)
     np.savez(args.out, **payload)

@@ -154,6 +154,11 @@ class TestInProcess:
         st_p, m_p = dp.make_dp_train_step(cfg, mesh)(state, x, labels, key)
         assert_bitwise_equal(st_t, st_p)
         assert_bitwise_equal(m_t, m_p)
+        # the `dp` entry is topology-scoped (shard count, limb-fit flag)
+        # and deliberately absent from the single-device readout
+        dp_extra = telem.pop("dp")
+        assert int(dp_extra["shards"]) == 1
+        assert int(dp_extra["grad_fits_int16"]) in (0, 1)
         # and the readout itself matches the single-device readout
         _, _, telem_ref = jax.jit(
             lambda s, x, l, k: les.train_step(

@@ -718,3 +718,109 @@ class TestFleetPaperConfig:
             vision = np.stack([f.result().logits
                                for f in [ve.submit(i) for i in imgs]])
         np.testing.assert_array_equal(fleet, vision)
+
+
+# ---------------------------------------------------------------------------
+# SLO attribution
+# ---------------------------------------------------------------------------
+
+
+class TestSlo:
+    def test_slo_validation_and_units(self):
+        from repro.serving import Slo
+
+        slo = Slo(deadline_ms=50.0)
+        assert slo.deadline_s == 0.05
+        assert slo.slack_s(0.04) == pytest.approx(0.01)
+        assert slo.slack_s(0.06) == pytest.approx(-0.01)
+        with pytest.raises(ValueError, match="deadline"):
+            Slo(deadline_ms=0)
+        with pytest.raises(ValueError, match="deadline"):
+            Slo(deadline_ms=-5)
+
+    def test_slo_summary_with_and_without_objective(self):
+        from repro.serving import Slo, slo_summary
+
+        # nearest-rank p99 of 100 samples = the 99th smallest
+        lats = [0.010] * 97 + [0.080] * 3
+        out = slo_summary(lats, Slo(deadline_ms=50.0))
+        assert out["p99_ms"] == pytest.approx(80.0)
+        assert out["slo_ms"] == 50.0
+        assert out["p99_slack_ms"] == pytest.approx(-30.0)
+        assert out["slo_violations"] == 3
+        assert out["violation_frac"] == pytest.approx(0.03)
+        assert out["meets_slo"] is False
+        ok = slo_summary([0.001] * 10, Slo(deadline_ms=50.0))
+        assert ok["meets_slo"] is True and ok["slo_violations"] == 0
+        bare = slo_summary(lats, None)
+        assert bare["slo_ms"] is None and "meets_slo" not in bare
+
+    def test_registry_threads_slo_through_lifecycle(self):
+        from repro.serving import Slo
+
+        reg = ModelRegistry(backend="reference")
+        slo = Slo(deadline_ms=25.0)
+        entry = reg.register("prod", tiny_model(0), slo=slo)
+        assert entry.slo is slo
+        # hot-swap keeps the objective: it belongs to the stable id
+        reg.swap("prod", tiny_model(1))
+        assert reg.get("prod").slo is slo
+        assert reg.snapshot()["prod"]["slo_ms"] == 25.0
+        reg.set_slo("prod", None)
+        assert reg.get("prod").slo is None
+        assert reg.snapshot()["prod"]["slo_ms"] is None
+
+    def test_fleet_attributes_deadline_slack_per_request(self):
+        from repro.obs.metrics import MetricRegistry
+        from repro.serving import Slo
+
+        metrics = MetricRegistry()
+        reg = ModelRegistry(backend="reference", metrics=metrics)
+        # generous deadline: every request must make it → 0 violations
+        reg.register("prod", tiny_model(0), slo=Slo(deadline_ms=10_000.0))
+        reg.register("free", tiny_model(1))  # no SLO: must not be counted
+        with FleetEngine(reg, batch_size=4) as engine:
+            futs = [engine.submit(img, model="prod") for img in images(12)]
+            futs += [engine.submit(img, model="free") for img in images(4)]
+            for f in futs:
+                f.result()
+            snap = engine.snapshot()
+        assert snap["slo"] == {"prod": {
+            "requests": 12, "violations": 0, "violation_frac": 0.0}}
+        from repro.serving.stats import SLACK_BUCKETS
+        hist = metrics.histogram(
+            "serve_request_deadline_seconds", labels=("model",),
+            buckets=SLACK_BUCKETS).labels(model="prod")
+        assert hist.count == 12
+        assert all(s > 0 for s in hist.window)  # slack, and all positive
+        assert metrics.counter(
+            "serve_slo_violations_total", labels=("model",),
+        ).labels(model="prod").value == 0
+        assert metrics.gauge(
+            "serve_slo_deadline_seconds", labels=("model",),
+        ).labels(model="prod").value == 10.0
+
+    def test_fleet_counts_violations_against_tight_deadline(self):
+        from repro.serving import Slo
+
+        reg = ModelRegistry(backend="reference")
+        # 1 µs deadline: physically unmeetable → everything violates
+        reg.register("prod", tiny_model(0), slo=Slo(deadline_ms=0.001))
+        with FleetEngine(reg, batch_size=4) as engine:
+            for f in [engine.submit(img, model="prod")
+                      for img in images(8)]:
+                f.result()
+            slo_snap = engine.slo_snapshot()
+        assert slo_snap["prod"]["requests"] == 8
+        assert slo_snap["prod"]["violations"] == 8
+        assert slo_snap["prod"]["violation_frac"] == 1.0
+
+    def test_no_slo_means_no_attribution(self):
+        reg = ModelRegistry(backend="reference")
+        reg.register("prod", tiny_model(0))
+        with FleetEngine(reg, batch_size=4) as engine:
+            for f in [engine.submit(img, model="prod")
+                      for img in images(4)]:
+                f.result()
+            assert engine.slo_snapshot() == {}
+            assert engine.snapshot()["slo"] == {}

@@ -658,3 +658,83 @@ class TestCliIntegration:
             names = [json.loads(ln)["name"] for ln in f]
         assert names.count("train.step") == 4
         assert "train.eval" in names
+
+
+class TestBuildInfoAndHealthz:
+    def test_register_build_info_is_idempotent(self):
+        from repro.obs.metrics import REPRO_VERSION, register_build_info
+
+        reg = MetricRegistry()
+        register_build_info(reg, backend="cpu")
+        register_build_info(reg, backend="cpu")  # safe to call again
+        info = reg.gauge("repro_build_info",
+                         labels=("version", "backend"))
+        assert info.labels(version=REPRO_VERSION, backend="cpu").value == 1
+        start = reg.gauge("process_start_time_seconds").value
+        import time
+        assert 0 < start <= time.time()
+        text = reg.prometheus_text()
+        assert f'repro_build_info{{version="{REPRO_VERSION}"' in text
+
+    def test_healthz_endpoint(self):
+        reg = MetricRegistry()
+        with start_metrics_server(reg) as server:
+            base = f"http://{server.host}:{server.port}"
+            with urllib.request.urlopen(f"{base}/healthz") as resp:
+                assert resp.status == 200
+                assert resp.read() == b"ok\n"
+            # and the scrape paths still answer alongside it
+            with urllib.request.urlopen(f"{base}/metrics.json") as resp:
+                assert resp.status == 200
+
+
+class TestTracerBind:
+    def test_bound_span_is_equivalent_to_span(self):
+        tracer = Tracer()
+        bound = tracer.bind("hot.path")
+        with bound(step=1):
+            pass
+        with bound():  # empty attrs share one dict, must not leak attrs
+            pass
+        with tracer.span("hot.path", step=3):
+            pass
+        spans = tracer.snapshot()
+        assert [s.name for s in spans] == ["hot.path"] * 3
+        assert spans[0].attrs == {"step": 1}
+        assert spans[1].attrs == {}
+        assert spans[2].attrs == {"step": 3}
+
+    def test_bound_span_nests_like_span(self):
+        tracer = Tracer()
+        inner = tracer.bind("inner")
+        with tracer.span("outer") as outer_id:
+            with inner() as inner_id:
+                pass
+        by_name = {s.name: s for s in tracer.snapshot()}
+        assert by_name["inner"].parent_id == outer_id
+        assert by_name["inner"].span_id == inner_id
+        assert by_name["outer"].parent_id is None
+
+    def test_null_tracer_bind_is_free(self):
+        bound = NULL_TRACER.bind("x")
+        with bound(step=1) as span_id:
+            assert span_id == 0
+        assert NULL_TRACER.snapshot() == []
+
+
+class TestTrainCliHealth:
+    def test_train_cli_metrics_port_and_alerts(self, tmp_path, capsys):
+        from repro.launch.train import train_nitro
+
+        alerts_path = str(tmp_path / "alerts.jsonl")
+        result = train_nitro(
+            "mlp1", steps=4, batch=8, ckpt_dir=None, dataset="tiles32",
+            scale=0.05, telemetry_every=2,
+            telemetry_out=str(tmp_path / "metrics.jsonl"),
+            metrics_port=0, alerts_out=alerts_path,
+        )
+        assert "health" in result
+        assert result["health"]["steps_observed"] == 2  # sampled steps
+        assert result["straggler_events"] >= 0
+        out = capsys.readouterr().out
+        assert "[metrics] serving http://127.0.0.1:" in out

@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Validate the machine-readable ``BENCH_*.json`` benchmark artifacts.
+
+Every benchmark emits a JSON payload next to its stdout CSV; downstream
+tooling (dashboards, regression diffs, the PR driver) reads those files
+blind — so their shape is a contract.  This gate pins it:
+
+  * **common**: an object with a non-empty ``benchmark`` string and a
+    non-empty ``results`` list of objects;
+  * **honesty invariant**: any ``bit_exact`` field must be ``true`` —
+    a benchmark must never report timings for two computations that
+    disagree.  (``meets_target`` is shape-checked but not value-checked:
+    it reports a *timing* outcome, which machine contention can
+    legitimately flip — a schema gate must stay deterministic);
+  * **per-file**: the ``benchmark`` name matches the emitting module,
+    ``BENCH_obs.json`` carries both overhead rows (train telemetry +
+    fleet tracing), and ``BENCH_serve.json`` carries the per-arm
+    p99-vs-SLO roll-up with at least one configured SLO exercised.
+
+Usage (CI runs it after the benchmark smokes, from the repo root)::
+
+    python tools/check_bench_schema.py            # all BENCH_*.json present
+    python tools/check_bench_schema.py BENCH_obs.json   # specific files
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+#: file name → expected ``benchmark`` field of the emitting module.
+EXPECTED_NAMES = {
+    "BENCH_conv.json": "conv_stream",
+    "BENCH_infer.json": "serve_infer",
+    "BENCH_obs.json": "obs_overhead",
+    "BENCH_parallel.json": "dp_scaling",
+    "BENCH_serve.json": "serve_fleet",
+    "BENCH_train.json": "train_step",
+}
+
+
+class SchemaError(Exception):
+    pass
+
+
+def _require(cond: bool, path: str, msg: str) -> None:
+    if not cond:
+        raise SchemaError(f"{path}: {msg}")
+
+
+def _walk_honesty(path: str, node, where: str = "$") -> None:
+    """``bit_exact`` must be True and ``meets_target`` a bool, anywhere."""
+    if isinstance(node, dict):
+        if "bit_exact" in node:
+            _require(node["bit_exact"] is True, path,
+                     f"{where}.bit_exact is {node['bit_exact']!r}, "
+                     f"expected true")
+        if "meets_target" in node:
+            _require(isinstance(node["meets_target"], bool), path,
+                     f"{where}.meets_target is not a bool")
+        for k, v in node.items():
+            _walk_honesty(path, v, f"{where}.{k}")
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk_honesty(path, v, f"{where}[{i}]")
+
+
+def _check_slo_block(path: str, slo: dict, where: str) -> None:
+    _require(isinstance(slo.get("p99_ms"), (int, float)), path,
+             f"{where}.p99_ms missing or non-numeric")
+    if slo.get("slo_ms") is not None:
+        for key in ("p99_slack_ms", "slo_violations", "violation_frac",
+                    "meets_slo"):
+            _require(key in slo, path, f"{where}.{key} missing (an arm "
+                     f"with an SLO must report the full roll-up)")
+
+
+def check_serve(path: str, payload: dict) -> None:
+    slos_exercised = 0
+    for i, result in enumerate(payload["results"]):
+        runs = result.get("runs")
+        _require(isinstance(runs, list) and runs, path,
+                 f"results[{i}].runs missing or empty")
+        for j, run in enumerate(runs):
+            where = f"results[{i}].runs[{j}]"
+            for key in ("scheduler", "requests", "latency_ms"):
+                _require(key in run, path, f"{where}.{key} missing")
+            if isinstance(run.get("slo"), dict):
+                _check_slo_block(path, run["slo"], f"{where}.slo")
+                slos_exercised += run["slo"].get("slo_ms") is not None
+            for arm, slo in (run.get("arms") or {}).items():
+                _check_slo_block(path, slo, f"{where}.arms[{arm}]")
+                slos_exercised += slo.get("slo_ms") is not None
+    _require(slos_exercised > 0, path,
+             "no run exercised a configured SLO (every slo_ms is null)")
+
+
+def check_obs(path: str, payload: dict) -> None:
+    kinds = {r.get("kind") for r in payload["results"]}
+    _require({"train_telemetry", "fleet_tracing"} <= kinds, path,
+             f"expected both overhead rows, found kinds {sorted(kinds)}")
+    for i, result in enumerate(payload["results"]):
+        _require("meets_target" in result, path,
+                 f"results[{i}].meets_target missing")
+
+
+def check_file(path: str) -> None:
+    with open(path) as f:
+        payload = json.load(f)
+    _require(isinstance(payload, dict), path, "top level is not an object")
+    name = payload.get("benchmark")
+    _require(isinstance(name, str) and name, path,
+             "missing non-empty 'benchmark' string")
+    expected = EXPECTED_NAMES.get(path.rsplit("/", 1)[-1])
+    if expected is not None:
+        _require(name == expected, path,
+                 f"benchmark {name!r} != expected {expected!r}")
+    results = payload.get("results")
+    _require(isinstance(results, list) and results, path,
+             "missing non-empty 'results' list")
+    _require(all(isinstance(r, dict) for r in results), path,
+             "every results[] entry must be an object")
+    _walk_honesty(path, payload)
+    if name == "serve_fleet":
+        check_serve(path, payload)
+    elif name == "obs_overhead":
+        check_obs(path, payload)
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        print("check_bench_schema: no BENCH_*.json found "
+              "(run the benchmarks first)", file=sys.stderr)
+        return 1
+    failures = 0
+    for path in paths:
+        try:
+            check_file(path)
+        except (OSError, json.JSONDecodeError, SchemaError) as e:
+            print(f"check_bench_schema: FAIL {e}", file=sys.stderr)
+            failures += 1
+        else:
+            print(f"check_bench_schema: ok {path}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

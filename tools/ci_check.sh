@@ -2,8 +2,10 @@
 # Quick CI gate: the tier-1 test command (minus slow integration tests)
 # run under a line-coverage floor for src/repro/{core,kernels,obs,parallel},
 # plus kernel / fused-training / fleet-serving / observability /
-# data-parallel benchmark smokes, a serve-CLI smoke (with a live /metrics
-# endpoint), and a docs link check.  Run from anywhere.
+# data-parallel benchmark smokes, a BENCH_*.json schema gate, obs_top and
+# alert-engine smokes over the checked-in fixtures, a serve-CLI smoke
+# (with a live /metrics endpoint), and a docs link check.  Run from
+# anywhere.
 #
 #   tools/ci_check.sh          # quick gate
 #   FULL=1 tools/ci_check.sh   # include slow integration tests (tier-1 exact)
@@ -39,6 +41,19 @@ python -m benchmarks.conv_stream --smoke
 python -m benchmarks.serve_fleet --smoke
 python -m benchmarks.obs_overhead --smoke
 python -m benchmarks.dp_scaling --smoke
+# the smokes above just (re)wrote BENCH_*.json — pin their shape
+python tools/check_bench_schema.py
+# dashboard post-mortem mode over the checked-in fixtures
+python -m repro.launch.obs_top --metrics tests/data/obs_top_metrics.jsonl \
+    --fleet-json tests/data/obs_top_fleet.json --once > /dev/null
+# alert engine offline over the same fixture: must fire on the seeded
+# headroom/saturation/dp regressions
+python - <<'EOF'
+from repro.obs.health import scan_jsonl
+m = scan_jsonl("tests/data/obs_top_metrics.jsonl")
+assert m.steps_observed == 3, m.steps_observed
+assert m.summary()["alerts_fired"] >= 3, m.summary()
+EOF
 python -m repro.launch.serve_vision --train-steps 0 --scale 0.0625 \
     --backend reference --requests 24 --batch 8 --metrics-port 0
 echo "[ci_check] OK"
