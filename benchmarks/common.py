@@ -1,10 +1,14 @@
-"""Shared benchmark utilities: timing, CSV emission, the CI smoke config."""
+"""Shared benchmark utilities: timing, CSV emission, the CI smoke config.
+
+The timing primitives now live in ``repro.kernels.autotune.measure`` (the
+autotuner searches with exactly the measurement discipline the benchmarks
+report with); they are re-exported here under their historical names so
+every benchmark keeps importing from one place.
+"""
 
 from __future__ import annotations
 
-import time
-
-import jax
+from repro.kernels.autotune.measure import time_fn, time_paired  # noqa: F401 — re-export
 
 
 def tiny_smoke_cfg():
@@ -23,43 +27,6 @@ def tiny_smoke_cfg():
         input_shape=(8, 8, 3), num_classes=10, gamma_inv=512,
         name="tiny-smoke",
     )
-
-
-def time_fn(fn, *args, iters: int = 10, warmup: int = 2, **kw) -> float:
-    """Median wall time per call in microseconds (blocks on results)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args, **kw))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args, **kw))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
-
-
-def time_paired(fns: dict, *args, iters: int, **kw) -> dict:
-    """Contention-robust paired timing: interleaved min-of-N per variant.
-
-    This container's CPU swings ~2× with co-tenant load; timing each
-    variant in its own block lets that drift masquerade as a speedup (or
-    a regression).  Every round therefore times each variant once,
-    back-to-back, alternating the order between rounds (ABBA) to cancel
-    first-mover cache effects.  Per variant the *minimum* over rounds is
-    reported — the timeit rationale: the minimum bounds the intrinsic
-    cost, while co-tenant interference only ever inflates a sample.
-    (All variants are jit-warmed before the first round.)
-    """
-    for fn in fns.values():  # jit warm-up
-        jax.block_until_ready(fn(*args, **kw))
-    names = list(fns)
-    best = {m: float("inf") for m in names}
-    for i in range(iters):
-        for m in names if i % 2 == 0 else reversed(names):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fns[m](*args, **kw))
-            best[m] = min(best[m], (time.perf_counter() - t0) * 1e6)
-    return best
 
 
 def emit(name: str, us_per_call: float, derived: str):

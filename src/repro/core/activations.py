@@ -42,6 +42,21 @@ def mu_int8(alpha_inv: int = DEFAULT_ALPHA_INV) -> int:
     return sum(m) // 4
 
 
+def relu_fits_int8(alpha_inv: int = DEFAULT_ALPHA_INV) -> bool:
+    """NITRO-ReLU output range [⌊-127/α_inv⌋-μ, 127-μ] within int8?
+
+    The single eligibility predicate behind both inference-side int8
+    decisions: inter-layer activation narrowing (``infer.plan``) and the
+    int8-operand MXU fast path.  True for every α_inv ≥ 2; α_inv = 1 is
+    the edge that does not fit — its segment means straddle zero so
+    μ = -1, pushing the positive bound to 127 - (-1) = 128.
+    """
+    mu = mu_int8(alpha_inv)
+    lo = (-127) // alpha_inv - mu
+    hi = 127 - mu
+    return -128 <= lo and hi <= 127
+
+
 def nitro_relu(z_star: jax.Array, alpha_inv: int = DEFAULT_ALPHA_INV) -> jax.Array:
     """Forward NITRO-ReLU: integer in, integer out in [-127-μ, 127-μ]."""
     numerics.assert_int(z_star, "nitro_relu input")

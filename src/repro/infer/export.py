@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as M
+from repro.core.activations import relu_fits_int8
 from repro.core.scaling import conv_scale_factor, linear_scale_factor
 from repro.train import checkpoint as ckpt
 
@@ -161,6 +162,7 @@ def quantization_report(fm: FrozenModel) -> dict:
     total_bytes = 0
     total_int32_bytes = 0
     max_bits = 0
+    act_int8 = False  # the network input enters as int32
     for i, layer in enumerate(fm.layers):
         arr = np.asarray(jax.device_get(layer.w))
         lo, hi = int(arr.min()), int(arr.max())
@@ -169,6 +171,11 @@ def quantization_report(fm: FrozenModel) -> dict:
         nbytes = int(arr.size) * arr.dtype.itemsize
         total_bytes += nbytes
         total_int32_bytes += int(arr.size) * 4
+        # mirrors infer.plan's per-step operand_dtype='auto' decision:
+        # int8 MXU operands are provably exact iff the incoming activation
+        # was int8-narrowed AND the frozen weight narrowed to int8
+        int8_eligible = act_int8 and arr.dtype == np.int8
+        act_int8 = layer.apply_relu and relu_fits_int8(layer.alpha_inv)
         report_layers.append({
             "index": i,
             "kind": layer.kind,
@@ -183,12 +190,16 @@ def quantization_report(fm: FrozenModel) -> dict:
             "zero_fraction": float((arr == 0).mean()),
             "bit_width": bits,
             "dtype_bits": arr.dtype.itemsize * 8,
+            "int8_operand_eligible": bool(int8_eligible),
             "magnitude_histogram": _magnitude_histogram(arr.ravel()),
         })
     return {
         "format": REPORT_FORMAT,
         "name": fm.name,
         "num_layers": len(fm.layers),
+        "num_int8_operand_eligible": sum(
+            1 for l in report_layers if l["int8_operand_eligible"]
+        ),
         "max_bit_width": max_bits,
         "total_bytes": total_bytes,
         "total_int32_bytes": total_int32_bytes,

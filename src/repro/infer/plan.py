@@ -42,12 +42,17 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.activations import mu_int8
+from repro.core.activations import relu_fits_int8
 from repro.core.numerics import INT_DTYPE
 from repro.infer.export import FrozenModel
+from repro.kernels.autotune import state as autotune_state
 from repro.kernels.nitro_conv import ops as conv_ops
 from repro.kernels.nitro_matmul import ops as nitro_ops
 from repro.kernels.nitro_matmul.ops import BACKENDS  # noqa: F401 — re-export (historical public name)
+
+#: Historical private name — the predicate now lives with the activation
+#: maths in ``core.activations`` (the export/serving layers use it too).
+_relu_fits_int8 = relu_fits_int8
 
 
 class StepMeta(NamedTuple):
@@ -62,14 +67,7 @@ class StepMeta(NamedTuple):
     out_dtype: str      # 'int8' | 'int32' — inter-layer activation dtype
     conv_mode: str = "" # conv only: 'stream' | 'materialise'
     fused_pool: bool = False  # pool folded into the conv kernel epilogue
-
-
-def _relu_fits_int8(alpha_inv: int) -> bool:
-    """NITRO-ReLU output range [⌊-127/α_inv⌋-μ, 127-μ] within int8?"""
-    mu = mu_int8(alpha_inv)
-    lo = (-127) // alpha_inv - mu
-    hi = 127 - mu
-    return -128 <= lo and hi <= 127
+    operand_dtype: str = "int32"  # MXU operand path: 'int8' | 'int32'
 
 
 def _fused(x2, w2, meta: StepMeta, backend: str):
@@ -82,7 +80,7 @@ def _fused(x2, w2, meta: StepMeta, backend: str):
     return nitro_ops.fused_matmul(
         x2, w2, sf=meta.sf, alpha_inv=meta.alpha_inv,
         apply_relu=meta.apply_relu, out_dtype=jnp.dtype(meta.out_dtype),
-        backend=backend,
+        backend=backend, operand_dtype=meta.operand_dtype,
     )
 
 
@@ -98,6 +96,7 @@ def _execute(weights, x, *, metas: tuple[StepMeta, ...], backend: str):
                 apply_relu=meta.apply_relu, pool=meta.pool,
                 out_dtype=jnp.dtype(meta.out_dtype),
                 backend=backend, conv_mode=meta.conv_mode,
+                operand_dtype=meta.operand_dtype,
             )
         else:  # 'linear' | 'output' — flatten anything spatial entering
             if a.ndim > 2:
@@ -116,20 +115,48 @@ class ExecutionPlan:
         *,
         backend: str = "auto",
         conv_mode: str = "stream",
+        operand_dtype: str = "auto",
     ):
+        """``operand_dtype`` selects the MXU operand path per step:
+
+        * ``'auto'``  — int8 wherever it is *provably* exact: the step's
+          incoming activation is already int8-narrowed (previous layer's
+          NITRO-ReLU range fit, per ``relu_fits_int8``) **and** the frozen
+          weight is int8.  Everything else stays int32.
+        * ``'int32'`` — the escape hatch: every step lifts to int32.
+        * ``'int8'``  — force the fast path; raises if no step qualifies
+          (so a misconfigured model cannot silently run all-int32).
+
+        Bitwise result-invariant either way — int8×int8→int32 dots equal
+        the lifted int32 dots exactly.
+        """
+        if operand_dtype not in nitro_ops.OPERAND_DTYPES:
+            raise ValueError(
+                f"unknown operand_dtype {operand_dtype!r}; "
+                f"one of {nitro_ops.OPERAND_DTYPES}"
+            )
         self.backend = nitro_ops.resolve_backend(backend)
         self.conv_mode = conv_ops.resolve_conv_mode(conv_mode)
+        self.operand_dtype = operand_dtype
         self.input_shape = fm.input_shape
         self.num_classes = fm.num_classes
         self.name = fm.name
         metas = []
-        for layer in fm.layers:
+        act_dtype = "int32"  # _execute casts the network input to INT_DTYPE
+        for i, layer in enumerate(fm.layers):
             out_dtype = (
                 "int8"
-                if layer.apply_relu and _relu_fits_int8(layer.alpha_inv)
+                if layer.apply_relu and relu_fits_int8(layer.alpha_inv)
                 else "int32"
             )
             is_conv = layer.kind == "conv"
+            int8_ok = act_dtype == "int8" and str(layer.w.dtype) == "int8"
+            step_od = (
+                "int8" if int8_ok and operand_dtype != "int32" else "int32"
+            )
+            autotune_state.note_int8_path(
+                f"{fm.name}/{i}", step_od == "int8"
+            )
             metas.append(StepMeta(
                 kind=layer.kind, sf=layer.sf, alpha_inv=layer.alpha_inv,
                 apply_relu=layer.apply_relu, pool=layer.pool,
@@ -139,7 +166,17 @@ class ExecutionPlan:
                 fused_pool=bool(
                     is_conv and layer.pool and self.conv_mode == "stream"
                 ),
+                operand_dtype=step_od,
             ))
+            act_dtype = out_dtype
+        if operand_dtype == "int8" and not any(
+            m.operand_dtype == "int8" for m in metas
+        ):
+            raise ValueError(
+                "operand_dtype='int8': no step is int8-eligible (needs an "
+                "int8-narrowed incoming activation AND an int8 weight); "
+                "use 'auto' or the int32 escape hatch"
+            )
         self.metas = tuple(metas)
         self.weights = [layer.w for layer in fm.layers]
         self._fn = jax.jit(functools.partial(
@@ -203,6 +240,7 @@ class ExecutionPlan:
                 "weight_dtype": str(w.dtype),
                 "sf": meta.sf,
                 "activation_dtype": meta.out_dtype,
+                "operand_dtype": meta.operand_dtype,
                 "pool": meta.pool,
                 "conv_mode": meta.conv_mode or None,
                 "fused_pool": meta.fused_pool,
@@ -225,7 +263,13 @@ class ExecutionPlan:
 
 
 def compile_plan(
-    fm: FrozenModel, *, backend: str = "auto", conv_mode: str = "stream"
+    fm: FrozenModel,
+    *,
+    backend: str = "auto",
+    conv_mode: str = "stream",
+    operand_dtype: str = "auto",
 ) -> ExecutionPlan:
     """FrozenModel → jit-compiled fused ExecutionPlan."""
-    return ExecutionPlan(fm, backend=backend, conv_mode=conv_mode)
+    return ExecutionPlan(
+        fm, backend=backend, conv_mode=conv_mode, operand_dtype=operand_dtype
+    )

@@ -1,0 +1,139 @@
+"""Tile configurations and the per-shape candidate search space.
+
+One ``TileConfig`` describes every tiling knob the fused kernels expose:
+
+  * ``bm / bn / bk`` — the ``nitro_matmul`` family's output-row, output-col
+    and contraction tile sizes (MXU-native 128 by default);
+  * ``bh``           — the ``nitro_conv`` family's output-row band height
+    (bounds the VMEM row ring + patch block);
+  * ``bf``           — the conv filter-tile width (the MXU lane dimension).
+
+This module is the **single definition of the defaults** that used to be
+duplicated across the four ``nitro_matmul`` kernel signatures and the two
+``nitro_conv`` modules — ``DEFAULT_BM/BN/BK``, ``DEFAULT_BH`` and
+``DEFAULT_BF`` there are now aliases of ``DEFAULT_TILES``' fields, so the
+autotuner, the dispatchers and the docs can never drift apart.
+
+Candidate generation respects two hardware constraints (TPU, per the
+Pallas guide):
+
+  * **MXU alignment** — the lane (last) dimension of a VMEM tile wants a
+    multiple of 128 (``bn``/``bk``/``bf``); sublane dimensions a multiple
+    of 8 (``bm``).  Sub-aligned candidates appear only through clamping,
+    i.e. when the problem dimension itself is smaller.
+  * **VMEM budget** — a candidate whose working set (operand tiles with
+    double buffering + accumulator/patch scratch) exceeds the budget is
+    rejected before it is ever measured.  16 MiB/core is the physical
+    VMEM; the default budget of 8 MiB leaves headroom for the compiler.
+
+The module is a dependency leaf (stdlib only) so every kernel package can
+import it without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+#: Physical VMEM per TPU core is ~16 MiB; budget half of it for the
+#: kernel working set so the compiler keeps room for spills/pipelining.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+MXU_LANE = 128     # lane (last-dim) tile granularity the MXU wants
+SUBLANE = 8        # sublane granularity for int32 tiles
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One complete tiling choice for the fused kernel family."""
+
+    bm: int = 128
+    bn: int = 128
+    bk: int = 128
+    bh: int = 8
+    bf: int = 128
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TileConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        vals = {k: int(v) for k, v in d.items() if k in fields}
+        cfg = cls(**vals)
+        for f in dataclasses.fields(cls):
+            if getattr(cfg, f.name) < 1:
+                raise ValueError(f"tile {f.name} must be >= 1, got {cfg}")
+        return cfg
+
+
+#: The historical hand-picked defaults every kernel falls back to.
+DEFAULT_TILES = TileConfig()
+
+
+def matmul_vmem_bytes(bm: int, bn: int, bk: int, *, itemsize: int = 4) -> int:
+    """Upper-bound VMEM working set of one ``nitro_matmul`` grid step:
+    double-buffered x/w operand tiles + the int32 accumulator and output
+    tile (``itemsize=1`` for the int8-operand path's input tiles)."""
+    return 2 * (bm * bk + bk * bn) * itemsize + 2 * bm * bn * 4
+
+
+def conv_vmem_bytes(
+    bh: int, bf: int, *, h: int, w: int, c: int, k: int, itemsize: int = 4
+) -> int:
+    """Upper-bound VMEM working set of one ``nitro_conv`` band step: the
+    input row ring, the band patch block, and double-buffered weight and
+    output tiles."""
+    ring = (bh + k - 1) * (w + k - 1) * c * itemsize
+    patches = bh * w * k * k * c * itemsize
+    return ring + patches + 2 * k * k * c * bf * 4 + 2 * bh * w * bf * 4
+
+
+def _clamped(candidates, dim: int) -> list[int]:
+    """Clamp candidate tile sizes to the problem dimension, dedup by the
+    *effective* (clamped) value, keep ascending order."""
+    seen: dict[int, None] = {}
+    for v in candidates:
+        seen.setdefault(max(1, min(v, dim)), None)
+    return list(seen)
+
+
+def matmul_candidates(
+    m: int, k: int, n: int, *, budget: int = VMEM_BUDGET_BYTES,
+    itemsize: int = 4,
+) -> list[TileConfig]:
+    """MXU-aligned, VMEM-feasible (bm, bn, bk) candidates for an (M,K)·(K,N)
+    fused matmul.  The default config is always first, so a search whose
+    winner is the argmin can never regress below the hand-picked tiles."""
+    out = [DEFAULT_TILES]
+    for bm in _clamped((32, 64, 128, 256), m):
+        for bn in _clamped((128, 256), n):
+            for bk in _clamped((128, 256, 512), k):
+                cand = TileConfig(bm=bm, bn=bn, bk=bk)
+                eff = (min(128, m), min(128, n), min(128, k))
+                if (bm, bn, bk) == eff:
+                    continue  # clamps to the default geometry — already in
+                if matmul_vmem_bytes(bm, bn, bk, itemsize=itemsize) <= budget:
+                    out.append(cand)
+    return out
+
+
+def conv_candidates(
+    h: int, w: int, c: int, kernel_size: int, f: int,
+    *, budget: int = VMEM_BUDGET_BYTES, itemsize: int = 4,
+) -> list[TileConfig]:
+    """VMEM-feasible (bh, bf) candidates for a streaming conv over
+    (H, W, C) with K×K filters and F output channels.  ``bh`` varies the
+    row-band height (the VMEM ring/patch working set), ``bf`` the
+    MXU-lane filter tile.  The default config is always first."""
+    out = [DEFAULT_TILES]
+    k = kernel_size
+    for bh in _clamped((2, 4, 8, 16, 32), h):
+        for bf in _clamped((128, 256), f):
+            cand = TileConfig(bh=bh, bf=bf)
+            eff = (min(8, h), min(128, f))
+            if (bh, bf) == eff:
+                continue  # clamps to the default geometry — already in
+            if conv_vmem_bytes(bh, bf, h=h, w=w, c=c, k=k,
+                               itemsize=itemsize) <= budget:
+                out.append(cand)
+    return out

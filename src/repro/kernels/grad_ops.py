@@ -37,6 +37,7 @@ from __future__ import annotations
 import jax
 
 from repro.core.numerics import int_matmul
+from repro.kernels.autotune.tiles import TileConfig
 from repro.kernels.nitro_conv import ops as conv_ops
 from repro.kernels.nitro_matmul import ops as mm_ops
 from repro.kernels.nitro_matmul.ref import masked_delta
@@ -51,12 +52,14 @@ def linear_grads(
     alpha_inv: int = 10,
     fuse_bwd: bool = True,
     backend: str = "auto",
+    tiles: TileConfig | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """IntegerLinear backward: returns ``(grad_x, grad_w)``.
 
     ``grad_w = xᵀ @ f(δ)`` and ``grad_x = f(δ) @ wᵀ`` where ``f`` is the
     NITRO-ReLU-bwd/STE when ``z_star`` is given (fused into the kernel
-    prologues by default) and the identity otherwise.
+    prologues by default) and the identity otherwise.  ``tiles`` overrides
+    the kernel tile sizes (``None`` → per-gradient autotune-cache lookup).
     """
     if z_star is not None and not fuse_bwd:
         delta = masked_delta(delta, z_star, alpha_inv)
@@ -66,10 +69,10 @@ def linear_grads(
         # integer matmuls — already a single XLA op each, nothing to fuse.
         return int_matmul(delta, w.T), int_matmul(x.T, delta)
     grad_w = mm_ops.grad_w_matmul(
-        x, delta, z_star, alpha_inv=alpha_inv, backend=backend
+        x, delta, z_star, alpha_inv=alpha_inv, backend=backend, tiles=tiles
     )
     grad_x = mm_ops.grad_x_matmul(
-        delta, z_star, w, alpha_inv=alpha_inv, backend=backend
+        delta, z_star, w, alpha_inv=alpha_inv, backend=backend, tiles=tiles
     )
     return grad_x, grad_w
 
@@ -84,6 +87,7 @@ def conv_grads(
     fuse_bwd: bool = True,
     backend: str = "auto",
     conv_mode: str = "stream",
+    tiles: TileConfig | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """IntegerConv2D backward: returns ``(grad_x, grad_w)``.
 
@@ -105,11 +109,11 @@ def conv_grads(
     grad_w = conv_ops.conv_grad_w(
         x, delta, kernel_size=w.shape[0],
         z_star=z_star, alpha_inv=alpha_inv,
-        backend=backend, conv_mode=conv_mode,
+        backend=backend, conv_mode=conv_mode, tiles=tiles,
     )
     grad_x = conv_ops.conv_grad_x(
         delta, w,
         z_star=z_star, alpha_inv=alpha_inv,
-        backend=backend, conv_mode=conv_mode,
+        backend=backend, conv_mode=conv_mode, tiles=tiles,
     )
     return grad_x, grad_w

@@ -55,6 +55,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.activations import mu_int8
 from repro.core.scaling import pow2_split
+from repro.kernels.autotune.tiles import DEFAULT_TILES
 from repro.kernels.nitro_conv.ref import DEFAULT_BH, conv_geometry, rot180_swap
 from repro.kernels.nitro_matmul.nitro_matmul import (
     _CompilerParams,
@@ -63,7 +64,9 @@ from repro.kernels.nitro_matmul.nitro_matmul import (
     _scale_tile,
 )
 
-DEFAULT_BF = 128  # filter-tile width (MXU lane dimension)
+#: Filter-tile width (MXU lane dimension) — alias of the single definition
+#: in ``kernels.autotune.tiles.DEFAULT_TILES``.
+DEFAULT_BF = DEFAULT_TILES.bf
 
 
 def _load_band(x_hbm, rows_ref, sem, n, band_idx, band_rows: int):
@@ -79,20 +82,32 @@ def _form_patches(rows_ref, patches_ref, *, k: int, bh: int, w_out: int, c: int)
     """Implicit im2col: K² overlapping slices of the row ring → patch block.
 
     ``patches[(r·W + w), (ki·K + kj)·C + c] = rows[r + ki, w + kj, c]`` —
-    the ``core.layers.im2col`` layout, built from VMEM-resident rows.
+    the ``core.layers.im2col`` layout, built from VMEM-resident rows.  The
+    patch block takes the scratch's dtype: int32 normally, int8 on the
+    int8-operand path (where the scratch is allocated int8 and the rows
+    are already int8 — a quarter of the patch VMEM footprint).
     """
     for ki in range(k):
         for kj in range(k):
             seg = rows_ref[ki:ki + bh, kj:kj + w_out, :]
             patches_ref[:, (ki * k + kj) * c:(ki * k + kj + 1) * c] = (
-                seg.reshape(bh * w_out, c).astype(jnp.int32)
+                seg.reshape(bh * w_out, c).astype(patches_ref.dtype)
             )
 
 
-def _band_matmul(patches_ref, w_ref, *, bh: int, w_out: int, bf: int):
-    """One MXU pass: (bh·W, K²C) @ (K²C, bf) → int32 (bh, W, bf)."""
+def _band_matmul(patches_ref, w_ref, *, bh: int, w_out: int, bf: int,
+                 int8_ops: bool = False):
+    """One MXU pass: (bh·W, K²C) @ (K²C, bf) → int32 (bh, W, bf).
+
+    ``int8_ops`` keeps both operands int8 (the MXU double-rate mode); the
+    ``preferred_element_type`` accumulator is int32 either way, so the
+    result is bit-identical.
+    """
+    w_tile = w_ref[...]
+    if not int8_ops:
+        w_tile = w_tile.astype(jnp.int32)
     z = jax.lax.dot_general(
-        patches_ref[...], w_ref[...].astype(jnp.int32),
+        patches_ref[...], w_tile,
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
@@ -110,6 +125,7 @@ def _stream_conv_kernel(
     x_hbm, w_ref, out_ref, rows, patches, sem, *,
     k, bh, w_out, c, bf,
     sf_shift, sf_residual, alpha_inv, mu, apply_relu, pool, out_dtype,
+    int8_ops=False,
 ):
     """Activation-only streaming conv step (the inference plan's layer)."""
     n, band, f = pl.program_id(0), pl.program_id(1), pl.program_id(2)
@@ -119,7 +135,8 @@ def _stream_conv_kernel(
         _load_band(x_hbm, rows, sem, n, band * bh, bh + k - 1)
         _form_patches(rows, patches, k=k, bh=bh, w_out=w_out, c=c)
 
-    z = _band_matmul(patches, w_ref, bh=bh, w_out=w_out, bf=bf)
+    z = _band_matmul(patches, w_ref, bh=bh, w_out=w_out, bf=bf,
+                     int8_ops=int8_ops)
     z = _scale_tile(z, sf_shift, sf_residual)
     if apply_relu:
         z = _relu_tile(z, alpha_inv, mu)
@@ -256,11 +273,15 @@ def _pad_operands(x, w, bf, h_pad, p):
     return xp, w_flat, f + f_pad
 
 
-def _conv_scratches(x, k, bh, w_sp, c):
-    """The kernel's VMEM working set: row ring, patch block, DMA semaphore."""
+def _conv_scratches(x, k, bh, w_sp, c, *, patch_dtype=jnp.int32):
+    """The kernel's VMEM working set: row ring, patch block, DMA semaphore.
+
+    ``patch_dtype=int8`` is the int8-operand path's patch block — 4× less
+    patch VMEM, feeding the MXU's double-rate int8 mode.
+    """
     return [
         pltpu.VMEM((bh + k - 1, w_sp + k - 1, c), x.dtype),
-        pltpu.VMEM((bh * w_sp, k * k * c), jnp.int32),
+        pltpu.VMEM((bh * w_sp, k * k * c), patch_dtype),
         pltpu.SemaphoreType.DMA,
     ]
 
@@ -269,7 +290,7 @@ def _conv_scratches(x, k, bh, w_sp, c):
     jax.jit,
     static_argnames=(
         "sf", "alpha_inv", "apply_relu", "pool", "out_dtype",
-        "bh", "bf", "interpret",
+        "bh", "bf", "operand_dtype", "interpret",
     ),
 )
 def stream_conv(
@@ -283,6 +304,7 @@ def stream_conv(
     out_dtype=jnp.int32,
     bh: int = DEFAULT_BH,
     bf: int = DEFAULT_BF,
+    operand_dtype: str = "int32",
     interpret: bool = False,
 ) -> jax.Array:
     """Streaming fused 'same' conv: ``relu(⌊conv(x, w)/sf⌋)`` (+2×2 pool).
@@ -290,7 +312,19 @@ def stream_conv(
     x: (N,H,W,C) int, w: (K,K,C,F) int, K odd → (N,H,W,F) activations, or
     (N,H//2,W//2,F) with ``pool=True``.  Bit-exact with the materialised
     im2col + ``nitro_matmul`` path (+ separate pool) on every shape.
+
+    ``operand_dtype='int8'`` keeps the VMEM row ring *and* the patch block
+    int8 and issues int8×int8→int32 MXU dots — both operands must already
+    be int8 (the dispatcher proves eligibility and narrows).
     """
+    if operand_dtype == "int8" and not (
+        x.dtype == jnp.int8 and w.dtype == jnp.int8
+    ):
+        raise ValueError(
+            f"operand_dtype='int8' requires int8 operands, got "
+            f"{x.dtype}/{w.dtype} (the dispatcher narrows eligible inputs)"
+        )
+    int8_ops = operand_dtype == "int8"
     n, h, w_sp, c = x.shape
     k, f = w.shape[0], w.shape[-1]
     if pool and (h < 2 or w_sp < 2):
@@ -306,6 +340,7 @@ def stream_conv(
         sf_shift=shift, sf_residual=residual, alpha_inv=alpha_inv,
         mu=mu_int8(alpha_inv) if apply_relu else 0,
         apply_relu=apply_relu, pool=pool, out_dtype=out_dtype,
+        int8_ops=int8_ops,
     )
     oh, ow = (bh_ // 2, w_sp // 2) if pool else (bh_, w_sp)
     out = pl.pallas_call(
@@ -321,7 +356,10 @@ def stream_conv(
         out_shape=jax.ShapeDtypeStruct(
             (n, (h_pad // bh_) * oh, ow, f_pad), out_dtype
         ),
-        scratch_shapes=_conv_scratches(x, k, bh_, w_sp, c),
+        scratch_shapes=_conv_scratches(
+            x, k, bh_, w_sp, c,
+            patch_dtype=jnp.int8 if int8_ops else jnp.int32,
+        ),
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),

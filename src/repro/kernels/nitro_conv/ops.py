@@ -40,6 +40,8 @@ import jax.numpy as jnp
 
 from repro.core.layers import conv_im2col_operands, im2col, window_view_2x2
 from repro.core.numerics import int_matmul
+from repro.kernels.autotune import state as autotune
+from repro.kernels.autotune.tiles import TileConfig
 from repro.kernels.nitro_conv import ref as conv_ref
 from repro.kernels.nitro_conv.nitro_conv import (
     stream_conv,
@@ -47,10 +49,20 @@ from repro.kernels.nitro_conv.nitro_conv import (
     stream_conv_grad_w,
     stream_conv_grad_x,
 )
-from repro.kernels.nitro_matmul.ops import check_alpha_inv, resolve_backend
+from repro.kernels.nitro_matmul.ops import (
+    _guard_int8,
+    check_alpha_inv,
+    resolve_backend,
+    resolve_operand_dtype,
+)
 from repro.kernels.nitro_matmul.ref import masked_delta
 
 CONV_MODES = ("stream", "materialise")
+
+
+def _stream_tile_kw(tiles: TileConfig | None) -> dict:
+    """bh/bf kwargs for the streaming kernels (defaults when untuned)."""
+    return {} if tiles is None else dict(bh=tiles.bh, bf=tiles.bf)
 
 
 def resolve_conv_mode(conv_mode: str) -> str:
@@ -77,6 +89,8 @@ def fused_conv(
     out_dtype=jnp.int32,
     backend: str = "auto",
     conv_mode: str = "stream",
+    tiles: TileConfig | None = None,
+    operand_dtype: str = "auto",
 ) -> jax.Array:
     """One fused conv+scale(+relu)(+2×2 pool) — the inference plan step.
 
@@ -84,10 +98,27 @@ def fused_conv(
     ``pool=True``.  On the streaming path the pool runs in the kernel
     epilogue; the materialised path pools with a separate jnp pass (its
     historical behaviour) — bit-identical either way.
+
+    ``tiles``/``operand_dtype`` mirror ``fused_matmul``'s knobs: both are
+    perf-only and bitwise result-invariant.  ``tiles=None`` consults the
+    autotune cache under the conv's own key; a materialise-mode miss then
+    falls through to the inner matmul's own resolution.
     """
     alpha_inv = check_alpha_inv(alpha_inv, apply_relu)
     backend = resolve_backend(backend)
-    if resolve_conv_mode(conv_mode) == "materialise":
+    conv_mode = resolve_conv_mode(conv_mode)
+    od = resolve_operand_dtype(operand_dtype, x, w)
+    if od == "int8":
+        x = _guard_int8(x, "x")
+        w = _guard_int8(w, "w")
+    if tiles is None:
+        tiles = autotune.resolve_tiles(
+            "conv", (x.shape[0], x.shape[1], x.shape[2], x.shape[3],
+                     w.shape[0], w.shape[-1]),
+            dtype=f"{x.dtype},{w.dtype}", backend=backend,
+            conv_mode=conv_mode,
+        )
+    if conv_mode == "materialise":
         from repro.kernels.nitro_matmul.ops import fused_matmul
 
         n, h, w_sp, _ = x.shape
@@ -95,16 +126,19 @@ def fused_conv(
         out = fused_matmul(
             patches, w_flat, sf=sf, alpha_inv=alpha_inv,
             apply_relu=apply_relu, out_dtype=out_dtype, backend=backend,
+            tiles=tiles, operand_dtype=od,
         ).reshape(n, h, w_sp, w.shape[-1])
         return jnp.max(window_view_2x2(out), axis=3) if pool else out
     if backend == "reference":
         return conv_ref.stream_conv_ref(
             x, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
             pool=pool, out_dtype=out_dtype,
+            bh=None if tiles is None else tiles.bh, operand_dtype=od,
         )
     return stream_conv(
         x, w, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu, pool=pool,
         out_dtype=out_dtype, interpret=(backend == "interpret"),
+        operand_dtype=od, **_stream_tile_kw(tiles),
     )
 
 
@@ -116,6 +150,7 @@ def fused_conv_fwd(
     alpha_inv: int = 10,
     backend: str = "auto",
     conv_mode: str = "stream",
+    tiles: TileConfig | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused conv *training* forward: ``(a, z_star)``, both (N,H,W,F).
 
@@ -125,21 +160,33 @@ def fused_conv_fwd(
     """
     alpha_inv = check_alpha_inv(alpha_inv, True)
     backend = resolve_backend(backend)
-    if resolve_conv_mode(conv_mode) == "materialise":
+    conv_mode = resolve_conv_mode(conv_mode)
+    if tiles is None:
+        tiles = autotune.resolve_tiles(
+            "conv_fwd", (x.shape[0], x.shape[1], x.shape[2], x.shape[3],
+                         w.shape[0], w.shape[-1]),
+            dtype=f"{x.dtype},{w.dtype}", backend=backend,
+            conv_mode=conv_mode,
+        )
+    if conv_mode == "materialise":
         from repro.kernels.nitro_matmul.ops import fused_matmul_fwd
 
         n, h, w_sp, _ = x.shape
         f = w.shape[-1]
         patches, w_flat = conv_im2col_operands(w, x)
         a2, z2 = fused_matmul_fwd(
-            patches, w_flat, sf=sf, alpha_inv=alpha_inv, backend=backend
+            patches, w_flat, sf=sf, alpha_inv=alpha_inv, backend=backend,
+            tiles=tiles,
         )
         return a2.reshape(n, h, w_sp, f), z2.reshape(n, h, w_sp, f)
     if backend == "reference":
-        return conv_ref.stream_conv_fwd_ref(x, w, sf=sf, alpha_inv=alpha_inv)
+        return conv_ref.stream_conv_fwd_ref(
+            x, w, sf=sf, alpha_inv=alpha_inv,
+            bh=None if tiles is None else tiles.bh,
+        )
     return stream_conv_fwd(
         x, w, sf=sf, alpha_inv=alpha_inv,
-        interpret=(backend == "interpret"),
+        interpret=(backend == "interpret"), **_stream_tile_kw(tiles),
     )
 
 
@@ -157,6 +204,7 @@ def conv_grad_w(
     alpha_inv: int = 10,
     backend: str = "auto",
     conv_mode: str = "stream",
+    tiles: TileConfig | None = None,
 ) -> jax.Array:
     """Conv weight gradient: correlate input patches with ``grad_out``.
 
@@ -173,7 +221,16 @@ def conv_grad_w(
     backend = resolve_backend(backend)
     if z_star is not None:
         alpha_inv = check_alpha_inv(alpha_inv, True)
-    if resolve_conv_mode(conv_mode) == "materialise":
+    conv_mode = resolve_conv_mode(conv_mode)
+    if tiles is None and conv_mode != "materialise":
+        tiles = autotune.resolve_tiles(
+            "conv_grad_w",
+            (x.shape[0], x.shape[1], x.shape[2], x.shape[3],
+             kernel_size, grad_out.shape[-1]),
+            dtype=f"{x.dtype},{grad_out.dtype}", backend=backend,
+            conv_mode=conv_mode, fuse_bwd=z_star is not None,
+        )
+    if conv_mode == "materialise":
         if z_star is not None:
             grad_out = masked_delta(grad_out, z_star, alpha_inv)
         n, h, w_sp, c = x.shape
@@ -186,11 +243,12 @@ def conv_grad_w(
         return conv_ref.stream_conv_grad_w_ref(
             x, grad_out, kernel_size=kernel_size,
             z_star=z_star, alpha_inv=alpha_inv,
+            bh=None if tiles is None else tiles.bh,
         )
     return stream_conv_grad_w(
         x, grad_out, kernel_size=kernel_size,
         z_star=z_star, alpha_inv=alpha_inv,
-        interpret=(backend == "interpret"),
+        interpret=(backend == "interpret"), **_stream_tile_kw(tiles),
     )
 
 
@@ -202,6 +260,7 @@ def conv_grad_x(
     alpha_inv: int = 10,
     backend: str = "auto",
     conv_mode: str = "stream",
+    tiles: TileConfig | None = None,
 ) -> jax.Array:
     """Conv input gradient: 'full' correlation of ``grad_out`` with the
     rotated kernel — one more conv, streamed the same way (unit scale, no
@@ -215,7 +274,16 @@ def conv_grad_x(
     backend = resolve_backend(backend)
     if z_star is not None:
         alpha_inv = check_alpha_inv(alpha_inv, True)
-    if resolve_conv_mode(conv_mode) == "materialise":
+    conv_mode = resolve_conv_mode(conv_mode)
+    if tiles is None and conv_mode != "materialise":
+        tiles = autotune.resolve_tiles(
+            "conv_grad_x",
+            (grad_out.shape[0], grad_out.shape[1], grad_out.shape[2],
+             grad_out.shape[3], w.shape[0], w.shape[2]),
+            dtype=f"{grad_out.dtype},{w.dtype}", backend=backend,
+            conv_mode=conv_mode, fuse_bwd=z_star is not None,
+        )
+    if conv_mode == "materialise":
         if z_star is not None:
             grad_out = masked_delta(grad_out, z_star, alpha_inv)
         n, h, w_sp, _ = grad_out.shape
@@ -223,14 +291,15 @@ def conv_grad_x(
         return int_matmul(g_patches, w_rot_flat).reshape(n, h, w_sp, w.shape[2])
     if backend == "reference":
         return conv_ref.stream_conv_grad_x_ref(
-            grad_out, w, z_star=z_star, alpha_inv=alpha_inv
+            grad_out, w, z_star=z_star, alpha_inv=alpha_inv,
+            bh=None if tiles is None else tiles.bh,
         )
     if z_star is not None:
         return stream_conv_grad_x(
             grad_out, z_star, w, alpha_inv=alpha_inv,
-            interpret=(backend == "interpret"),
+            interpret=(backend == "interpret"), **_stream_tile_kw(tiles),
         )
     return stream_conv(
         grad_out, conv_ref.rot180_swap(w), sf=1, apply_relu=False, pool=False,
-        interpret=(backend == "interpret"),
+        interpret=(backend == "interpret"), **_stream_tile_kw(tiles),
     )

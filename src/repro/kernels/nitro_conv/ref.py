@@ -28,8 +28,11 @@ from repro.core.activations import nitro_relu, nitro_relu_backward
 from repro.core.layers import window_view_2x2
 from repro.core.numerics import int_matmul
 from repro.core.scaling import scale_forward
+from repro.kernels.autotune.tiles import DEFAULT_TILES
 
-DEFAULT_BH = 8       # Pallas row-band height (bounds the VMEM working set)
+#: Pallas row-band height (bounds the VMEM working set) — alias of the
+#: single definition in ``kernels.autotune.tiles.DEFAULT_TILES``.
+DEFAULT_BH = DEFAULT_TILES.bh
 _MAX_AUTO_BH = 16    # auto band cap for the jnp oracle (CPU-tuned)
 
 
@@ -81,6 +84,7 @@ def _stream_z_bands(
     pool: bool,
     relu_bwd_z: jax.Array | None = None,
     relu_bwd_alpha_inv: int = 10,
+    int8_ops: bool = False,
 ):
     """Yield raw int32 pre-activation bands ``z`` of shape (N, bh, W, F).
 
@@ -100,14 +104,21 @@ def _stream_z_bands(
     pad = ((0, 0), (p, p + h_pad - h), (p, p), (0, 0))
     xp = jnp.pad(x, pad)
     zp = None if relu_bwd_z is None else jnp.pad(relu_bwd_z, pad)
-    w_flat = w.reshape(k * k * c, f).astype(jnp.int32)
+    # int8_ops: leave operands int8 — ``int_matmul`` accumulates int8
+    # operands into int32 (``preferred_element_type``) bit-identically.
+    w_flat = w.reshape(k * k * c, f)
+    if not int8_ops:
+        w_flat = w_flat.astype(jnp.int32)
     for t in range(h_pad // bh):
         band = xp[:, t * bh:t * bh + bh + 2 * p]
         if zp is not None:
             band = nitro_relu_backward(
                 zp[:, t * bh:t * bh + bh + 2 * p], band, relu_bwd_alpha_inv
             )
-        z = int_matmul(_band_patches(band, k, w_sp).astype(jnp.int32), w_flat)
+        patches = _band_patches(band, k, w_sp)
+        if not int8_ops:
+            patches = patches.astype(jnp.int32)
+        z = int_matmul(patches, w_flat)
         yield z.reshape(n, bh, w_sp, f)
 
 
@@ -121,6 +132,7 @@ def stream_conv_ref(
     pool: bool = False,
     out_dtype=jnp.int32,
     bh: int | None = None,
+    operand_dtype: str = "int32",
     relu_bwd_z: jax.Array | None = None,
     relu_bwd_alpha_inv: int = 10,
 ) -> jax.Array:
@@ -136,11 +148,19 @@ def stream_conv_ref(
     backward *prologue* instead (band-wise NITRO-ReLU-derivative masking
     of ``x``; see ``_stream_z_bands``) — the grad_x path.
     """
+    if operand_dtype == "int8" and not (
+        x.dtype == jnp.int8 and w.dtype == jnp.int8
+    ):
+        raise ValueError(
+            f"operand_dtype='int8' requires int8 operands, got "
+            f"{x.dtype}/{w.dtype}"
+        )
     h = x.shape[1]
     outs = []
     for z in _stream_z_bands(
         x, w, bh, pool=pool,
         relu_bwd_z=relu_bwd_z, relu_bwd_alpha_inv=relu_bwd_alpha_inv,
+        int8_ops=(operand_dtype == "int8"),
     ):
         a = scale_forward(z, sf)
         if apply_relu:

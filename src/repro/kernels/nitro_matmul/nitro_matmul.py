@@ -42,16 +42,19 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.activations import mu_int8, nitro_relu_backward
 from repro.core.scaling import pow2_split
+from repro.kernels.autotune.tiles import DEFAULT_TILES
 
 # jax renamed TPUCompilerParams → CompilerParams; support both.
 _CompilerParams = getattr(
     pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
 )
 
-# MXU-native tile sizes.
-DEFAULT_BM = 128
-DEFAULT_BN = 128
-DEFAULT_BK = 128
+# MXU-native tile sizes — aliases of the single definition in
+# ``kernels.autotune.tiles.DEFAULT_TILES`` (shared with the conv kernel,
+# the autotuner, and the docs).
+DEFAULT_BM = DEFAULT_TILES.bm
+DEFAULT_BN = DEFAULT_TILES.bn
+DEFAULT_BK = DEFAULT_TILES.bk
 
 
 def _scale_tile(z, sf_shift: int, sf_residual: int):
@@ -88,17 +91,26 @@ def _relu_bwd_tile(g, z, alpha_inv: int):
     return nitro_relu_backward(z, g, alpha_inv)
 
 
-def _accumulate_tile(x_ref, w_ref, acc_ref):
+def _accumulate_tile(x_ref, w_ref, acc_ref, *, int8_ops: bool = False):
     """Zero the VMEM accumulator at k == 0, then MXU-accumulate one
-    (bm, bk)·(bk, bn) partial product — int32 accumulation."""
+    (bm, bk)·(bk, bn) partial product — int32 accumulation.
+
+    ``int8_ops=True`` is the int8-operand MXU fast path: the VMEM tiles
+    stay int8 and the dot issues the MXU's double-rate
+    ``int8×int8→int32`` mode via ``preferred_element_type`` — bit-exact
+    with the lifted int32 dot, since the accumulator is int32 either way.
+    """
 
     @pl.when(pl.program_id(2) == 0)
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    x, w = x_ref[...], w_ref[...]
+    if not int8_ops:
+        x, w = x.astype(jnp.int32), w.astype(jnp.int32)
     acc_ref[...] += jax.lax.dot_general(
-        x_ref[...].astype(jnp.int32),
-        w_ref[...].astype(jnp.int32),
+        x,
+        w,
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
@@ -117,9 +129,10 @@ def _nitro_matmul_kernel(
     mu: int,
     apply_relu: bool,
     out_dtype,
+    int8_ops: bool = False,
 ):
     """One (bm, bn) output tile; accumulates over the K grid dimension."""
-    _accumulate_tile(x_ref, w_ref, acc_ref)
+    _accumulate_tile(x_ref, w_ref, acc_ref, int8_ops=int8_ops)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _epilogue():
@@ -215,7 +228,7 @@ def _launch(kernel, x, w, tiles, grid, *, out_dtypes, interpret):
     jax.jit,
     static_argnames=(
         "sf", "alpha_inv", "apply_relu", "out_dtype",
-        "bm", "bn", "bk", "interpret",
+        "bm", "bn", "bk", "operand_dtype", "interpret",
     ),
 )
 def nitro_matmul(
@@ -229,13 +242,26 @@ def nitro_matmul(
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
+    operand_dtype: str = "int32",
     interpret: bool = False,
 ) -> jax.Array:
     """Fused ``nitro_relu(⌊(x @ w)/sf⌋)`` for 2-D ``x`` (M,K) and ``w`` (K,N).
 
     Pads every dimension up to its tile multiple (zero padding is exact for
     integer matmul) and slices the result back.
+
+    ``operand_dtype='int8'`` keeps the VMEM operand tiles int8 and issues
+    ``int8×int8→int32`` MXU dots (the double-rate mode); both operands
+    must already *be* int8 — narrowing/eligibility proofs live in the
+    dispatcher (``ops.fused_matmul``).  Bit-exact with the int32 path.
     """
+    if operand_dtype == "int8" and not (
+        x.dtype == jnp.int8 and w.dtype == jnp.int8
+    ):
+        raise ValueError(
+            f"operand_dtype='int8' requires int8 operands, got "
+            f"{x.dtype}/{w.dtype} (the dispatcher narrows eligible inputs)"
+        )
     m, n = x.shape[0], w.shape[1]
     x, w, (bm_, bn_, bk_), (gm, gn, gk) = _tile_geometry(x, w, bm, bn, bk)
 
@@ -249,6 +275,7 @@ def nitro_matmul(
         mu=mu_int8(alpha_inv) if apply_relu else 0,
         apply_relu=apply_relu,
         out_dtype=out_dtype,
+        int8_ops=(operand_dtype == "int8"),
     )
     out = _launch(
         kernel, x, w, (bm_, bn_, bk_), (gm, gn, gk),

@@ -33,6 +33,8 @@ import jax.numpy as jnp
 
 from repro.core.layers import conv_im2col_operands
 from repro.core.scaling import conv_scale_factor, linear_scale_factor
+from repro.kernels.autotune import state as autotune
+from repro.kernels.autotune.tiles import TileConfig
 from repro.kernels.nitro_matmul.nitro_matmul import (
     nitro_matmul,
     nitro_matmul_fwd,
@@ -47,6 +49,62 @@ from repro.kernels.nitro_matmul.ref import (
 )
 
 BACKENDS = ("auto", "pallas", "interpret", "reference")
+
+#: Operand-dtype policy for the MXU dots (inference entry points):
+#:   * ``'auto'``  — int8 operands stay int8 (the double-rate MXU mode)
+#:                   whenever *both* operands already are; anything else
+#:                   lifts to int32.  Never changes results.
+#:   * ``'int8'``  — force the int8 path: int8 operands pass through;
+#:                   concrete non-int8 operands are guarded (telemetry
+#:                   ``bit_width`` ≤ 7) and narrowed; traced non-int8
+#:                   operands raise.
+#:   * ``'int32'`` — the escape hatch: always lift (historical path).
+OPERAND_DTYPES = ("auto", "int8", "int32")
+
+
+def _guard_int8(arr: jax.Array, name: str) -> jax.Array:
+    """Runtime guard for the forced-int8 path: prove fit, then narrow.
+
+    int8 arrays pass through.  A *concrete* wider array is checked with
+    the telemetry ``bit_width`` reduction (≤ 7 bits ⇒ values in
+    [-127, 127] ⇒ exact int8) and narrowed; a traced wider array cannot
+    be value-checked, so it raises — use ``operand_dtype='auto'`` (which
+    keys off dtypes alone) under jit, or narrow before tracing.
+    """
+    if arr.dtype == jnp.int8:
+        return arr
+    if isinstance(arr, jax.core.Tracer):
+        raise ValueError(
+            f"operand_dtype='int8': operand {name!r} is a traced "
+            f"{arr.dtype} array — int8 fit cannot be proven under jit; "
+            f"pass int8 operands or use operand_dtype='auto'"
+        )
+    from repro.obs.telemetry import bit_width
+
+    bits = int(bit_width(arr).max())
+    if bits > 7:
+        raise ValueError(
+            f"operand_dtype='int8': operand {name!r} needs {bits} bits "
+            f"(> 7) — values do not fit int8; use the int32 escape hatch"
+        )
+    return arr.astype(jnp.int8)
+
+
+def resolve_operand_dtype(
+    operand_dtype: str, x: jax.Array, w: jax.Array
+) -> str:
+    """Resolve the ``'auto'`` policy to a concrete ``'int8'``/``'int32'``."""
+    if operand_dtype not in OPERAND_DTYPES:
+        raise ValueError(
+            f"unknown operand_dtype {operand_dtype!r}; one of {OPERAND_DTYPES}"
+        )
+    if operand_dtype == "auto":
+        return (
+            "int8"
+            if x.dtype == jnp.int8 and w.dtype == jnp.int8
+            else "int32"
+        )
+    return operand_dtype
 
 
 def _on_tpu() -> bool:
@@ -91,18 +149,40 @@ def fused_matmul(
     apply_relu: bool = True,
     out_dtype=jnp.int32,
     backend: str = "auto",
+    tiles: TileConfig | None = None,
+    operand_dtype: str = "auto",
 ) -> jax.Array:
-    """One fused matmul+scale(+relu) on 2-D operands — the inference step."""
+    """One fused matmul+scale(+relu) on 2-D operands — the inference step.
+
+    ``tiles`` overrides the kernel tile sizes; ``None`` consults the
+    process-wide autotune cache (``kernels.autotune``) and falls back to
+    the defaults on a miss.  ``operand_dtype`` selects the MXU operand
+    path (see ``OPERAND_DTYPES``) — both knobs are perf-only and bitwise
+    result-invariant.
+    """
     backend = resolve_backend(backend)
     alpha_inv = check_alpha_inv(alpha_inv, apply_relu)
+    od = resolve_operand_dtype(operand_dtype, x2, w2)
+    if od == "int8":
+        x2 = _guard_int8(x2, "x")
+        w2 = _guard_int8(w2, "w")
+    if tiles is None:
+        tiles = autotune.resolve_tiles(
+            "matmul", (x2.shape[0], x2.shape[1], w2.shape[1]),
+            dtype=f"{x2.dtype},{w2.dtype}", backend=backend,
+        )
     if backend == "reference":
         return nitro_matmul_ref(
             x2, w2, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
-            out_dtype=out_dtype,
+            out_dtype=out_dtype, operand_dtype=od,
         )
+    tile_kw = {} if tiles is None else dict(
+        bm=tiles.bm, bn=tiles.bn, bk=tiles.bk
+    )
     return nitro_matmul(
         x2, w2, sf=sf, alpha_inv=alpha_inv, apply_relu=apply_relu,
-        out_dtype=out_dtype, interpret=(backend == "interpret"),
+        out_dtype=out_dtype, operand_dtype=od,
+        interpret=(backend == "interpret"), **tile_kw,
     )
 
 
@@ -113,21 +193,32 @@ def fused_matmul_fwd(
     sf: int,
     alpha_inv: int = 10,
     backend: str = "auto",
+    tiles: TileConfig | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused training forward on 2-D operands: ``(a, z_star)``, both int32.
 
     ``a`` keeps int32 (not the inference plan's int8 narrowing) so the
     fused train step is bit- *and dtype*-identical to the unfused
     reference pipeline; ``z_star`` is what ``forward_layers_backward``
-    consumes for the NITRO-ReLU/STE backward.
+    consumes for the NITRO-ReLU/STE backward.  (Training entry points
+    take ``tiles`` but not ``operand_dtype`` — train operands are int32
+    by the dtype-identical contract.)
     """
     backend = resolve_backend(backend)
     alpha_inv = check_alpha_inv(alpha_inv, True)
+    if tiles is None:
+        tiles = autotune.resolve_tiles(
+            "matmul_fwd", (x2.shape[0], x2.shape[1], w2.shape[1]),
+            dtype=f"{x2.dtype},{w2.dtype}", backend=backend,
+        )
     if backend == "reference":
         return nitro_matmul_fwd_ref(x2, w2, sf=sf, alpha_inv=alpha_inv)
+    tile_kw = {} if tiles is None else dict(
+        bm=tiles.bm, bn=tiles.bn, bk=tiles.bk
+    )
     return nitro_matmul_fwd(
         x2, w2, sf=sf, alpha_inv=alpha_inv,
-        interpret=(backend == "interpret"),
+        interpret=(backend == "interpret"), **tile_kw,
     )
 
 
@@ -138,6 +229,7 @@ def grad_w_matmul(
     *,
     alpha_inv: int = 10,
     backend: str = "auto",
+    tiles: TileConfig | None = None,
 ) -> jax.Array:
     """Fused backward weight matmul on 2-D operands.
 
@@ -147,11 +239,20 @@ def grad_w_matmul(
     """
     backend = resolve_backend(backend)
     alpha_inv = check_alpha_inv(alpha_inv, True)
+    if tiles is None:
+        tiles = autotune.resolve_tiles(
+            "matmul_grad_w", (x2.shape[0], x2.shape[1], delta2.shape[1]),
+            dtype=f"{x2.dtype},{delta2.dtype}", backend=backend,
+            fuse_bwd=True,
+        )
     if backend == "reference":
         return nitro_matmul_grad_w_ref(x2, delta2, z_star2, alpha_inv=alpha_inv)
+    tile_kw = {} if tiles is None else dict(
+        bm=tiles.bm, bn=tiles.bn, bk=tiles.bk
+    )
     return nitro_matmul_grad_w(
         x2, delta2, z_star2, alpha_inv=alpha_inv,
-        interpret=(backend == "interpret"),
+        interpret=(backend == "interpret"), **tile_kw,
     )
 
 
@@ -162,6 +263,7 @@ def grad_x_matmul(
     *,
     alpha_inv: int = 10,
     backend: str = "auto",
+    tiles: TileConfig | None = None,
 ) -> jax.Array:
     """Fused backward input matmul on 2-D operands.
 
@@ -171,11 +273,20 @@ def grad_x_matmul(
     """
     backend = resolve_backend(backend)
     alpha_inv = check_alpha_inv(alpha_inv, True)
+    if tiles is None:
+        tiles = autotune.resolve_tiles(
+            "matmul_grad_x", (delta2.shape[0], delta2.shape[1], w2.shape[0]),
+            dtype=f"{delta2.dtype},{w2.dtype}", backend=backend,
+            fuse_bwd=True,
+        )
     if backend == "reference":
         return nitro_matmul_grad_x_ref(delta2, z_star2, w2, alpha_inv=alpha_inv)
+    tile_kw = {} if tiles is None else dict(
+        bm=tiles.bm, bn=tiles.bn, bk=tiles.bk
+    )
     return nitro_matmul_grad_x(
         delta2, z_star2, w2, alpha_inv=alpha_inv,
-        interpret=(backend == "interpret"),
+        interpret=(backend == "interpret"), **tile_kw,
     )
 
 

@@ -23,8 +23,20 @@ def nitro_matmul_ref(
     alpha_inv: int = 10,
     apply_relu: bool = True,
     out_dtype=jnp.int32,
+    operand_dtype: str = "int32",
 ) -> jax.Array:
-    z = int_matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+    if operand_dtype == "int8":
+        # int8-operand path: skip the int32 lift — ``int_matmul``'s
+        # ``preferred_element_type=int32`` accumulates int8 operands into
+        # the same int32 values bit-for-bit.
+        if not (x.dtype == jnp.int8 and w.dtype == jnp.int8):
+            raise ValueError(
+                f"operand_dtype='int8' requires int8 operands, got "
+                f"{x.dtype}/{w.dtype}"
+            )
+        z = int_matmul(x, w)
+    else:
+        z = int_matmul(x.astype(jnp.int32), w.astype(jnp.int32))
     z_star = scale_forward(z, sf)
     if apply_relu:
         z_star = nitro_relu(z_star, alpha_inv)

@@ -88,7 +88,9 @@ def _build_registry(args, metrics=None):
     if args.fleet_dir and args.model_dir:
         raise SystemExit("--fleet-dir and --model-dir are mutually "
                          "exclusive — add extra models to FLEET.json")
-    registry = ModelRegistry(backend=args.backend, metrics=metrics)
+    registry = ModelRegistry(backend=args.backend,
+                             operand_dtype=args.operand_dtype,
+                             metrics=metrics)
     if args.fleet_dir:
         # read FLEET.json exactly once: registering from the parsed dict
         # keeps the printed paths, the splits, and the loaded models all
@@ -137,6 +139,19 @@ def main():
                          "(needed when a fleet defines several aliases)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "pallas", "interpret", "reference"])
+    ap.add_argument("--operand-dtype", default="auto",
+                    choices=["auto", "int8", "int32"],
+                    help="MXU operand path: auto = int8 dots wherever the "
+                         "int8 fit is provable (bitwise-identical), int32 "
+                         "= escape hatch, int8 = force (error if no step "
+                         "qualifies)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="tune kernel tile configs for every loaded plan "
+                         "at this --batch before serving (bitwise "
+                         "result-invariant)")
+    ap.add_argument("--autotune-cache", default=None,
+                    help="tile-cache JSON path (default: tile_cache.json "
+                         "in the cwd)")
     ap.add_argument("--scheduler", default="continuous",
                     choices=["continuous", "static"],
                     help="continuous = FleetEngine (double-buffered); "
@@ -182,6 +197,19 @@ def main():
         tracer = Tracer()
 
     registry, manifest_splits = _build_registry(args, metrics=metrics)
+    if args.autotune:
+        # tune before the engines' warmup calls trace the plans — jit
+        # bakes in whatever tiles resolve at trace time
+        from repro.kernels import autotune as at
+        cache = at.TileCache(args.autotune_cache or at.CACHE_FILENAME)
+        if metrics is not None:
+            at.set_metrics(metrics)
+        tuned = 0
+        for mid in registry.ids():
+            tuned += len(at.tune_plan(registry.get(mid).plan, args.batch,
+                                      cache=cache))
+        at.configure(cache)
+        print(f"[autotune] {tuned} problems tuned/cached -> {cache.path}")
     if args.slo is not None:
         # one objective for the whole fleet: the launcher serves a single
         # workload, so every arm is scored against the same deadline
@@ -236,7 +264,8 @@ def main():
         per_sample = row["hbm_per_sample_bytes"]
         print(f"  {row['kind']:<7} w={row['weight_shape']} "
               f"({row['weight_dtype']}) sf={row['sf']} "
-              f"act={row['activation_dtype']} pool={row['pool']} "
+              f"act={row['activation_dtype']} "
+              f"operands={row['operand_dtype']} pool={row['pool']} "
               f"hbm/elem {hbm['unfused']}B→{hbm['fused']}B "
               f"hbm/sample {per_sample['materialise']}B→"
               f"{per_sample['stream']}B "

@@ -33,7 +33,9 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
                 trace_out: str | None = None,
                 num_devices: int = 1, dp_reduce: str = "psum",
                 metrics_port: int | None = None,
-                alerts_out: str | None = None) -> dict:
+                alerts_out: str | None = None,
+                autotune: bool = False,
+                autotune_cache: str | None = None) -> dict:
     """Integer-only NITRO-D training (paper algorithm).
 
     ``telemetry_every=N`` runs every N-th step through the
@@ -51,6 +53,13 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
     over HTTP — ``train_step_seconds`` / ``train_straggler_events_total``
     plus the health gauges and ``repro_build_info`` — at ``/metrics``,
     ``/metrics.json`` and ``/healthz`` (what ``obs_top`` scrapes live).
+
+    ``autotune=True`` searches kernel tile configurations for every fused
+    fwd/bwd problem of this (arch, batch) *before* the train step is
+    traced — winners persist in ``autotune_cache`` (default:
+    ``tile_cache.json`` next to the checkpoints), so a re-run with a warm
+    cache resolves them measurement-free.  Tiling is bitwise
+    result-invariant; this is purely a throughput knob.
 
     ``num_devices > 1`` shards the batch over a ``data`` mesh axis via
     ``repro.parallel.dp`` (``dp_reduce`` picks the all-reduce:
@@ -85,6 +94,16 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
     if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
         state, start_step = ckpt.restore(ckpt_dir, state)
         print(f"[restore] resumed from step {start_step}")
+
+    if autotune:
+        from repro.kernels import autotune as at
+        cache = at.TileCache(
+            autotune_cache
+            or os.path.join(ckpt_dir or ".", at.CACHE_FILENAME))
+        tuned = at.tune_training(cfg, batch, cache=cache)
+        at.configure(cache)  # dispatchers resolve tiles when jit traces
+        print(f"[autotune] {len(tuned)} problems tuned/cached -> "
+              f"{cache.path}")
 
     if num_devices > 1:
         from repro.parallel import dp
@@ -121,6 +140,10 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
     # so the bitwise-identity and float-free guarantees are unaffected
     registry = MetricRegistry()
     register_build_info(registry, backend=jax.default_backend())
+    if autotune:
+        # count trace-time tile resolutions (hits vs default fallbacks)
+        from repro.kernels.autotune import set_metrics
+        set_metrics(registry)
     step_seconds = registry.histogram(
         "train_step_seconds", "wall time per training step")
     straggler_events = registry.counter(
@@ -286,6 +309,13 @@ def main():
                     choices=("psum", "ring", "compress"),
                     help="gradient all-reduce: XLA psum, hand-scheduled "
                          "ring, or int8-limb compressed (all exact)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="search kernel tile configs for this (arch, "
+                         "batch) before compiling (NITRO archs; bitwise "
+                         "result-invariant)")
+    ap.add_argument("--autotune-cache",
+                    help="tile-cache JSON path (default: tile_cache.json "
+                         "next to the checkpoints)")
     args = ap.parse_args()
 
     if args.num_devices > 1 and jax.device_count() < args.num_devices:
@@ -316,7 +346,9 @@ def main():
                     trace_out=args.trace_out,
                     num_devices=args.num_devices, dp_reduce=args.dp_reduce,
                     metrics_port=args.metrics_port,
-                    alerts_out=args.alerts_out)
+                    alerts_out=args.alerts_out,
+                    autotune=args.autotune,
+                    autotune_cache=args.autotune_cache)
     elif args.arch in ARCHS:
         train_lm(args.arch, steps=args.steps, batch=args.batch, seq=args.seq,
                  scale=args.scale, ckpt_dir=args.ckpt_dir,

@@ -70,8 +70,10 @@ class ModelRegistry:
     """
 
     def __init__(self, *, backend: str = "auto",
+                 operand_dtype: str = "auto",
                  metrics: MetricRegistry | None = None):
         self.backend = backend
+        self.operand_dtype = operand_dtype
         self.metrics = metrics
         self._lock = threading.RLock()
         self._entries: dict[str, ModelEntry] = {}
@@ -108,11 +110,13 @@ class ModelRegistry:
 
     def register(self, model_id: str, fm: FrozenModel, *,
                  backend: str | None = None,
+                 operand_dtype: str | None = None,
                  slo: Slo | None = None) -> ModelEntry:
         """Compile ``fm`` and serve it as ``model_id`` (id must be free)."""
         if not model_id:
             raise ValueError("model_id must be non-empty")
-        plan = compile_plan(fm, backend=backend or self.backend)
+        plan = compile_plan(fm, backend=backend or self.backend,
+                            operand_dtype=operand_dtype or self.operand_dtype)
         with self._lock:
             if model_id in self._entries:
                 raise ValueError(
@@ -147,7 +151,8 @@ class ModelRegistry:
         return entry
 
     def swap(self, model_id: str, fm: FrozenModel, *,
-             backend: str | None = None) -> ModelEntry:
+             backend: str | None = None,
+             operand_dtype: str | None = None) -> ModelEntry:
         """Hot-swap ``model_id``'s checkpoint under its stable id.
 
         Compiles the incoming model *before* taking the lock — submitters
@@ -156,7 +161,8 @@ class ModelRegistry:
         long-lived serving identity, the checkpoint is an implementation
         detail behind it.
         """
-        plan = compile_plan(fm, backend=backend or self.backend)
+        plan = compile_plan(fm, backend=backend or self.backend,
+                            operand_dtype=operand_dtype or self.operand_dtype)
         with self._lock:
             entry = self._require(model_id)
             if tuple(plan.input_shape) != entry.input_shape:
@@ -235,11 +241,13 @@ class ModelRegistry:
 
     @classmethod
     def from_manifest(cls, root: str, *, backend: str = "auto",
+                      operand_dtype: str = "auto",
                       metrics: MetricRegistry | None = None,
                       ) -> "ModelRegistry":
         """Build a registry from an on-disk ``FLEET.json`` directory."""
         manifest = load_fleet_manifest(root)
-        reg = cls(backend=backend, metrics=metrics)
+        reg = cls(backend=backend, operand_dtype=operand_dtype,
+                  metrics=metrics)
         for model_id, model_dir in sorted(manifest["models"].items()):
             reg.load(model_id, model_dir)
         return reg

@@ -31,6 +31,7 @@ import sys
 
 #: file name → expected ``benchmark`` field of the emitting module.
 EXPECTED_NAMES = {
+    "BENCH_autotune.json": "autotune_gain",
     "BENCH_conv.json": "conv_stream",
     "BENCH_infer.json": "serve_infer",
     "BENCH_obs.json": "obs_overhead",
@@ -105,6 +106,48 @@ def check_obs(path: str, payload: dict) -> None:
                  f"results[{i}].meets_target missing")
 
 
+def check_autotune(path: str, payload: dict) -> None:
+    """Tile-search results are *structurally* no-worse-than-default (the
+    winner is the argmin of one paired session that includes the default),
+    so that claim is value-checked; int8-vs-int32 outcomes are timing
+    results and only shape-checked, like ``meets_target``."""
+    for i, result in enumerate(payload["results"]):
+        tiles = result.get("tiles")
+        _require(isinstance(tiles, list) and tiles, path,
+                 f"results[{i}].tiles missing or empty")
+        for j, row in enumerate(tiles):
+            where = f"results[{i}].tiles[{j}]"
+            for key in ("op", "shape", "default_us", "tuned_us", "winner"):
+                _require(key in row, path, f"{where}.{key} missing")
+            _require(row.get("tuned_no_worse_than_default") is True, path,
+                     f"{where}: tuned_us {row['tuned_us']} > default_us "
+                     f"{row['default_us']} — the argmin must include the "
+                     f"default probe")
+        _require(result.get("tuned_no_worse_everywhere") is True, path,
+                 f"results[{i}].tuned_no_worse_everywhere is not true")
+        cache = result.get("cache")
+        _require(isinstance(cache, dict), path, f"results[{i}].cache missing")
+        _require(cache.get("second_resolution_measurement_free") is True,
+                 path, f"results[{i}]: a warm cache must resolve every "
+                 f"tuned problem measurement-free")
+        _require(cache.get("second_resolution_hits") == len(tiles), path,
+                 f"results[{i}]: {cache.get('second_resolution_hits')} "
+                 f"cache hits != {len(tiles)} tuned problems")
+        int8 = result.get("int8_layers")
+        _require(isinstance(int8, list), path,
+                 f"results[{i}].int8_layers missing")
+        _require(len(int8) == result.get("int8_eligible_steps"), path,
+                 f"results[{i}]: {len(int8)} int8 rows != "
+                 f"{result.get('int8_eligible_steps')} eligible steps")
+        for j, row in enumerate(int8):
+            where = f"results[{i}].int8_layers[{j}]"
+            for key in ("int8_us", "int32_us", "alpha_inv"):
+                _require(isinstance(row.get(key), (int, float)), path,
+                         f"{where}.{key} missing or non-numeric")
+            _require(isinstance(row.get("int8_wins"), bool), path,
+                     f"{where}.int8_wins is not a bool")
+
+
 def check_file(path: str) -> None:
     with open(path) as f:
         payload = json.load(f)
@@ -126,6 +169,8 @@ def check_file(path: str) -> None:
         check_serve(path, payload)
     elif name == "obs_overhead":
         check_obs(path, payload)
+    elif name == "autotune_gain":
+        check_autotune(path, payload)
 
 
 def main(argv: list[str]) -> int:

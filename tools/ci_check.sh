@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Quick CI gate: the tier-1 test command (minus slow integration tests)
 # run under a line-coverage floor for src/repro/{core,kernels,obs,parallel},
-# plus kernel / fused-training / fleet-serving / observability /
+# plus kernel / fused-training / autotune / fleet-serving / observability /
 # data-parallel benchmark smokes, a BENCH_*.json schema gate, obs_top and
 # alert-engine smokes over the checked-in fixtures, a serve-CLI smoke
 # (with a live /metrics endpoint), and a docs link check.  Run from
@@ -38,6 +38,7 @@ fi
 python -m benchmarks.run --quick --only kernel
 python -m benchmarks.train_step --smoke
 python -m benchmarks.conv_stream --smoke
+python -m benchmarks.autotune_gain --smoke
 python -m benchmarks.serve_fleet --smoke
 python -m benchmarks.obs_overhead --smoke
 python -m benchmarks.dp_scaling --smoke
