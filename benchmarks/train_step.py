@@ -1,12 +1,19 @@
-"""Training-step benchmark: fused vs unfused forward *and* δ path.
+"""Training-step benchmark: fused vs unfused forward, δ path, and optimiser.
 
 Times one jit-compiled ``les.train_step`` (the full fwd+bwd step) in
-three variants at a CPU-feasible scale of the paper's VGG8B/VGG11B
+four variants at a CPU-feasible scale of the paper's VGG8B/VGG11B
 configs:
 
+  * ``fused_opt``   — everything fused *including the optimiser*
+                      (``fuse_opt=True``): the IntegerSGD update runs as
+                      the grad_W kernels' flush epilogue, so grad_W never
+                      materialises in HBM — 3 HBM streams per forward-layer
+                      weight update (x, δ in; W′ out) instead of the split
+                      path's 5+ (grad_W out, then W + grad_W in, W′ out);
   * ``fused``       — fused forward + fused backward (``fuse_bwd=True``):
                       the default path, with the NITRO-ReLU-bwd/STE
-                      prologue inside the gradient kernels;
+                      prologue inside the gradient kernels, optimiser
+                      applied from the materialised gradient;
   * ``bwd_unfused`` — fused forward, unfused δ path (``fuse_bwd=False``):
                       the jnp ReLU-bwd + STE materialise the masked δ
                       before the gradient matmuls;
@@ -51,12 +58,19 @@ CONFIGS = [
     ("vgg11b", 0.0625, 8),
 ]
 
-# variant → (fused forward, fused backward)
+# variant → (fused forward, fused backward, fused optimiser)
 VARIANTS = {
-    "fused": (True, True),
-    "bwd_unfused": (True, False),
-    "unfused": (False, False),
+    "fused_opt": (True, True, True),
+    "fused": (True, True, False),
+    "bwd_unfused": (True, False, False),
+    "unfused": (False, False, False),
 }
+
+#: HBM tensor streams per forward-layer weight update: the fused epilogue
+#: reads x/δ and writes W′ (W is read inside the same kernel pass); the
+#: split path additionally writes grad_W and re-reads W + grad_W in the
+#: standalone update.  Structural counts, not measurements.
+HBM_STREAMS = {"fused_opt": 3, "unfused_opt": 5}
 
 
 def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
@@ -71,8 +85,8 @@ def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
 
     steps = {
         mode: jax.jit(functools.partial(
-            les.train_step, cfg=cfg, fused=fwd, fuse_bwd=bwd))
-        for mode, (fwd, bwd) in VARIANTS.items()
+            les.train_step, cfg=cfg, fused=fwd, fuse_bwd=bwd, fuse_opt=fopt))
+        for mode, (fwd, bwd, fopt) in VARIANTS.items()
     }
 
     # parity gate: one step, bit-identical parameters across all variants
@@ -87,6 +101,7 @@ def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
     us = time_paired(steps, state, x=x, labels=labels, key=key, iters=iters)
     speedup = us["unfused"] / us["fused"] if us["fused"] else 0.0
     bwd_speedup = us["bwd_unfused"] / us["fused"] if us["fused"] else 0.0
+    opt_speedup = us["fused"] / us["fused_opt"] if us["fused_opt"] else 0.0
     for m in VARIANTS:
         emit(f"train/{cfg.name}/{m}", us[m],
              f"batch {batch}; {us[m] / batch:.1f} us/sample")
@@ -94,6 +109,8 @@ def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
          f"{speedup:.2f}x fused/unfused (interleaved min-of-N)")
     emit(f"train/{cfg.name}/bwd_speedup", 0.0,
          f"{bwd_speedup:.2f}x fused-δ/unfused-δ path")
+    emit(f"train/{cfg.name}/opt_speedup", 0.0,
+         f"{opt_speedup:.2f}x fused-opt/split-opt path")
 
     results.append({
         "arch": cfg.name,
@@ -103,6 +120,11 @@ def _bench_config(cfg, batch: int, iters: int, results: list) -> None:
         "us_per_sample": {m: us[m] / batch for m in us},
         "speedup_fused_over_unfused": speedup,
         "speedup_fused_bwd_over_unfused_bwd": bwd_speedup,
+        "speedup_fused_opt_over_fused": opt_speedup,
+        "hbm_streams_per_weight_update": dict(HBM_STREAMS),
+        # timing outcome — shape-checked only (like meets_target), never
+        # value-pinned: machine contention can legitimately flip it
+        "fused_opt_no_worse_than_unfused": us["fused_opt"] <= us["fused"],
         "bit_exact": True,  # asserted above before timing
     })
 
@@ -123,8 +145,8 @@ def run(quick: bool = False, smoke: bool = False) -> None:
         "benchmark": "train_step",
         "backend": jax.default_backend(),
         "kernel_backend_auto": resolve_backend("auto"),
-        "variants": {m: {"fused_fwd": f, "fuse_bwd": b}
-                     for m, (f, b) in VARIANTS.items()},
+        "variants": {m: {"fused_fwd": f, "fuse_bwd": b, "fuse_opt": o}
+                     for m, (f, b, o) in VARIANTS.items()},
         "speedup_estimator": (
             "interleaved min-of-N, ABBA order — co-tenant CPU noise only "
             "inflates samples, so the per-variant minimum bounds the "

@@ -70,6 +70,33 @@ def linear_backward(
     return grad_x, {"w": grad_w}
 
 
+def linear_update(
+    params: dict,
+    cache: jax.Array,
+    grad_out: jax.Array,
+    opt_state,
+    *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
+    fuse_bwd: bool = True,
+    backend: str = "auto",
+) -> tuple[jax.Array, dict]:
+    """``linear_backward`` + IntegerSGD in one pass: (grad_x, {'w': W′}).
+
+    The weight update runs as the grad_W kernel's flush epilogue
+    (``grad_ops.linear_weight_update``), so grad_W never reaches HBM —
+    bitwise identical to ``linear_backward`` → ``optimizer.apply_update``.
+    """
+    from repro.kernels import grad_ops  # lazy: cycle-free (see blocks.py)
+
+    grad_x, w_new = grad_ops.linear_weight_update(
+        cache, params["w"], grad_out, opt_state,
+        z_star=z_star, alpha_inv=alpha_inv, fuse_bwd=fuse_bwd,
+        backend=backend,
+    )
+    return grad_x, {"w": w_new}
+
+
 # ---------------------------------------------------------------------------
 # Integer Conv2D (K×K, stride 1, 'same' padding) via im2col + matmul
 # ---------------------------------------------------------------------------
@@ -161,6 +188,35 @@ def conv_backward(
         backend=backend, conv_mode=conv_mode,
     )
     return grad_x, {"w": grad_w}
+
+
+def conv_update(
+    params: dict,
+    cache: ConvCache,
+    grad_out: jax.Array,
+    opt_state,
+    *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
+    fuse_bwd: bool = True,
+    conv_mode: str = "stream",
+    backend: str = "auto",
+) -> tuple[jax.Array, dict]:
+    """``conv_backward`` + IntegerSGD in one pass: (grad_x, {'w': W′}).
+
+    Stream mode applies the update in the streaming grad_W kernel's flush
+    (``grad_ops.conv_weight_update``); materialise mode composes the
+    escape hatch.  Bitwise identical to ``conv_backward`` →
+    ``optimizer.apply_update`` on every (mode, backend) combination.
+    """
+    from repro.kernels import grad_ops  # lazy: cycle-free
+
+    grad_x, w_new = grad_ops.conv_weight_update(
+        cache.x, params["w"], grad_out, opt_state,
+        z_star=z_star, alpha_inv=alpha_inv, fuse_bwd=fuse_bwd,
+        backend=backend, conv_mode=conv_mode,
+    )
+    return grad_x, {"w": w_new}
 
 
 # ---------------------------------------------------------------------------

@@ -158,23 +158,109 @@ def compute_gradients(
     return grads, metrics, StepAux(fw_caches=tuple(fw_caches))
 
 
-def apply_gradients(state: TrainState, grads: StepGrads) -> TrainState:
+def apply_gradients(
+    state: TrainState,
+    grads: StepGrads,
+    *,
+    fuse_opt: bool = False,
+    backend: str = "auto",
+) -> TrainState:
     """IntegerSGD update of every parameter group from raw gradients.
 
     The second half of ``train_step``: deterministic given (state, grads),
     so two replicas holding identical state and identical (all-reduced)
     gradients step to bitwise-identical new states.
+
+    ``fuse_opt=True`` routes the update through the standalone fused
+    IntegerSGD kernel (``kernels.integer_sgd.apply_tree_fused`` — W and g
+    read once, W′ written once) instead of the jnp ``opt.apply_tree`` —
+    bitwise identical.  This is the data-parallel step's fused path: DP
+    must materialise the gradient for the all-reduce, so it cannot use
+    the grad-kernel flush epilogue, but the post-reduce update still
+    avoids the floor-division temporaries' HBM round-trips.  ``backend``
+    is only consulted when ``fuse_opt`` is set.
     """
+    if fuse_opt:
+        # lazy import: core must not import kernels at module scope
+        from repro.kernels.integer_sgd.ops import apply_tree_fused
+
+        def _apply(p, g, s):
+            return apply_tree_fused(p, g, s, backend=backend)
+    else:
+        def _apply(p, g, s):
+            return opt.apply_tree(p, g, s)
+
     new_blocks = [
         {
-            "fw": opt.apply_tree(p["fw"], g["fw"], state.opt_fw),
-            "lr": opt.apply_tree(p["lr"], g["lr"], state.opt_lr),
+            "fw": _apply(p["fw"], g["fw"], state.opt_fw),
+            "lr": _apply(p["lr"], g["lr"], state.opt_lr),
         }
         for p, g in zip(state.params["blocks"], grads.blocks)
     ]
-    new_output = opt.apply_tree(state.params["output"], grads.output, state.opt_lr)
+    new_output = _apply(state.params["output"], grads.output, state.opt_lr)
     new_params = {"blocks": new_blocks, "output": new_output}
     return state._replace(params=new_params, step=state.step + 1)
+
+
+def _fused_opt_step(
+    state: TrainState,
+    cfg: M.NitroConfig,
+    x: jax.Array,
+    labels: jax.Array,
+    key: jax.Array,
+    *,
+    fused: bool,
+    fuse_bwd: bool,
+    backend: str,
+    conv_mode: str,
+) -> tuple[TrainState, StepMetrics]:
+    """The monolithic fast path behind ``train_step(fuse_opt=True)``.
+
+    Bypasses the ``compute_gradients``/``apply_gradients`` split: each
+    block's forward-layer weight gradient is consumed *inside* the grad_W
+    kernel whose flush applies the IntegerSGD update
+    (``blocks.forward_layers_update``), so the full-size grad_W never
+    materialises in HBM.  The learning/output layers keep the jnp update —
+    their gradients are small (d_lr × classes) and their backward has no
+    Pallas flush to fuse into.  Bitwise identical to the split
+    composition: integer floor-div over an order-exact int32 accumulation
+    is exact, so fused ≡ unfused is provable (and test-enforced).
+    """
+    params = state.params
+    y = one_hot_int(labels, cfg.num_classes)
+
+    y_hat, acts, fw_caches, out_cache = M.forward(
+        params, cfg, x, train=True, key=key, fused=fused, backend=backend,
+        conv_mode=conv_mode,
+    )
+
+    grad_o = rss_grad(y_hat, y)
+    out_grads = B.output_backward(params["output"], out_cache, grad_o)
+    new_output = opt.apply_tree(params["output"], out_grads, state.opt_lr)
+
+    new_blocks = []
+    local_losses = []
+    for spec, p, a_l, fw_cache in zip(
+        cfg.blocks, params["blocks"], acts, fw_caches
+    ):
+        y_hat_l, lr_cache = B.learning_layers(p, spec, a_l)
+        grad_l = B.local_gradient(y_hat_l, y)
+        local_losses.append(rss_loss(y_hat_l, y))
+        delta_fw, lr_grads = B.learning_layers_backward(p, spec, lr_cache, grad_l)
+        new_fw = B.forward_layers_update(
+            p, spec, fw_cache, delta_fw, state.opt_fw,
+            conv_mode=conv_mode, backend=backend, fuse_bwd=fuse_bwd,
+        )
+        new_lr = opt.apply_tree(p["lr"], lr_grads, state.opt_lr)
+        new_blocks.append({"fw": new_fw, "lr": new_lr})
+
+    metrics = StepMetrics(
+        loss=rss_loss(y_hat, y),
+        correct=jnp.sum(jnp.argmax(y_hat, axis=-1) == labels),
+        local_losses=jnp.stack(local_losses),
+    )
+    new_params = {"blocks": new_blocks, "output": new_output}
+    return state._replace(params=new_params, step=state.step + 1), metrics
 
 
 def train_step(
@@ -186,6 +272,7 @@ def train_step(
     *,
     fused: bool = True,
     fuse_bwd: bool = True,
+    fuse_opt: bool = False,
     backend: str = "auto",
     conv_mode: str = "stream",
     telemetry: bool = False,
@@ -209,6 +296,16 @@ def train_step(
     (implicit im2col — default) or ``'materialise'`` (explicit HBM patch
     matrices, the historical route).
 
+    ``fuse_opt=True`` takes the monolithic fast path (``_fused_opt_step``):
+    the IntegerSGD update of each forward-layer weight runs as the grad_W
+    kernel's *flush epilogue*, so grad_W never materialises in HBM —
+    3 HBM streams per weight update instead of 5+.  Bitwise identical to
+    the split composition (test-enforced).  The split survives where the
+    materialised gradient has another consumer: data parallelism (the
+    all-reduce — ``parallel.dp`` applies the standalone fused kernel
+    post-reduce instead) and ``telemetry=True`` (the readout inspects the
+    fw gradients), which therefore falls back to the split path here.
+
     ``telemetry=True`` returns ``(state, metrics, telem)`` where
     ``telem`` is the integer-only numerics-telemetry pytree of
     ``repro.obs.telemetry`` (per-layer bit-occupancy/saturation, dead
@@ -217,6 +314,12 @@ def train_step(
     identical with it on or off, and the whole jaxpr stays float-free —
     both test-enforced.
     """
+    if fuse_opt and not telemetry:
+        return _fused_opt_step(
+            state, cfg, x, labels, key,
+            fused=fused, fuse_bwd=fuse_bwd, backend=backend,
+            conv_mode=conv_mode,
+        )
     grads, metrics, aux = compute_gradients(
         state, cfg, x, labels, key,
         fused=fused, fuse_bwd=fuse_bwd, backend=backend, conv_mode=conv_mode,

@@ -7,9 +7,24 @@ Update rule, entirely in ℤ::
     W_t ← W_{t-1} − δ_t
 
 ``γ_inv = ⌊1/γ⌋`` and ``η_inv = γ_inv · λ_inv`` are the inverse learning /
-composite decay rates.  Decay only touches weights with |w| ≥ η_inv — the
-floor division zeroes the rest, the paper's "surprisingly straightforward"
-regularisation behaviour.
+composite decay rates.  The decay term is a *floor* division (rounds
+toward −∞, matching ``jnp.floor_divide``), which makes its small-weight
+behaviour asymmetric:
+
+  * ``0 ≤ w < η_inv``      → ``⌊w/η_inv⌋ = 0``  — small positive weights
+    are untouched;
+  * ``−η_inv ≤ w < 0``     → ``⌊w/η_inv⌋ = −1`` — every small *negative*
+    weight gets a constant +1 nudge per step (``w ← w + 1`` at zero
+    gradient), an asymmetric pull toward zero that positive weights of
+    the same magnitude don't get: at zero gradient a small negative
+    weight climbs one unit per step until it reaches 0 and stays there,
+    while a small positive weight never moves at all.
+
+Algorithm 1 specifies exactly this floor arithmetic — the asymmetry is
+the faithful integer semantics, not a bug — but it means decay is *not*
+"zeroed for |w| < η_inv": that holds for the positive half only.  Pinned
+by a hypothesis property test over negative weights
+(``tests/test_integer_sgd.py``).
 
 NITRO Amplification Factor: a block's *forward layers* receive the local
 gradient amplified by the learning layers' matmul (bit-width
@@ -60,7 +75,12 @@ def init_state(gamma_inv: int, eta_inv: int = 0) -> IntegerSGDState:
 def apply_update(
     w: jax.Array, grad: jax.Array, state: IntegerSGDState
 ) -> jax.Array:
-    """One Algorithm-1 step for a single weight tensor."""
+    """One Algorithm-1 step for a single weight tensor.
+
+    Floor-division decay: zero for ``0 ≤ w < η_inv`` but −1 for
+    ``−η_inv ≤ w < 0`` (the asymmetry documented in the module
+    docstring); ``η_inv == 0`` disables decay entirely.
+    """
     numerics.assert_int(w, "weights")
     numerics.assert_int(grad, "gradient")
     delta = floor_div(grad, state.gamma_inv)

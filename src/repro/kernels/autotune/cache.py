@@ -5,14 +5,15 @@ One cache file holds every tuned entry for one build fingerprint::
     {
       "fingerprint": "repro=0.8.0|jax=0.4.xx|backend=cpu",
       "entries": {
-        "matmul|256x1152x128|int8,int8|pallas|-|0": {"bm": 64, ...},
+        "matmul|256x1152x128|int8,int8|pallas|-|0|0": {"bm": 64, ...},
         ...
       }
     }
 
 Design points:
 
-* **Keyed** by ``(op, shape, dtype, backend, conv_mode, fuse_bwd)`` —
+* **Keyed** by ``(op, shape, dtype, backend, conv_mode, fuse_bwd,
+  fuse_opt)`` —
   every axis that changes which kernel runs or how its grid is laid
   out.  Tile choice never changes *results* (integer accumulation is
   order-exact), only speed, so a stale entry is a perf bug at worst —
@@ -58,10 +59,12 @@ def build_fingerprint() -> str:
 
 
 def cache_key(op: str, shape, dtype: str, backend: str,
-              conv_mode: str = "", fuse_bwd: bool = False) -> str:
+              conv_mode: str = "", fuse_bwd: bool = False,
+              fuse_opt: bool = False) -> str:
     """The canonical string key for one tuning problem."""
     dims = "x".join(str(int(d)) for d in shape)
-    return f"{op}|{dims}|{dtype}|{backend}|{conv_mode or '-'}|{int(fuse_bwd)}"
+    return (f"{op}|{dims}|{dtype}|{backend}|{conv_mode or '-'}"
+            f"|{int(fuse_bwd)}|{int(fuse_opt)}")
 
 
 class TileCache:

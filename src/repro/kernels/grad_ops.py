@@ -4,7 +4,11 @@ Every hand-derived backward in ``repro.core`` funnels through this module,
 the backward mirror of PR 2's forward dispatchers:
 
   * ``linear_grads`` — the two gradient matmuls of an IntegerLinear layer;
-  * ``conv_grads``   — the two conv gradients (streamed or materialised).
+  * ``conv_grads``   — the two conv gradients (streamed or materialised);
+  * ``linear_weight_update`` / ``conv_weight_update`` — grad_x plus the
+    *updated weight*: the IntegerSGD step is applied in the grad_W
+    kernels' flush (``fuse_opt``), so grad_W never materialises in HBM
+    when its only consumer is the optimiser.
 
 Both take the *raw* block gradient δ (after the jnp dropout/pool
 backwards, which stay outside the kernels) plus the cached pre-ReLU
@@ -36,6 +40,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import optimizer as opt
 from repro.core.numerics import int_matmul
 from repro.kernels.autotune.tiles import TileConfig
 from repro.kernels.nitro_conv import ops as conv_ops
@@ -117,3 +122,86 @@ def conv_grads(
         backend=backend, conv_mode=conv_mode, tiles=tiles,
     )
     return grad_x, grad_w
+
+
+# ---------------------------------------------------------------------------
+# Fused weight updates: grad_W + IntegerSGD in one kernel pass (fuse_opt)
+# ---------------------------------------------------------------------------
+
+
+def linear_weight_update(
+    x: jax.Array,
+    w: jax.Array,
+    delta: jax.Array,
+    opt_state: opt.IntegerSGDState,
+    *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
+    fuse_bwd: bool = True,
+    backend: str = "auto",
+    tiles: TileConfig | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """IntegerLinear backward + optimiser: returns ``(grad_x, w_new)``.
+
+    The fused path runs ``grad_w_opt_matmul`` — the IntegerSGD update is
+    the grad_W kernel's flush epilogue, so grad_W never exists in HBM.
+    The escape hatches (``z_star=None`` or ``fuse_bwd=False``) compose
+    the materialised gradient with ``optimizer.apply_update`` — bitwise
+    identical, because integer floor-div over an order-exact int32
+    accumulation is exact.
+    """
+    if z_star is None or not fuse_bwd:
+        grad_x, grad_w = linear_grads(
+            x, w, delta, z_star=z_star, alpha_inv=alpha_inv,
+            fuse_bwd=fuse_bwd, backend=backend, tiles=tiles,
+        )
+        return grad_x, opt.apply_update(w, grad_w, opt_state)
+    w_new = mm_ops.grad_w_opt_matmul(
+        x, delta, z_star, w, opt_state.gamma_inv, opt_state.eta_inv,
+        alpha_inv=alpha_inv, backend=backend, tiles=tiles,
+    )
+    grad_x = mm_ops.grad_x_matmul(
+        delta, z_star, w, alpha_inv=alpha_inv, backend=backend, tiles=tiles
+    )
+    return grad_x, w_new
+
+
+def conv_weight_update(
+    x: jax.Array,
+    w: jax.Array,
+    delta: jax.Array,
+    opt_state: opt.IntegerSGDState,
+    *,
+    z_star: jax.Array | None = None,
+    alpha_inv: int = 10,
+    fuse_bwd: bool = True,
+    backend: str = "auto",
+    conv_mode: str = "stream",
+    tiles: TileConfig | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """IntegerConv2D backward + optimiser: returns ``(grad_x, w_new)``.
+
+    Stream mode fuses the IntegerSGD step into the grad_W kernel's flush
+    (``conv_grad_w_opt``); materialise mode — whose gradient is an HBM
+    matmul result with no flush — takes the unfused escape hatch, as do
+    ``fuse_bwd=False`` and ``z_star=None``.
+    """
+    if z_star is None or not fuse_bwd or (
+        conv_ops.resolve_conv_mode(conv_mode) == "materialise"
+    ):
+        grad_x, grad_w = conv_grads(
+            x, w, delta, z_star=z_star, alpha_inv=alpha_inv,
+            fuse_bwd=fuse_bwd, backend=backend, conv_mode=conv_mode,
+            tiles=tiles,
+        )
+        return grad_x, opt.apply_update(w, grad_w, opt_state)
+    w_new = conv_ops.conv_grad_w_opt(
+        x, delta, w, opt_state.gamma_inv, opt_state.eta_inv,
+        kernel_size=w.shape[0], z_star=z_star, alpha_inv=alpha_inv,
+        backend=backend, conv_mode=conv_mode, tiles=tiles,
+    )
+    grad_x = conv_ops.conv_grad_x(
+        delta, w, z_star=z_star, alpha_inv=alpha_inv,
+        backend=backend, conv_mode=conv_mode, tiles=tiles,
+    )
+    return grad_x, w_new

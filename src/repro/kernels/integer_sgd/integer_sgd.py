@@ -31,18 +31,30 @@ _CompilerParams = getattr(
 )
 
 
-def _integer_sgd_kernel(scalars_ref, w_ref, g_ref, out_ref):
-    """scalars = [γ_inv, η_inv]; η_inv == 0 disables decay."""
-    gamma_inv = scalars_ref[0]
-    eta_inv = scalars_ref[1]
-    w = w_ref[...]
-    delta = jnp.floor_divide(g_ref[...], gamma_inv)
+def integer_sgd_tile(w, g, gamma_inv, eta_inv):
+    """One IntegerSGD step on in-register values — the shared epilogue body.
+
+    Used both by the standalone kernel below and by the grad-kernel flush
+    epilogues (``nitro_matmul._nitro_grad_w_opt_kernel``,
+    ``nitro_conv._stream_grad_w_opt_kernel``), so fused ≡ standalone ≡ ref
+    is one expression, not three. η_inv == 0 disables decay; floor division
+    rounds toward −∞ (see ``core.optimizer.apply_update`` for the
+    negative-weight asymmetry this implies).
+    """
+    delta = jnp.floor_divide(g, gamma_inv)
     decay = jnp.where(
         eta_inv != 0,
         jnp.floor_divide(w, jnp.maximum(eta_inv, 1)),
         jnp.zeros_like(w),
     )
-    out_ref[...] = w - (delta + decay)
+    return w - (delta + decay)
+
+
+def _integer_sgd_kernel(scalars_ref, w_ref, g_ref, out_ref):
+    """scalars = [γ_inv, η_inv]; η_inv == 0 disables decay."""
+    out_ref[...] = integer_sgd_tile(
+        w_ref[...], g_ref[...], scalars_ref[0], scalars_ref[1]
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -1,9 +1,22 @@
-"""Jit'd wrapper: apply the fused IntegerSGD kernel across parameter trees."""
+"""Jit'd wrapper: apply the fused IntegerSGD kernel across parameter trees.
+
+The dispatcher mirrors ``nitro_matmul.ops``: ``backend=`` is the modern
+knob (``pallas | interpret | reference | auto``); the historical
+``use_kernel``/``interpret`` pair is kept as a deprecated alias with the
+same contradictory-flag hardening ``_legacy_backend`` got in PR 5 —
+``use_kernel=False`` + ``interpret=True`` raises instead of silently
+dropping the interpreter request, and an explicit ``interpret=True`` with
+``use_kernel`` unset selects the interpreter off-TPU instead of being
+ignored.
+"""
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 
+from repro.core import numerics
 from repro.core import optimizer as opt
 from repro.kernels.integer_sgd.integer_sgd import integer_sgd_update
 from repro.kernels.integer_sgd.ref import integer_sgd_ref
@@ -13,22 +26,72 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _resolve(
+    backend: str | None, use_kernel: bool | None, interpret: bool | None
+) -> str:
+    """Backend string from either the modern or the legacy knobs."""
+    if backend is not None:
+        if use_kernel is not None or interpret is not None:
+            raise ValueError(
+                "pass either backend= or the legacy use_kernel/interpret "
+                "knobs, not both"
+            )
+        # lazy import: nitro_matmul.ops module-imports this package's
+        # sibling kernels — resolving at call time keeps the import DAG
+        # acyclic (see nitro_matmul.nitro_matmul's integer_sgd_tile import)
+        from repro.kernels.nitro_matmul.ops import resolve_backend
+
+        return resolve_backend(backend)
+    if use_kernel is not None or interpret is not None:
+        warnings.warn(
+            "use_kernel/interpret are deprecated; use backend="
+            "'pallas'|'interpret'|'reference'|'auto' instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    if use_kernel is False and interpret:
+        raise ValueError(
+            "contradictory legacy knobs: use_kernel=False disables the "
+            "kernel but interpret=True requests the Pallas interpreter; "
+            "pass backend='reference' or backend='interpret' instead"
+        )
+    if use_kernel is None:
+        use_kernel = _on_tpu() or bool(interpret)
+    if not use_kernel:
+        return "reference"
+    if interpret is None:
+        interpret = not _on_tpu()
+    return "interpret" if interpret else "pallas"
+
+
 def apply_tree_fused(
-    params, grads, state: opt.IntegerSGDState, *, use_kernel: bool | None = None,
+    params, grads, state: opt.IntegerSGDState, *,
+    backend: str | None = None,
+    use_kernel: bool | None = None,
     interpret: bool | None = None,
 ):
-    """Drop-in replacement for ``optimizer.apply_tree`` using the kernel."""
-    if use_kernel is None:
-        use_kernel = _on_tpu()
-    if not use_kernel:
+    """Drop-in replacement for ``optimizer.apply_tree`` using the kernel.
+
+    Validates every leaf the way the jnp path (``opt.apply_update``) does
+    — float leaves fail loudly here, not as silent float arithmetic inside
+    a kernel whose contract is integer-only.
+    """
+    resolved = _resolve(backend, use_kernel, interpret)
+    jax.tree_util.tree_map(
+        lambda w: numerics.assert_int(w, "integer_sgd weight"), params
+    )
+    jax.tree_util.tree_map(
+        lambda g: numerics.assert_int(g, "integer_sgd gradient"), grads
+    )
+    if resolved == "reference":
         return jax.tree_util.tree_map(
             lambda w, g: integer_sgd_ref(w, g, state.gamma_inv, state.eta_inv),
             params, grads,
         )
-    interp = (not _on_tpu()) if interpret is None else interpret
     return jax.tree_util.tree_map(
         lambda w, g: integer_sgd_update(
-            w, g, state.gamma_inv, state.eta_inv, interpret=interp
+            w, g, state.gamma_inv, state.eta_inv,
+            interpret=(resolved == "interpret"),
         ),
         params, grads,
     )

@@ -2,11 +2,13 @@ from repro.kernels.nitro_conv.nitro_conv import (
     stream_conv,
     stream_conv_fwd,
     stream_conv_grad_w,
+    stream_conv_grad_w_opt,
     stream_conv_grad_x,
 )
 from repro.kernels.nitro_conv.ops import (
     CONV_MODES,
     conv_grad_w,
+    conv_grad_w_opt,
     conv_grad_x,
     fused_conv,
     fused_conv_fwd,
@@ -22,6 +24,7 @@ from repro.kernels.nitro_conv.ref import (
 __all__ = [
     "CONV_MODES",
     "conv_grad_w",
+    "conv_grad_w_opt",
     "conv_grad_x",
     "fused_conv",
     "fused_conv_fwd",
@@ -30,6 +33,7 @@ __all__ = [
     "stream_conv_fwd",
     "stream_conv_fwd_ref",
     "stream_conv_grad_w",
+    "stream_conv_grad_w_opt",
     "stream_conv_grad_w_ref",
     "stream_conv_grad_x",
     "stream_conv_grad_x_ref",

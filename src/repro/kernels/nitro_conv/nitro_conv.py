@@ -57,6 +57,7 @@ from repro.core.activations import mu_int8
 from repro.core.scaling import pow2_split
 from repro.kernels.autotune.tiles import DEFAULT_TILES
 from repro.kernels.nitro_conv.ref import DEFAULT_BH, conv_geometry, rot180_swap
+from repro.kernels.integer_sgd.integer_sgd import integer_sgd_tile
 from repro.kernels.nitro_matmul.nitro_matmul import (
     _CompilerParams,
     _relu_bwd_tile,
@@ -171,14 +172,16 @@ def _stream_conv_fwd_kernel(
 
 def _grad_w_accumulate(
     x_hbm, g2d, out_ref, rows, patches, acc, sem, *,
-    k, bh, w_out, c, n_steps,
+    k, bh, w_out, c, n_steps, flush=None,
 ):
     """Shared grad_w body: acc += patch_bandᵀ @ g2d per (image, band).
 
     Grid is ``(filter tile, image, band)`` — the filter tile is outermost so
     the (K²C, bf) VMEM accumulator runs over every image/band before its
     single HBM write.  ``g2d`` is the (bh·W, bf) gradient band, already in
-    VMEM registers (masked by the caller on the fused path).
+    VMEM registers (masked by the caller on the fused path).  ``flush``
+    lets the caller transform the finished accumulator tile before the HBM
+    write (the IntegerSGD epilogue); ``None`` writes the raw gradient.
     """
     n, band = pl.program_id(1), pl.program_id(2)
     step = n * pl.num_programs(2) + band
@@ -197,7 +200,7 @@ def _grad_w_accumulate(
 
     @pl.when(step == n_steps - 1)
     def _flush():
-        out_ref[...] = acc[...]
+        out_ref[...] = acc[...] if flush is None else flush(acc[...])
 
 
 def _stream_grad_w_kernel(
@@ -230,6 +233,31 @@ def _stream_grad_w_fused_kernel(
     _grad_w_accumulate(
         x_hbm, g2d, out_ref, rows, patches, acc, sem,
         k=k, bh=bh, w_out=w_out, c=c, n_steps=n_steps,
+    )
+
+
+def _stream_grad_w_opt_kernel(
+    scalars_ref, x_hbm, g_ref, z_ref, w_ref, out_ref, rows, patches, acc,
+    sem, *, k, bh, w_out, c, bf, n_steps, alpha_inv,
+):
+    """Conv weight *update*: fused prologue + IntegerSGD flush epilogue.
+
+    Accumulation matches ``_stream_grad_w_fused_kernel`` exactly; the last
+    (image, band) step reads the flattened (K²C, bf) W tile and writes
+    ``W − (⌊acc/γ_inv⌋ + ⌊W/η_inv⌋)`` — grad_W never reaches HBM.
+    γ_inv/η_inv arrive in SMEM.
+    """
+    g2d = _relu_bwd_tile(
+        g_ref[0].reshape(bh * w_out, bf).astype(jnp.int32),
+        z_ref[0].reshape(bh * w_out, bf),
+        alpha_inv,
+    )
+    _grad_w_accumulate(
+        x_hbm, g2d, out_ref, rows, patches, acc, sem,
+        k=k, bh=bh, w_out=w_out, c=c, n_steps=n_steps,
+        flush=lambda a: integer_sgd_tile(
+            w_ref[...], a, scalars_ref[0], scalars_ref[1]
+        ),
     )
 
 
@@ -496,6 +524,83 @@ def stream_conv_grad_w(
         ),
         interpret=interpret,
     )(*operands)
+    return out[:, :f].reshape(k, k, c, f)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kernel_size", "alpha_inv", "bh", "bf", "interpret"),
+)
+def stream_conv_grad_w_opt(
+    x: jax.Array,
+    grad_out: jax.Array,
+    z_star: jax.Array,
+    w: jax.Array,
+    gamma_inv: jax.Array,
+    eta_inv: jax.Array,
+    *,
+    kernel_size: int,
+    alpha_inv: int = 10,
+    bh: int = DEFAULT_BH,
+    bf: int = DEFAULT_BF,
+    interpret: bool = False,
+) -> jax.Array:
+    """Streaming conv weight *update*: grad_W stays in VMEM, IntegerSGD is
+    applied in the flush, and the kernel returns W′ (K,K,C,F) directly.
+
+    Same band geometry, padding, and accumulation order as the fused
+    ``stream_conv_grad_w`` — bitwise-identical grad_W by construction —
+    then the flush applies ``W − (⌊acc/γ_inv⌋ + ⌊W/η_inv⌋)`` per filter
+    tile.  ``w`` rides in VMEM flattened to the (K²C, bf) output layout.
+    Padded filter columns have acc = 0 and w = 0 → W′ = 0, sliced away.
+    """
+    n, h, w_sp, c = x.shape
+    k = kernel_size
+    f = grad_out.shape[-1]
+    assert w.shape == (k, k, c, f), f"w shape {w.shape} != {(k, k, c, f)}"
+    bh_, h_pad, p = conv_geometry(h, k, bh, pool=False)
+    bf_ = min(bf, f)
+    xp = jnp.pad(x, ((0, 0), (p, p + h_pad - h), (p, p), (0, 0)))
+    f_pad = (-f) % bf_
+    g_pad = ((0, 0), (0, h_pad - h), (0, 0), (0, f_pad))
+    gp = jnp.pad(grad_out, g_pad)
+    zp = jnp.pad(z_star.astype(jnp.int32), g_pad)
+    w_flat = jnp.pad(w.reshape(k * k * c, f), ((0, 0), (0, f_pad)))
+
+    n_bands = h_pad // bh_
+    g_spec = pl.BlockSpec(
+        (1, bh_, w_sp, bf_), lambda fi, ni, bi: (ni, bi, 0, fi)
+    )
+    w_spec = pl.BlockSpec((k * k * c, bf_), lambda fi, ni, bi: (0, fi))
+    kernel = functools.partial(
+        _stream_grad_w_opt_kernel,
+        k=k, bh=bh_, w_out=w_sp, c=c, bf=bf_, n_steps=n * n_bands,
+        alpha_inv=alpha_inv,
+    )
+    scalars = jnp.stack(
+        [jnp.asarray(gamma_inv, jnp.int32), jnp.asarray(eta_inv, jnp.int32)]
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=((f + f_pad) // bf_, n, n_bands),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            g_spec,
+            g_spec,
+            w_spec,
+        ],
+        out_specs=w_spec,
+        out_shape=jax.ShapeDtypeStruct((k * k * c, f + f_pad), jnp.int32),
+        scratch_shapes=_conv_scratches(x, k, bh_, w_sp, c)[:2] + [
+            pltpu.VMEM((k * k * c, bf_), jnp.int32),
+            pltpu.SemaphoreType.DMA,
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(scalars, xp, gp, zp, w_flat)
     return out[:, :f].reshape(k, k, c, f)
 
 

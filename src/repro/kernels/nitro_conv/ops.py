@@ -47,6 +47,7 @@ from repro.kernels.nitro_conv.nitro_conv import (
     stream_conv,
     stream_conv_fwd,
     stream_conv_grad_w,
+    stream_conv_grad_w_opt,
     stream_conv_grad_x,
 )
 from repro.kernels.nitro_matmul.ops import (
@@ -248,6 +249,62 @@ def conv_grad_w(
     return stream_conv_grad_w(
         x, grad_out, kernel_size=kernel_size,
         z_star=z_star, alpha_inv=alpha_inv,
+        interpret=(backend == "interpret"), **_stream_tile_kw(tiles),
+    )
+
+
+def conv_grad_w_opt(
+    x: jax.Array,
+    grad_out: jax.Array,
+    w: jax.Array,
+    gamma_inv: jax.Array,
+    eta_inv: jax.Array,
+    *,
+    kernel_size: int,
+    z_star: jax.Array,
+    alpha_inv: int = 10,
+    backend: str = "auto",
+    conv_mode: str = "stream",
+    tiles: TileConfig | None = None,
+) -> jax.Array:
+    """Conv weight *update*: ``conv_grad_w`` with IntegerSGD applied in the
+    streaming kernel's flush — returns W′ (K,K,C,F), grad_W never in HBM.
+
+    Stream-only: the materialise path's gradient is an HBM matmul result
+    with no flush to fuse into — callers (``grad_ops.conv_weight_update``)
+    take the unfused escape hatch there instead of calling this.
+    ``z_star`` is required; a caller without it has pre-masked δ and no
+    prologue, which is also the escape hatch's job.
+    """
+    backend = resolve_backend(backend)
+    alpha_inv = check_alpha_inv(alpha_inv, True)
+    conv_mode = resolve_conv_mode(conv_mode)
+    if conv_mode == "materialise":
+        raise ValueError(
+            "conv_grad_w_opt is stream-only: the materialise path has no "
+            "kernel flush to fuse the optimiser into — compute conv_grad_w "
+            "and apply optimizer.apply_update instead"
+        )
+    if tiles is None:
+        tiles = autotune.resolve_tiles(
+            "conv_grad_w",
+            (x.shape[0], x.shape[1], x.shape[2], x.shape[3],
+             kernel_size, grad_out.shape[-1]),
+            dtype=f"{x.dtype},{grad_out.dtype}", backend=backend,
+            conv_mode=conv_mode, fuse_bwd=True, fuse_opt=True,
+        )
+    if backend == "reference":
+        from repro.kernels.integer_sgd.ref import integer_sgd_ref
+
+        grad_w = conv_ref.stream_conv_grad_w_ref(
+            x, grad_out, kernel_size=kernel_size,
+            z_star=z_star, alpha_inv=alpha_inv,
+            bh=None if tiles is None else tiles.bh,
+        )
+        return integer_sgd_ref(w, grad_w, gamma_inv, eta_inv)
+    return stream_conv_grad_w_opt(
+        x, grad_out, z_star, w, gamma_inv, eta_inv,
+        kernel_size=kernel_size, alpha_inv=alpha_inv,
         interpret=(backend == "interpret"), **_stream_tile_kw(tiles),
     )
 

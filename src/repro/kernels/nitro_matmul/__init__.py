@@ -2,6 +2,7 @@ from repro.kernels.nitro_matmul.nitro_matmul import (
     nitro_matmul,
     nitro_matmul_fwd,
     nitro_matmul_grad_w,
+    nitro_matmul_grad_w_opt,
     nitro_matmul_grad_x,
 )
 from repro.kernels.nitro_matmul.ops import (
@@ -9,6 +10,7 @@ from repro.kernels.nitro_matmul.ops import (
     fused_matmul,
     fused_matmul_fwd,
     grad_w_matmul,
+    grad_w_opt_matmul,
     grad_x_matmul,
     nitro_conv2d,
     nitro_linear,
@@ -26,11 +28,13 @@ __all__ = [
     "fused_matmul",
     "fused_matmul_fwd",
     "grad_w_matmul",
+    "grad_w_opt_matmul",
     "grad_x_matmul",
     "nitro_matmul",
     "nitro_matmul_fwd",
     "nitro_matmul_fwd_ref",
     "nitro_matmul_grad_w",
+    "nitro_matmul_grad_w_opt",
     "nitro_matmul_grad_w_ref",
     "nitro_matmul_grad_x",
     "nitro_matmul_grad_x_ref",

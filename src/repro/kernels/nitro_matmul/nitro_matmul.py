@@ -43,6 +43,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.activations import mu_int8, nitro_relu_backward
 from repro.core.scaling import pow2_split
 from repro.kernels.autotune.tiles import DEFAULT_TILES
+from repro.kernels.integer_sgd.integer_sgd import integer_sgd_tile
 
 # jax renamed TPUCompilerParams → CompilerParams; support both.
 _CompilerParams = getattr(
@@ -437,6 +438,105 @@ def nitro_matmul_grad_w(
         ),
         interpret=interpret,
     )(x, delta, z_star)
+    return out[:m, :n]
+
+
+def _nitro_grad_w_opt_kernel(
+    scalars_ref, x_ref, g_ref, z_ref, w_ref, out_ref, acc_ref, *, n_k, alpha_inv
+):
+    """grad_W tile with the IntegerSGD epilogue fused into the flush.
+
+    Accumulation is identical to ``_nitro_grad_w_kernel``; on the last
+    k-step the flush reads the matching W tile and writes
+    ``W − (⌊acc/γ_inv⌋ + ⌊W/η_inv⌋)`` instead of the raw gradient —
+    grad_W never reaches HBM.  γ_inv/η_inv ride in SMEM like the
+    standalone ``integer_sgd`` kernel's scalars.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = _relu_bwd_tile(g_ref[...].astype(jnp.int32), z_ref[...], alpha_inv)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.int32), g,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        out_ref[...] = integer_sgd_tile(
+            w_ref[...], acc_ref[...], scalars_ref[0], scalars_ref[1]
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha_inv", "bm", "bn", "bk", "interpret"),
+)
+def nitro_matmul_grad_w_opt(
+    x: jax.Array,
+    delta: jax.Array,
+    z_star: jax.Array,
+    w: jax.Array,
+    gamma_inv: jax.Array,
+    eta_inv: jax.Array,
+    *,
+    alpha_inv: int = 10,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused weight *update*: one pass computes grad_W in VMEM and applies
+    IntegerSGD in the flush, returning W′ directly.
+
+    Same grid/padding as ``nitro_matmul_grad_w``; ``w`` (M, N) shares the
+    output tiling.  Padding is exact through the epilogue too: a padded
+    position has acc = 0 and w = 0, so W′ = 0 − (⌊0/γ⌋ + decay(0)) = 0,
+    and the slice discards it.  3 HBM streams (x, δ/z*, W↔W′) versus 5+
+    for the unfused composition (grad_W write + read, W read + write).
+    """
+    b, m = x.shape
+    b2, n = delta.shape
+    assert b == b2, f"batch mismatch {b} vs {b2}"
+    assert delta.shape == z_star.shape, "delta/z_star shape mismatch"
+    assert w.shape == (m, n), f"w shape {w.shape} != ({m}, {n})"
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, b)
+    pm, pn, pb = (-m) % bm_, (-n) % bn_, (-b) % bk_
+    if pb or pm:
+        x = jnp.pad(x, ((0, pb), (0, pm)))
+    if pb or pn:
+        delta = jnp.pad(delta, ((0, pb), (0, pn)))
+        z_star = jnp.pad(z_star, ((0, pb), (0, pn)))
+    if pm or pn:
+        w = jnp.pad(w, ((0, pm), (0, pn)))
+    gm, gn, gk = x.shape[1] // bm_, delta.shape[1] // bn_, x.shape[0] // bk_
+    kernel = functools.partial(
+        _nitro_grad_w_opt_kernel, n_k=gk, alpha_inv=alpha_inv
+    )
+    scalars = jnp.stack(
+        [jnp.asarray(gamma_inv, jnp.int32), jnp.asarray(eta_inv, jnp.int32)]
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((bk_, bm_), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm_, bn_), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(scalars, x, delta, z_star, w)
     return out[:m, :n]
 
 

@@ -39,6 +39,7 @@ from repro.kernels.nitro_matmul.nitro_matmul import (
     nitro_matmul,
     nitro_matmul_fwd,
     nitro_matmul_grad_w,
+    nitro_matmul_grad_w_opt,
     nitro_matmul_grad_x,
 )
 from repro.kernels.nitro_matmul.ref import (
@@ -252,6 +253,50 @@ def grad_w_matmul(
     )
     return nitro_matmul_grad_w(
         x2, delta2, z_star2, alpha_inv=alpha_inv,
+        interpret=(backend == "interpret"), **tile_kw,
+    )
+
+
+def grad_w_opt_matmul(
+    x2: jax.Array,
+    delta2: jax.Array,
+    z_star2: jax.Array,
+    w2: jax.Array,
+    gamma_inv: jax.Array,
+    eta_inv: jax.Array,
+    *,
+    alpha_inv: int = 10,
+    backend: str = "auto",
+    tiles: TileConfig | None = None,
+) -> jax.Array:
+    """Fused backward weight *update* on 2-D operands — returns W′.
+
+    pallas/interpret run ``nitro_matmul_grad_w_opt`` (IntegerSGD applied in
+    the grad kernel's flush, grad_W never in HBM); reference composes the
+    same two oracles the unfused path uses — bit-identical either way
+    because integer floor-div over an order-exact int32 accumulation is
+    exact.
+    """
+    backend = resolve_backend(backend)
+    alpha_inv = check_alpha_inv(alpha_inv, True)
+    if tiles is None:
+        tiles = autotune.resolve_tiles(
+            "matmul_grad_w", (x2.shape[0], x2.shape[1], delta2.shape[1]),
+            dtype=f"{x2.dtype},{delta2.dtype}", backend=backend,
+            fuse_bwd=True, fuse_opt=True,
+        )
+    if backend == "reference":
+        from repro.kernels.integer_sgd.ref import integer_sgd_ref
+
+        grad_w = nitro_matmul_grad_w_ref(
+            x2, delta2, z_star2, alpha_inv=alpha_inv
+        )
+        return integer_sgd_ref(w2, grad_w, gamma_inv, eta_inv)
+    tile_kw = {} if tiles is None else dict(
+        bm=tiles.bm, bn=tiles.bn, bk=tiles.bk
+    )
+    return nitro_matmul_grad_w_opt(
+        x2, delta2, z_star2, w2, gamma_inv, eta_inv, alpha_inv=alpha_inv,
         interpret=(backend == "interpret"), **tile_kw,
     )
 

@@ -32,6 +32,7 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
                 telemetry_every: int = 0, telemetry_out: str | None = None,
                 trace_out: str | None = None,
                 num_devices: int = 1, dp_reduce: str = "psum",
+                fuse_opt: bool = False,
                 metrics_port: int | None = None,
                 alerts_out: str | None = None,
                 autotune: bool = False,
@@ -114,17 +115,23 @@ def train_nitro(arch: str, *, steps: int, batch: int, ckpt_dir: str | None,
         mesh = dp.data_mesh(num_devices)
         print(f"[dp] {num_devices}-device data mesh, reduce={dp_reduce} "
               f"(bitwise ≡ single-device)")
-        step_fn = dp.make_dp_train_step(cfg, mesh, dp_reduce=dp_reduce)
+        step_fn = dp.make_dp_train_step(cfg, mesh, dp_reduce=dp_reduce,
+                                        fuse_opt=fuse_opt)
     else:
-        step_fn = jax.jit(functools.partial(les.train_step, cfg=cfg))
+        step_fn = jax.jit(functools.partial(les.train_step, cfg=cfg,
+                                            fuse_opt=fuse_opt))
     telem_step_fn = None
     if telemetry_every > 0:
         from repro.obs import telemetry as T
         # a second jit cache entry, not a recompile of the first: the
         # trajectory it returns is bitwise-identical (test-enforced)
         if num_devices > 1:
+            # telemetry needs the materialised fw gradients, so these
+            # steps keep the split path regardless of --fuse-opt —
+            # bitwise-identical trajectory either way (test-enforced)
             telem_step_fn = dp.make_dp_train_step(
-                cfg, mesh, dp_reduce=dp_reduce, telemetry=True)
+                cfg, mesh, dp_reduce=dp_reduce, fuse_opt=fuse_opt,
+                telemetry=True)
         else:
             telem_step_fn = jax.jit(
                 functools.partial(les.train_step, cfg=cfg, telemetry=True))
@@ -309,6 +316,11 @@ def main():
                     choices=("psum", "ring", "compress"),
                     help="gradient all-reduce: XLA psum, hand-scheduled "
                          "ring, or int8-limb compressed (all exact)")
+    ap.add_argument("--fuse-opt", action="store_true",
+                    help="apply the IntegerSGD update in the grad "
+                         "kernels' flush (NITRO archs; single-device "
+                         "fast path — DP applies the standalone fused "
+                         "kernel post-reduce; bitwise-identical)")
     ap.add_argument("--autotune", action="store_true",
                     help="search kernel tile configs for this (arch, "
                          "batch) before compiling (NITRO archs; bitwise "
@@ -345,6 +357,7 @@ def main():
                     telemetry_out=args.telemetry_out,
                     trace_out=args.trace_out,
                     num_devices=args.num_devices, dp_reduce=args.dp_reduce,
+                    fuse_opt=args.fuse_opt,
                     metrics_port=args.metrics_port,
                     alerts_out=args.alerts_out,
                     autotune=args.autotune,

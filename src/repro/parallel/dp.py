@@ -159,6 +159,7 @@ def dp_train_step(
     dp_reduce: str = "psum",
     fused: bool = True,
     fuse_bwd: bool = True,
+    fuse_opt: bool = False,
     backend: str = "auto",
     conv_mode: str = "stream",
     telemetry: bool = False,
@@ -173,6 +174,13 @@ def dp_train_step(
     metrics all-reduce exactly, and every shard applies the identical
     IntegerSGD update — so all outputs are replicated and bitwise equal
     to the single-device step on the full batch.
+
+    ``fuse_opt=True`` applies the post-reduce update with the standalone
+    fused IntegerSGD kernel (``les.apply_gradients(fuse_opt=True)``) —
+    DP cannot use the grad-kernel flush epilogue because the all-reduce
+    *needs* the materialised gradient, but the update itself still fuses.
+    Bitwise identical, so cross-device-count trajectory identity holds
+    with it on or off (test-enforced).
 
     ``check_rep=False``: the ring reducer is built from ``ppermute``,
     whose per-device results shard_map cannot prove replicated (they are
@@ -205,7 +213,9 @@ def dp_train_step(
         metrics = les.StepMetrics(
             *(jax.lax.psum(m, DP_AXIS) for m in metrics)
         )
-        new_state = les.apply_gradients(state, grads)
+        new_state = les.apply_gradients(
+            state, grads, fuse_opt=fuse_opt, backend=backend
+        )
         if telemetry:
             telem = _dp_telemetry(
                 cfg, new_state, aux, grads, state, DP_AXIS
@@ -237,6 +247,7 @@ def make_dp_train_step(
     dp_reduce: str = "psum",
     fused: bool = True,
     fuse_bwd: bool = True,
+    fuse_opt: bool = False,
     backend: str = "auto",
     conv_mode: str = "stream",
     telemetry: bool = False,
@@ -248,7 +259,8 @@ def make_dp_train_step(
         return dp_train_step(
             state, cfg, x, labels, key,
             mesh=mesh, dp_reduce=dp_reduce, fused=fused, fuse_bwd=fuse_bwd,
-            backend=backend, conv_mode=conv_mode, telemetry=telemetry,
+            fuse_opt=fuse_opt, backend=backend, conv_mode=conv_mode,
+            telemetry=telemetry,
         )
 
     return jax.jit(step)

@@ -39,6 +39,10 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=3)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--telemetry", action="store_true")
+    ap.add_argument("--fuse-opt", action="store_true",
+                    help="single: the fused-epilogue train_step fast "
+                         "path; DP: the post-reduce fused IntegerSGD "
+                         "apply — both bitwise-identical to the default")
     args = ap.parse_args()
 
     # must precede the first jax import anywhere in the process
@@ -90,6 +94,7 @@ def main() -> None:
     if args.reducer == "single":
         def step(state, x, labels, key):
             return les.train_step(state, cfg, x, labels, key,
+                                  fuse_opt=args.fuse_opt,
                                   telemetry=args.telemetry)
     else:
         from repro.parallel import dp
@@ -98,6 +103,7 @@ def main() -> None:
         def step(state, x, labels, key):
             return dp.dp_train_step(state, cfg, x, labels, key,
                                     mesh=mesh, dp_reduce=args.reducer,
+                                    fuse_opt=args.fuse_opt,
                                     telemetry=args.telemetry)
 
     # the whole sharded step must stay integer-only — iter_eqns descends

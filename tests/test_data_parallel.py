@@ -76,8 +76,9 @@ def dp_run(tmp_path_factory):
     out_dir = tmp_path_factory.mktemp("dp_npz")
 
     def run(*, devices: int, reducer: str, config: str = "tiny",
-            steps: int = 3, batch: int = 8, telemetry: bool = False) -> dict:
-        key = (devices, reducer, config, steps, batch, telemetry)
+            steps: int = 3, batch: int = 8, telemetry: bool = False,
+            fuse_opt: bool = False) -> dict:
+        key = (devices, reducer, config, steps, batch, telemetry, fuse_opt)
         if key not in cache:
             out = out_dir / ("_".join(str(p) for p in key) + ".npz")
             env = dict(os.environ)
@@ -88,6 +89,8 @@ def dp_run(tmp_path_factory):
                    "--batch", str(batch)]
             if telemetry:
                 cmd.append("--telemetry")
+            if fuse_opt:
+                cmd.append("--fuse-opt")
             proc = subprocess.run(cmd, env=env, capture_output=True,
                                   text=True, timeout=900)
             assert proc.returncode == 0, (
@@ -191,6 +194,16 @@ class TestDeviceCounts:
         trajectory ≡ single-device."""
         ref = dp_run(devices=1, reducer="single")
         got = dp_run(devices=2, reducer="psum")
+        assert_runs_bitwise_equal(got, ref)
+
+    def test_two_device_fused_sgd_apply_smoke(self, dp_run):
+        """DP post-reduce fused IntegerSGD apply (``fuse_opt=True`` — the
+        standalone kernel consumes the all-reduced gradient) keeps the
+        2-device trajectory bitwise equal to the plain single-device
+        reference, proving both the fusion identity and the
+        cross-device-count identity in one comparison."""
+        ref = dp_run(devices=1, reducer="single")
+        got = dp_run(devices=2, reducer="psum", fuse_opt=True)
         assert_runs_bitwise_equal(got, ref)
 
     @pytest.mark.slow

@@ -14,8 +14,13 @@ blind — so their shape is a contract.  This gate pins it:
     legitimately flip — a schema gate must stay deterministic);
   * **per-file**: the ``benchmark`` name matches the emitting module,
     ``BENCH_obs.json`` carries both overhead rows (train telemetry +
-    fleet tracing), and ``BENCH_serve.json`` carries the per-arm
-    p99-vs-SLO roll-up with at least one configured SLO exercised.
+    fleet tracing), ``BENCH_serve.json`` carries the per-arm p99-vs-SLO
+    roll-up with at least one configured SLO exercised, and
+    ``BENCH_train.json`` carries the fused-opt rows: ``us_per_step``
+    with both the ``fused_opt`` and ``unfused`` variants, the structural
+    ``hbm_streams_per_weight_update`` counts (fused strictly fewer), and
+    a ``fused_opt_no_worse_than_unfused`` bool (shape-checked only —
+    a timing outcome, like ``meets_target``).
 
 Usage (CI runs it after the benchmark smokes, from the repo root)::
 
@@ -148,6 +153,36 @@ def check_autotune(path: str, payload: dict) -> None:
                      f"{where}.int8_wins is not a bool")
 
 
+def check_train(path: str, payload: dict) -> None:
+    """The fused-IntegerSGD rows: timings for both the fused-opt and the
+    split-update step, the structural HBM-stream counts (a claim about
+    the kernel dataflow, so value-checked: fused must stream strictly
+    less), and the no-worse bool (a timing outcome — shape-checked
+    only)."""
+    for i, result in enumerate(payload["results"]):
+        where = f"results[{i}]"
+        us = result.get("us_per_step")
+        _require(isinstance(us, dict), path, f"{where}.us_per_step missing")
+        for variant in ("fused_opt", "unfused"):
+            _require(isinstance(us.get(variant), (int, float)), path,
+                     f"{where}.us_per_step[{variant!r}] missing or "
+                     f"non-numeric")
+        streams = result.get("hbm_streams_per_weight_update")
+        _require(isinstance(streams, dict), path,
+                 f"{where}.hbm_streams_per_weight_update missing")
+        for key in ("fused_opt", "unfused_opt"):
+            _require(isinstance(streams.get(key), int), path,
+                     f"{where}.hbm_streams_per_weight_update[{key!r}] "
+                     f"missing or non-integer")
+        _require(streams["fused_opt"] < streams["unfused_opt"], path,
+                 f"{where}: fused_opt streams {streams['fused_opt']} not "
+                 f"< unfused_opt streams {streams['unfused_opt']} — the "
+                 f"epilogue exists to remove the grad_W round-trip")
+        _require(isinstance(result.get("fused_opt_no_worse_than_unfused"),
+                            bool), path,
+                 f"{where}.fused_opt_no_worse_than_unfused is not a bool")
+
+
 def check_file(path: str) -> None:
     with open(path) as f:
         payload = json.load(f)
@@ -171,6 +206,8 @@ def check_file(path: str) -> None:
         check_obs(path, payload)
     elif name == "autotune_gain":
         check_autotune(path, payload)
+    elif name == "train_step":
+        check_train(path, payload)
 
 
 def main(argv: list[str]) -> int:
